@@ -1,0 +1,196 @@
+"""Paper figure 13: HPC collective latency (MVAPICH benchmarks), Jet vs DDIO.
+
+Topology follows the paper's §6.4 setup exactly: 2 hosts x 4 processes = 8
+MPI ranks, dual-port 100 Gbps, 4 MB messages per rank, membw contention on.
+
+Sub-study 1 — receive-path completion model.  Each collective is
+characterised by (bytes received over the NIC, receive buffers posted,
+synchronization phases, in-cast degree, reduction bytes).  The per-mode
+receive bandwidth comes from the same constants as the event simulator
+(`repro.core.simulator.testbed_100g`):
+
+  * DDIO miss ramps once posted buffers exceed the DDIO capacity (leaky
+    DMA); each missed byte costs ~2x DRAM traffic out of the bandwidth the
+    contending CPU leaves over, so drain collapses to ``avail_dram/2``;
+    in-cast additionally causes drops/retransmits in the baseline.
+  * Jet drains at line rate (the cache pool absorbs the burst — validated
+    by the event sim in bench_receiver_datapath).
+  * Reductions read their operands from LLC under Jet (the data IS in the
+    pool) vs DRAM-under-contention for the baseline — why all-reduce gains
+    only a few percent (paper: -5.5%) while all-to-all gains -35.1%.
+
+Sub-study 2 — structural comparison on 8 host devices (subprocess): lower
+XLA's one-shot all-gather vs the Jet ring collective and compare compiled
+per-device collective bytes + temp memory ("the gathered tensor never
+exists").
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List
+
+from repro.core import simulator as S
+
+from .common import emit
+
+NAME = "hpc_collectives"
+PAPER_REF = "fig 13"
+
+RANKS = 8
+PROCS_PER_HOST = 4
+MSG = 4 << 20                     # per-rank message (paper §6.4)
+SW_US = 150.0                     # MPI per-phase software/sync overhead
+LLC_GBPS = 3200.0                 # cache read bandwidth (x~13 DRAM here)
+PAPER_PCT = {"all-to-all": 35.1, "all-gather": 25.0, "all-reduce": 5.5}
+
+
+def _testbed() -> S.SimConfig:
+    return S.testbed_100g("ddio")
+
+
+def _recv_bw_gbps(cfg: S.SimConfig, mode: str, posted_bytes: int,
+                  incast: int) -> float:
+    """Receive drain bandwidth, from the simulator's datapath constants."""
+    line = cfg.line_rate_gbps
+    if mode == "jet":
+        return min(line, cfg.pcie_gbps)
+    over = posted_bytes - cfg.ddio_bytes
+    miss = min(1.0, max(0.0, over / (cfg.miss_knee * cfg.ddio_bytes)))
+    avail = max(1e-9, cfg.membw_total_gbps - cfg.cpu_membw_gbps)
+    bw = min(line, cfg.pcie_gbps)
+    if miss > 1e-9:
+        bw = min(bw, avail / (2.0 * miss))
+    # in-cast overflow drops -> retransmits (RNIC buffer is 2 MB, a 4 MB
+    # burst per extra sender overflows it; DCQCN recovers but pays ~30%)
+    bw /= 1.0 + 0.3 * (incast - 1) / (RANKS - 1)
+    return bw
+
+
+# (name, recv_bytes_over_nic, posted_bytes, phases, incast, reduce_bytes)
+def _patterns() -> List[tuple]:
+    n, p, m = RANKS, PROCS_PER_HOST, MSG
+    remote = n - p                 # peers across the NIC per rank
+    return [
+        # every rank exchanges m with each peer; NIC sees the remote share;
+        # posted buffers cover all n-1 inbound messages (the leaky set)
+        ("all-to-all", p * remote * m, (n - 1) * m, n - 1, p, 0),
+        # ring: n-1 phases, the host-crossing links carry every shard;
+        # each rank posts the full (n-1)-shard receive buffer up front
+        ("all-gather", p * remote * m // p, (n - 1) * m, n - 1, 1, 0),
+        # ring reduce-scatter: chunked m/n fragments, small posted set,
+        # but every phase reduces a fragment (reads under contention)
+        ("reduce-scatter", (n - 1) * m // n, 2 * m // n, n - 1, 1,
+         (n - 1) * m // n),
+        # rs + ag: twice the phases, reduction on the rs half
+        ("all-reduce", 2 * (n - 1) * m // n, 2 * m // n, 2 * (n - 1), 1,
+         (n - 1) * m // n),
+        # binomial tree, log2(n) phases, whole message per hop
+        ("broadcast", m, m, 3, 1, 0),
+        # root receives n-1 messages at once (worst in-cast, small posted)
+        ("gather", (n - 1) * m // n, (n - 1) * m // n, 1, n - 1, 0),
+    ]
+
+
+def run() -> List[Dict]:
+    cfg = _testbed()
+    avail_dram = cfg.membw_total_gbps - cfg.cpu_membw_gbps
+    rows: List[Dict] = []
+    for name, recv, posted, phases, incast, red in _patterns():
+        lat = {}
+        for mode in ("ddio", "jet"):
+            bw = _recv_bw_gbps(cfg, mode, posted, incast)
+            wire_us = recv * 8.0 / (bw * 1e9) * 1e6
+            red_bw = LLC_GBPS if mode == "jet" else avail_dram
+            red_us = red * 8.0 / (red_bw * 1e9) * 1e6
+            lat[mode] = wire_us + phases * SW_US + red_us
+        rows.append({
+            "collective": name, "incast": incast, "phases": phases,
+            "recv_mb": recv / (1 << 20),
+            "ddio_lat_us": lat["ddio"], "jet_lat_us": lat["jet"],
+            "improvement_pct": 100 * (1 - lat["jet"] / lat["ddio"]),
+            "paper_pct": PAPER_PCT.get(name, float("nan")),
+        })
+    return rows
+
+
+_DRIVER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.parallel import collectives as coll
+from repro.launch import hlo_analysis
+
+m = 8
+mesh = jax.make_mesh((m,), ("model",))
+D, F = 4096, 512          # x:[B=16, D], w:[D, F] sharded on D
+x = jax.ShapeDtypeStruct((16, D), jnp.bfloat16)
+w = jax.ShapeDtypeStruct((D, F), jnp.bfloat16)
+
+def xla_ag_matmul(x, w):           # baseline: all-gather W then matmul
+    wf = jax.lax.all_gather(w, "model", axis=0, tiled=True)
+    return x @ wf
+
+def jet_ring(x, w):
+    return coll.ring_allgather_matmul(x, w, "model", m, frags=2)
+
+rows = []
+for name, fn, w_spec in (("xla_allgather", xla_ag_matmul, P("model", None)),
+                         ("jet_ring", jet_ring, P("model", None))):
+    sm = jax.shard_map(fn, mesh=mesh, in_specs=(P(), w_spec),
+                       out_specs=P(), check_vma=False)
+    lowered = jax.jit(sm).lower(x, w)
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    deep = hlo_analysis.analyze(hlo)
+    memq = compiled.memory_analysis()
+    rows.append(dict(impl=name,
+                     coll_bytes_per_dev=deep["coll_total"],
+                     coll_counts=deep["coll_counts"],
+                     temp_bytes=getattr(memq, "temp_size_in_bytes", -1)))
+print("JSON:" + json.dumps(rows))
+"""
+
+
+def structural() -> List[Dict]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _DRIVER], env=env,
+                         capture_output=True, text=True, timeout=600)
+    for line in out.stdout.splitlines():
+        if line.startswith("JSON:"):
+            rows = json.loads(line[5:])
+            for r in rows:
+                r["coll_counts"] = json.dumps(r["coll_counts"])
+            return rows
+    raise RuntimeError(f"driver failed:\n{out.stdout}\n{out.stderr}")
+
+
+def main() -> None:
+    rows = run()
+    emit(NAME, rows)
+    by = {r["collective"]: r for r in rows}
+    for c in ("all-to-all", "all-gather", "all-reduce"):
+        print(f"# {c}: -{by[c]['improvement_pct']:.1f}% "
+              f"(paper -{PAPER_PCT[c]}%)")
+    try:
+        st = structural()
+        emit(NAME + "_structural", st)
+        xla = next(r for r in st if r["impl"] == "xla_allgather")
+        jet = next(r for r in st if r["impl"] == "jet_ring")
+        if xla["temp_bytes"] > 0 and jet["temp_bytes"] > 0:
+            print(f"# jet_ring temp memory {jet['temp_bytes']/1e6:.2f} MB vs "
+                  f"xla all-gather {xla['temp_bytes']/1e6:.2f} MB "
+                  f"(gathered W never materializes)")
+    except Exception as e:  # noqa: BLE001 — structural part is best-effort
+        print(f"# structural sub-benchmark skipped: {e}")
+
+
+if __name__ == "__main__":
+    main()

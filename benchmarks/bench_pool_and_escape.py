@@ -1,0 +1,113 @@
+"""Paper figures 10/11 + §4.3 (C7): pool occupancy, recycle ablation and the
+escape ladder's DRAM bill.
+
+Three sub-studies:
+  1. *Little's-law pool sizing* — required pool bytes vs recycle
+     optimizations (multi-thread / pipeline / offload+struct), the §4.2
+     argument that a shorter post-NIC timespan shrinks the reservable LLC.
+  2. *Steady-state pool monitor* — fig 11: allocated/peak pool bytes and
+     escape actions at line rate with the production 12 MB pool.
+  3. *Escape ladder engagement* — shrunken pool + stragglers: replaces ->
+     copies -> ECN, with the DRAM bandwidth each rung consumes (paper:
+     < 0.5-1 GB/s).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.core import recycle as R
+from repro.core import simulator as S
+
+from .common import emit
+
+NAME = "pool_and_escape"
+PAPER_REF = "figs 10/11, §4.3"
+
+LINE_GBPS = 200.0
+MSG = 256 << 10
+
+
+def recycle_ablation() -> List[Dict]:
+    variants = [
+        ("unoptimized", R.paper_unoptimized()),
+        ("+threads(4)", dataclasses.replace(R.paper_unoptimized(),
+                                            threads=4)),
+        ("+pipeline", dataclasses.replace(R.paper_unoptimized(), threads=4,
+                                          pipelined=True)),
+        ("+offload+struct (jet)", R.paper_default()),
+    ]
+    rows = []
+    for name, m in variants:
+        rows.append({
+            "variant": name,
+            "hold_us_256k": m.slot_holding_time_us(MSG),
+            "msg_latency_us_256k": m.message_latency_us(MSG),
+            "resident_mb_at_200g": m.resident_bytes(LINE_GBPS, MSG)
+            / (1 << 20),
+            "required_pool_mb": m.required_pool_bytes(LINE_GBPS, MSG)
+            / (1 << 20),
+        })
+    return rows
+
+
+def steady_state() -> List[Dict]:
+    rows = []
+    for msg_kb in (4, 16, 64, 256):
+        r = S.run_sim(S.testbed_100g("jet", msg_bytes=msg_kb << 10,
+                                     sim_time_s=0.03))
+        rows.append({
+            "msg_kb": msg_kb,
+            "goodput_gbps": r.goodput_gbps,
+            "pool_peak_mb": r.pool_peak_bytes / (1 << 20),
+            "pool_avg_mb": r.pool_avg_bytes / (1 << 20),
+            "replaces": r.escape_replaces, "copies": r.escape_copies,
+            "ecn": r.escape_ecn,
+            "escape_dram_gbps": r.escape_dram_gbps,
+            "total_dram_gbps": r.nic_dram_gbps + r.escape_dram_gbps,
+        })
+    return rows
+
+
+def escape_ladder() -> List[Dict]:
+    rows = []
+    cases = [
+        ("nominal", dict()),
+        ("stragglers", dict(straggler_frac=0.05, straggler_mult=50.0)),
+        ("tiny_pool+stragglers", dict(jet_pool_bytes=2 << 20,
+                                      straggler_frac=0.3,
+                                      straggler_mult=100.0,
+                                      sim_time_s=0.12)),
+    ]
+    for name, kw in cases:
+        base = dict(msg_bytes=MSG, sim_time_s=0.04)
+        base.update(kw)
+        r = S.run_sim(S.testbed_100g("jet", **base))
+        rows.append({
+            "case": name, "goodput_gbps": r.goodput_gbps,
+            "pool_peak_mb": r.pool_peak_bytes / (1 << 20),
+            "replaces": r.escape_replaces, "copies": r.escape_copies,
+            "ecn": r.escape_ecn,
+            "escape_dram_gbps": r.escape_dram_gbps,
+        })
+    return rows
+
+
+def main() -> None:
+    ab = recycle_ablation()
+    emit(NAME + "_recycle", ab)
+    print(f"# pipelined+offload shrinks required pool "
+          f"{ab[0]['required_pool_mb']:.0f} MB -> "
+          f"{ab[-1]['required_pool_mb']:.0f} MB at 200 Gbps / 256 KB "
+          f"(paper: 12 MB operating point)")
+    ss = steady_state()
+    emit(NAME + "_steady", ss)
+    big = ss[-1]
+    print(f"# steady state 256KB: pool peak {big['pool_peak_mb']:.1f} MB "
+          f"(<12), escape DRAM {big['escape_dram_gbps']:.2f} Gbps "
+          f"(paper <8 Gbps = 1 GB/s)")
+    emit(NAME + "_ladder", escape_ladder())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Paper figures 2/3 (baseline degradation) and 6/7 (Jet vs DDIO testbed).
+
+Sweeps message size x {ddio, jet} x {25g-pfc, 100g-pfc-free} on the
+calibrated receive-datapath simulator and reports every observable the paper
+plots: goodput, avg/P99 latency, PFC pause, CNP count, DDIO miss rate and
+the DRAM bandwidth the datapath induces (the PCIe-back-pressure proxy).
+
+Claims validated (bands asserted in tests/test_simulator.py):
+  C1  ~43% throughput drop 64 KB -> 1 MB under membw contention (fig 2a/2b)
+  C2  ~10x latency growth (fig 2c)
+  C3  DDIO miss rate -> 100% at 1 MB; 2x DDIO ways do not help (fig 3b)
+  C4  Jet >= 1.96x testbed throughput at 256 KB; PFC/CNP ~= 0 (figs 6a/7a/6c/7c)
+  C5  Jet cuts avg latency by >= 35% (figs 6b/7b)
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import simulator as S
+
+from .common import emit
+
+NAME = "receiver_datapath"
+PAPER_REF = "figs 2/3/6/7"
+
+MSG_KB = (64, 128, 256, 512, 1024)
+SIM_S = 0.02
+
+
+def run() -> List[Dict]:
+    rows: List[Dict] = []
+    for bed, mk in (("25g_pfc", S.testbed_25g), ("100g_pfcfree",
+                                                 S.testbed_100g)):
+        for msg_kb in MSG_KB:
+            for mode in ("ddio", "jet"):
+                r = S.run_sim(mk(mode, msg_bytes=msg_kb << 10,
+                                 sim_time_s=SIM_S))
+                rows.append({
+                    "testbed": bed, "mode": mode, "msg_kb": msg_kb,
+                    "goodput_gbps": r.goodput_gbps,
+                    "avg_lat_us": r.avg_latency_us,
+                    "p99_lat_us": r.p99_latency_us,
+                    "pfc_pause_us": r.pfc_pause_us,
+                    "cnp": r.cnp_count,
+                    "ddio_miss": r.ddio_miss_rate,
+                    "nic_dram_gbps": r.nic_dram_gbps,
+                    "pool_peak_mb": r.pool_peak_bytes / (1 << 20),
+                })
+    # C3b: doubling DDIO ways at 1 MB (the paper's strawman rebuttal)
+    r2 = S.run_sim(S.testbed_100g("ddio", msg_bytes=1 << 20,
+                                  sim_time_s=SIM_S, ddio_bytes=12 << 20))
+    rows.append({"testbed": "100g_pfcfree", "mode": "ddio_2x_ways",
+                 "msg_kb": 1024, "goodput_gbps": r2.goodput_gbps,
+                 "avg_lat_us": r2.avg_latency_us,
+                 "p99_lat_us": r2.p99_latency_us,
+                 "pfc_pause_us": r2.pfc_pause_us, "cnp": r2.cnp_count,
+                 "ddio_miss": r2.ddio_miss_rate,
+                 "nic_dram_gbps": r2.nic_dram_gbps, "pool_peak_mb": 0.0})
+    return rows
+
+
+def derived(rows: List[Dict]) -> List[str]:
+    """Headline ratios mirroring the paper's claims."""
+    idx = {(r["testbed"], r["mode"], r["msg_kb"]): r for r in rows}
+    out = []
+    for bed in ("25g_pfc", "100g_pfcfree"):
+        d64 = idx[(bed, "ddio", 64)]
+        d1m = idx[(bed, "ddio", 1024)]
+        out.append(f"{bed}: baseline 64K->1M throughput drop "
+                   f"{1 - d1m['goodput_gbps'] / d64['goodput_gbps']:.1%} "
+                   f"(paper ~43%)")
+        j = idx[(bed, "jet", 256)]
+        d = idx[(bed, "ddio", 256)]
+        out.append(f"{bed}: Jet/DDIO throughput x{j['goodput_gbps'] / d['goodput_gbps']:.2f} "
+                   f"at 256 KB (paper 1.54-1.96x); "
+                   f"avg lat -{1 - j['avg_lat_us'] / d['avg_lat_us']:.1%}; "
+                   f"Jet PFC={j['pfc_pause_us']:.0f}us CNP={j['cnp']:.0f}")
+    return out
+
+
+def main() -> None:
+    rows = run()
+    emit(NAME, rows)
+    for line in derived(rows):
+        print("#", line)
+
+
+if __name__ == "__main__":
+    main()

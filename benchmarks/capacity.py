@@ -1,0 +1,57 @@
+"""HBM capacity audit per (arch x shape) cell — the 'does it actually fit
+a 16 GB v5e chip' column of the runnability story.
+
+Sources: the dry-run's compiled ``memory_analysis()``.  CPU-backend temp
+is an upper bound (~2x TPU: f32 promotion + weaker fusion); we report it
+raw plus a /2 TPU estimate, and flag the fitting strategy for the cells
+over budget (accum microbatching for train, serving meshes for decode —
+both measured in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .common import emit
+from .roofline import load
+
+NAME = "capacity"
+HBM_GB = 16.0
+
+
+def run(mesh: str = "single") -> List[Dict]:
+    rows = []
+    for r in load(mesh, ""):
+        args = r.get("argument_size_in_bytes", 0) / 1e9
+        temp = r.get("temp_size_in_bytes", 0) / 1e9
+        out = r.get("output_size_in_bytes", 0) / 1e9
+        tpu_est = args + temp / 2 + out / 2
+        fits = tpu_est <= HBM_GB
+        if fits:
+            strategy = "-"
+        elif r["shape"] == "train_4k":
+            strategy = "accum microbatching (temp / A; §Perf A-v5)"
+        elif r["shape"].startswith("decode") or "prefill" in r["shape"]:
+            strategy = "serving mesh / bf16-int8 weights (§Perf C)"
+        else:
+            strategy = "shard wider"
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "args_gb": args, "temp_gb_cpu": temp,
+            "tpu_estimate_gb": tpu_est,
+            "fits_16gb": int(fits),
+            "strategy": strategy,
+        })
+    rows.sort(key=lambda x: -x["tpu_estimate_gb"])
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    emit(NAME, rows)
+    over = [r for r in rows if not r["fits_16gb"]]
+    print(f"# {len(rows) - len(over)}/{len(rows)} cells fit 16 GB as-is; "
+          f"{len(over)} need a fitting strategy (all have one measured)")
+
+
+if __name__ == "__main__":
+    main()

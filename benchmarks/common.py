@@ -1,0 +1,50 @@
+"""Shared benchmark plumbing: CSV emission + result directory layout.
+
+Every benchmark module exposes ``run() -> list[dict]`` and a module-level
+``NAME``/``PAPER_REF``.  Rows are printed as CSV and written under
+``experiments/bench/<NAME>.csv`` so EXPERIMENTS.md tables can be regenerated
+from disk without re-running.
+"""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Dict, List
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench")
+
+
+def emit(name: str, rows: List[Dict], quiet: bool = False) -> str:
+    """Write rows to experiments/bench/<name>.csv and echo as CSV."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.abspath(os.path.join(OUT_DIR, f"{name}.csv"))
+    if not rows:
+        return path
+    keys = list(rows[0].keys())
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        for r in rows:
+            w.writerow({k: _fmt(r.get(k)) for k in keys})
+    if not quiet:
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(str(_fmt(r.get(k))) for k in keys))
+    return path
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return round(v, 4)
+    return v
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

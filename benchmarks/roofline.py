@@ -1,0 +1,238 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+For every (arch x shape) cell on the single-pod mesh (256 chips), derive the
+three roofline terms from the compiled HLO numbers recorded by
+``repro.launch.dryrun``:
+
+  compute    = HLO_dot_FLOPs_per_device / PEAK_FLOPS          [s]
+  memory     = HLO_dot_bytes_per_device / HBM_BW              [s]
+  collective = collective_bytes_per_device / ICI_BW           [s]
+
+(all three are *per-device* times; the mesh divides the work, the constants
+are per-chip).  The dominant term is the bottleneck; the roofline fraction
+reported is compute / max(terms) — the fraction of the bound the MXU would
+be busy if compute, HBM traffic and ICI traffic overlap perfectly (XLA
+latency-hiding overlaps collectives with compute; memory traffic is what the
+BlockSpec tiling hides).
+
+MODEL_FLOPS = 6 * N_active * tokens (train) / 2 * N_active * tokens
+(prefill/decode); the ratio MODEL_FLOPS / HLO_FLOPs exposes remat and
+redundancy waste (full remat => ~0.75, since fwd is recomputed: 8ND vs 6ND).
+
+Hardware constants (TPU v5e, per chip):
+  197 TFLOP/s bf16, 819 GB/s HBM, 3 usable ICI links x 50 GB/s.
+
+Usage:
+  python -m benchmarks.roofline                 # baseline table (tag "")
+  python -m benchmarks.roofline --tag staged    # variant table
+  python -m benchmarks.roofline --compare a,b   # baseline vs variant deltas
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import get_arch, get_shape
+
+from .common import emit
+
+NAME = "roofline"
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 3 * 50e9          # per-chip aggregate over usable torus links
+
+# The CPU backend's float-normalization pass legalizes every bf16 dot to
+# f32 (convert-dot-convert), so HLO dot operand/result bytes read off the
+# CPU-compiled module are 2x the TPU deployment's, where dots execute in
+# bf16 natively.  Collective bytes are corrected per-op during HLO parsing
+# (launch.hlo_analysis._bf16_on_tpu); dots get this uniform factor.
+BF16_DOT_CORRECTION = 0.5
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+_SUGGEST = {
+    "collective": "shrink/overlap collectives: jet staged ring (no HBM "
+                  "materialization), hierarchical + compressed grads, "
+                  "fewer all-reduces via 2D-sharded activations",
+    "memory": "raise arithmetic intensity: larger fused blocks, less remat "
+              "recompute traffic, bf16 end-to-end, keep gathered operands "
+              "out of HBM (jet staged consumption)",
+    "compute": "already MXU-bound: tighten MODEL/HLO ratio (drop remat), "
+               "then only kernel-level tiling (128-aligned MXU dims) helps",
+}
+
+
+def model_flops_per_device(arch_name: str, shape_name: str,
+                           n_devices: int) -> float:
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    _, n_active = cfg.param_counts()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / n_devices
+    if shape.kind == "prefill":
+        # prefill emits last-token-only logits: the unembedding projection
+        # contributes ~zero matmul FLOPs (1 of seq_len positions)
+        tokens = shape.global_batch * shape.seq_len
+        n_eff = n_active - cfg.d_model * cfg.vocab_size
+        return 2.0 * n_eff * tokens / n_devices
+    # decode: one token per sequence per step
+    return 2.0 * n_active * shape.global_batch / n_devices
+
+
+def load(mesh: str = "single", tag: str = "") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") != mesh or r.get("tag", "") != tag:
+            continue
+        if not r.get("ok"):
+            continue
+        recs.append(r)
+    return recs
+
+
+def attn_kernel_credit_bytes(arch_name: str, shape_name: str,
+                             n_dev: int) -> float:
+    """Per-device HBM dot traffic the Pallas flash-attention kernel keeps
+    in VMEM on TPU (the CPU dry-run lowers the pure-jnp reference, which
+    materializes score tensors in HBM).
+
+    Naive attention does two batched dots per head-block: scores = Q K^T
+    (writes S = B_loc*H_loc*T*T_blk) and O = P V (re-reads S).  Per pass
+    that is ~3*S bytes of dot traffic (write + read + softmax-side read);
+    full-remat training runs 4 passes (fwd, replay, 2 bwd dots).  The
+    fused kernel streams KV and keeps S in VMEM: the credit is the whole
+    score-side traffic.  bf16 (2-byte) accounting.
+    """
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    if shape.kind == "decode" or cfg.xlstm:
+        return 0.0             # decode kernel scores are tiny; xlstm: none
+    # attention layers only (hybrid archs: every attn_every-th block)
+    if cfg.family in ("ssm", "hybrid"):
+        n_attn = (cfg.num_layers // cfg.attn_every) if cfg.attn_every \
+            else 0
+    else:
+        n_attn = cfg.num_layers
+    dp, tp = 16, 16            # single-pod production mesh
+    b_loc = max(1, shape.global_batch // dp)
+    h_loc = max(1, cfg.num_heads // tp)
+    t = shape.seq_len
+    t_eff = min(t, cfg.sliding_window or t)
+    s_bytes = 2.0 * b_loc * h_loc * t * t_eff
+    if shape.kind == "train":
+        s_bytes *= 0.5         # causal masking halves the useful area
+        passes = 4
+    else:
+        passes = 1
+    return 3.0 * s_bytes * passes * n_attn
+
+
+def analyze_record(r: Dict) -> Dict:
+    n_dev = 1
+    for v in r["mesh_shape"].values():
+        n_dev *= v
+    c = r["flops_per_device"] / PEAK_FLOPS
+    m_raw = r["dot_bytes_per_device"] * BF16_DOT_CORRECTION
+    credit = min(attn_kernel_credit_bytes(r["arch"], r["shape"], n_dev),
+                 0.9 * m_raw)
+    m = m_raw / HBM_BW
+    mk = (m_raw - credit) / HBM_BW      # with Pallas attention kernels
+    k = r["collective_total_per_device"] / ICI_BW
+    bound = max(c, mk, k)
+    dom = ("compute", "memory", "collective")[[c, mk, k].index(bound)]
+    mf = model_flops_per_device(r["arch"], r["shape"], n_dev)
+    return {
+        "arch": r["arch"], "shape": r["shape"], "tag": r.get("tag", ""),
+        "compute_s": c, "memory_s": m, "memory_kernel_s": mk,
+        "collective_s": k,
+        "bound": dom,
+        "roofline_frac": c / bound if bound > 0 else 0.0,
+        "model_gflops_dev": mf / 1e9,
+        "hlo_gflops_dev": r["flops_per_device"] / 1e9,
+        "useful_ratio": mf / r["flops_per_device"]
+        if r["flops_per_device"] else 0.0,
+        "hbm_gb_dev": r.get("argument_size_in_bytes", 0) / 1e9,
+        "temp_gb_dev": r.get("temp_size_in_bytes", 0) / 1e9,
+        "suggest": _SUGGEST[dom],
+    }
+
+
+def table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | mem (kernels) s | "
+           "collective s | bound | roofline frac | useful FLOP ratio |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['memory_kernel_s']:.3f} | "
+            f"{r['collective_s']:.3f} | "
+            f"**{r['bound']}** | {r['roofline_frac']:.2f} | "
+            f"{r['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def compare(tag_a: str, tag_b: str, mesh: str = "single") -> List[Dict]:
+    """Per-cell deltas between two variants (hillclimb bookkeeping)."""
+    a = {(r["arch"], r["shape"]): analyze_record(r)
+         for r in load(mesh, tag_a)}
+    b = {(r["arch"], r["shape"]): analyze_record(r)
+         for r in load(mesh, tag_b)}
+    rows = []
+    for key in sorted(set(a) & set(b)):
+        ra, rb = a[key], b[key]
+        dom = ra["bound"]
+        col = f"{dom}_s"
+        rows.append({
+            "arch": key[0], "shape": key[1],
+            "bound": dom,
+            f"{tag_a or 'base'}_s": ra[col],
+            f"{tag_b or 'base'}_s": rb[col],
+            "delta": (rb[col] - ra[col]) / ra[col] if ra[col] else 0.0,
+            "frac_before": ra["roofline_frac"],
+            "frac_after": rb["roofline_frac"],
+        })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--compare", default=None,
+                    help="tagA,tagB — print per-cell deltas")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+
+    if args.compare:
+        ta, tb = args.compare.split(",")
+        rows = compare(ta, tb, args.mesh)
+        emit(f"{NAME}_compare_{ta or 'base'}_{tb or 'base'}", rows)
+        return
+
+    recs = load(args.mesh, args.tag)
+    rows = [analyze_record(r) for r in recs]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    emit(NAME + (f"_{args.tag}" if args.tag else ""),
+         [{k: v for k, v in r.items() if k != "suggest"} for r in rows],
+         quiet=args.markdown)
+    if args.markdown:
+        print(table(rows))
+    worst = sorted(rows, key=lambda r: r["roofline_frac"])[:3]
+    print(f"# {len(rows)} cells analyzed (mesh={args.mesh}, "
+          f"tag={args.tag or 'baseline'})")
+    for r in worst:
+        print(f"# worst: {r['arch']} x {r['shape']} frac="
+              f"{r['roofline_frac']:.2f} bound={r['bound']} -> "
+              f"{r['suggest'][:80]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: Jet/RDCA (Li et al., 2022) as a TPU-native JAX training/serving
+framework.  See DESIGN.md for the paper->TPU mapping."""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from .ckpt import AsyncSaver, latest_step, restore, save
+__all__ = ["AsyncSaver", "latest_step", "restore", "save"]

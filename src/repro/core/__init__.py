@@ -1,0 +1,28 @@
+"""Jet/RDCA core: the paper's primary contribution.
+
+- pool:      cache-resident buffer pool (slab; host + device variants)
+- window:    receiver-side READ control (concurrency + in-flight bytes)
+- recycle:   swift cache recycle model (pipeline, threads, offload)
+- escape:    cache-pressure-aware escape ladder (replace / copy / ECN)
+- dcqcn:     DCQCN sender rate machine (congestion-control substrate)
+- jet:       the Jet service facade (registration, QoS admission)
+- simulator: receive-datapath discrete-event simulator (paper figures)
+"""
+from .dcqcn import DcqcnConfig, DcqcnRate
+from .escape import Action, EscapeConfig, EscapeController, EscapeStats
+from .jet import JetConfig, JetService, QoS, SMALL_MSG_BYTES
+from .pool import DevicePool, SlabPool
+from .recycle import (RecycleModel, little_law_bytes, paper_default,
+                      paper_unoptimized, slice_message)
+from .simulator import (ReceiverSim, SimConfig, SimResult, run_sim,
+                        testbed_100g, testbed_25g)
+from .window import ReadWindow, fragment
+
+__all__ = [
+    "Action", "DcqcnConfig", "DcqcnRate", "DevicePool", "EscapeConfig",
+    "EscapeController", "EscapeStats", "JetConfig", "JetService", "QoS",
+    "ReadWindow", "ReceiverSim", "RecycleModel", "SimConfig", "SimResult",
+    "SlabPool", "SMALL_MSG_BYTES", "fragment", "little_law_bytes",
+    "paper_default", "paper_unoptimized", "run_sim", "slice_message",
+    "testbed_100g", "testbed_25g",
+]

@@ -1,0 +1,153 @@
+"""The Jet service facade (paper §3): registration, QoS admission queues and
+the receive workflow glue between the RNIC ("network"), the cache-resident
+buffer pool, the recycle controller and the escape controller.
+
+This is the host-side service object used by the serving engine
+(`repro.serving.engine`).  The in-graph realization of the same ideas lives in
+`repro.kernels` (staged consumption) and `repro.parallel.collectives`
+(windowed chunked collectives).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+from typing import Deque, Dict, List, Optional, Tuple
+
+from .escape import Action, EscapeConfig, EscapeController
+from .pool import SlabPool
+from .recycle import RecycleModel, paper_default
+from .window import ReadWindow
+
+SMALL_MSG_BYTES = 4 << 10  # paper §4.1.1: <4 KB -> SEND/RECV via SRQ
+
+
+class QoS(enum.IntEnum):
+    HIGH = 0
+    NORMAL = 1
+    LOW = 2
+
+
+@dataclasses.dataclass
+class JetConfig:
+    pool_bytes: int = 12 << 20
+    srq_bytes: int = 4 << 20            # small-message share (initial)
+    srq_min_bytes: int = 1 << 20        # floor when rebalancing (paper §4.1.3)
+    srq_wqes: int = 1024                # pre-posted 4 KB WQEs
+    max_concurrency: int = 32
+    max_inflight_bytes: int = 8 << 20
+    expected_timespan_us: float = 200.0
+    max_concurrent_transfers: int = 128
+    escape: EscapeConfig = dataclasses.field(default_factory=EscapeConfig)
+
+
+@dataclasses.dataclass
+class Transfer:
+    xfer_id: int
+    app_id: int
+    nbytes: int
+    qos: QoS
+    slots: List[int] = dataclasses.field(default_factory=list)
+    small: bool = False
+
+
+class JetService:
+    """Admission + pool orchestration for the receive path (paper §3.2)."""
+
+    def __init__(self, cfg: JetConfig = JetConfig(),
+                 recycle: Optional[RecycleModel] = None):
+        self.cfg = cfg
+        self.pool = SlabPool(cfg.pool_bytes)
+        self.window = ReadWindow(cfg.max_concurrency, cfg.max_inflight_bytes)
+        self.recycle = recycle or paper_default()
+        self.escape = EscapeController(cfg.escape)
+        self._apps: Dict[int, QoS] = {}
+        self._queues: Dict[QoS, Deque[Transfer]] = {
+            q: collections.deque() for q in QoS}
+        self._live: Dict[int, Transfer] = {}
+        self._next_id = 0
+        self.rejected_small = 0
+        self.memory_fallbacks = 0   # low-QoS apps pushed to DRAM buffers (§5)
+
+    # -- step 1: registration -------------------------------------------------
+    def register(self, app_id: int, qos: QoS = QoS.NORMAL) -> None:
+        self._apps[app_id] = qos
+
+    # -- step 2: transfer request ---------------------------------------------
+    def request(self, app_id: int, nbytes: int, now: float) -> int:
+        """Host B announces a transfer; returns transfer id (queued)."""
+        if app_id not in self._apps:
+            raise KeyError(f"app {app_id} not registered with Jet")
+        t = Transfer(self._next_id, app_id, nbytes, self._apps[app_id],
+                     small=nbytes < SMALL_MSG_BYTES)
+        self._next_id += 1
+        self._queues[t.qos].append(t)
+        return t.xfer_id
+
+    def _expected_footprint(self, nbytes: int) -> int:
+        """Admission rule (§3.2 step 2): expected throughput x timespan,
+        capped by the transfer size itself."""
+        rate_gbps = 8.0 * nbytes / max(self.cfg.expected_timespan_us, 1e-9) \
+            / 1e3
+        little = rate_gbps * 1e9 / 8.0 * self.cfg.expected_timespan_us * 1e-6
+        return min(nbytes, int(little))
+
+    # -- step 3: admission + allocation ----------------------------------------
+    def pump(self, now: float) -> List[Transfer]:
+        """Admit queued transfers in QoS-priority, FIFO-within-class order."""
+        admitted: List[Transfer] = []
+        for qos in QoS:
+            q = self._queues[qos]
+            while q:
+                t = q[0]
+                if len(self._live) >= self.cfg.max_concurrent_transfers:
+                    return admitted
+                need = (self.pool.slots_needed(t.nbytes)
+                        * self.pool.slot_bytes)
+                if self._expected_footprint(t.nbytes) > \
+                        self.pool.available_bytes or \
+                        need > self.pool.available_bytes:
+                    if qos == QoS.LOW:
+                        # §5: low-QoS falls back to DRAM buffers
+                        q.popleft()
+                        self.memory_fallbacks += 1
+                        continue
+                    break
+                slots = self.pool.alloc(t.app_id, t.nbytes, now)
+                if slots is None:
+                    break
+                q.popleft()
+                t.slots = slots
+                self._live[t.xfer_id] = t
+                admitted.append(t)
+        return admitted
+
+    # -- steps 4-6: arrival notification + release ------------------------------
+    def complete(self, xfer_id: int, now: float) -> None:
+        """Application finished consuming; release slots back to the pool."""
+        t = self._live.pop(xfer_id)
+        # slots may have been evicted by an escape COPY already
+        live = [s for s in t.slots if s in self.pool._slots]
+        if live:
+            self.pool.free(t.app_id, live)
+
+    def tick_escape(self, now: float) -> List[Tuple[Action, object]]:
+        acts = self.escape.step(self.pool, now)
+        for a, _ in acts:
+            if a is Action.MARK_ECN:
+                self.window.on_ecn()
+        if all(a is Action.NONE for a, _ in acts):
+            self.window.on_quiet()
+        # drop bookkeeping for transfers fully evicted by COPY
+        for xid in [x for x, t in self._live.items()
+                    if not any(s in self.pool._slots for s in t.slots)]:
+            self._live.pop(xid)
+        return acts
+
+    # -- introspection -----------------------------------------------------------
+    def stats(self) -> dict:
+        return dict(pool_available=self.pool.available_bytes,
+                    live_transfers=len(self._live),
+                    window_cap=self.window.cap_bytes,
+                    escape=dataclasses.asdict(self.escape.stats),
+                    memory_fallbacks=self.memory_fallbacks)

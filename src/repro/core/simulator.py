@@ -1,0 +1,381 @@
+"""Discrete-event (fluid, 1 us tick) simulator of the RDMA receiver host
+datapath — the measurement substrate of the paper (§2, §6).
+
+The container has no RNIC/DRAM-contention hardware, so the paper's
+*measurement* results are reproduced with a calibrated simulator that models:
+
+  sender (DCQCN rate machine, PFC pause)  ->  link  ->  RNIC FIFO buffer
+      ->  drain to host, gated by
+            - PCIe bandwidth
+            - [ddio mode]   DRAM bandwidth left over by contending CPU cores,
+                            x2 traffic on DDIO write-allocate miss (leaky DMA)
+            - [jet  mode]   free space in the cache-resident buffer pool
+      ->  post-NIC residence (consumer latency, message- or slice-granular
+          release = the recycle controller), stragglers, escape ladder.
+
+Everything observable in the paper's figures is surfaced in SimResult:
+goodput, avg/P99 latency, PFC pause duration, CNP count, DDIO miss rate,
+DRAM bandwidth consumed, pool occupancy, escape action counts.
+
+Calibration constants mirror the paper's two testbeds:
+  * 2x25 Gbps PFC-enabled, PCIe3 x8,  ~64 GB/s DRAM, DDIO 4 MB
+  * 2x100 Gbps PFC-free,   PCIe4 x16, ~250 GB/s DRAM, DDIO 6 MB
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from .dcqcn import DcqcnConfig, DcqcnRate
+from .recycle import RecycleModel, paper_default
+
+
+# --------------------------------------------------------------------------- #
+# Configuration
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class SimConfig:
+    mode: str = "ddio"                 # "ddio" (baseline) | "jet"
+    pfc_enabled: bool = False
+    sim_time_s: float = 0.03
+    dt_us: float = 1.0
+
+    # network / workload
+    line_rate_gbps: float = 200.0      # dual-port 100 Gbps
+    num_qps: int = 32
+    msg_bytes: int = 256 << 10
+    incast_senders: int = 1            # >1 models in-cast (HPC all-to-all)
+    offered_gbps: Optional[float] = None  # open-loop load cap (None=saturate)
+
+    # host
+    pcie_gbps: float = 2048.0          # PCIe 4.0 x16 ~ 32 GB/s
+    membw_total_gbps: float = 2000.0   # 250 GB/s
+    cpu_membw_gbps: float = 1760.0     # 220 GB/s of CPU-side contention
+    cpu_membw_schedule: Optional[Callable[[float], float]] = None
+    app_gbps: float = 3200.0           # app-side consumption bandwidth
+    consumer_latency_us: float = 60.0  # SSD/GPU/compute hand-off latency
+
+    # DDIO (baseline)
+    ddio_bytes: int = 6 << 20
+    miss_knee: float = 0.5             # miss ramps over knee*ddio_bytes
+
+    # RNIC buffer & congestion signalling
+    rnic_buffer_bytes: int = 2 << 20
+    pfc_xoff: float = 0.80
+    pfc_xon: float = 0.50
+    ecn_threshold: float = 0.15
+    cnp_interval_us: float = 50.0
+    # ConnectX-6 DX marks CNPs on an RNIC-buffer watermark (§2.1); older
+    # CX-4 (25G testbed) lacks the feature and relies on PFC backpressure.
+    rnic_ecn_cnp: bool = True
+
+    # Jet
+    jet_pool_bytes: int = 12 << 20
+    recycle: RecycleModel = dataclasses.field(default_factory=paper_default)
+    straggler_frac: float = 0.005
+    straggler_mult: float = 20.0
+    cache_safe: float = 0.20
+    cache_danger: float = 0.05
+    mem_esc_bytes: int = 2 << 20
+
+    dcqcn: DcqcnConfig = None  # type: ignore[assignment]
+
+    def __post_init__(self):
+        if self.dcqcn is None:
+            self.dcqcn = DcqcnConfig(line_rate_gbps=self.line_rate_gbps *
+                                     self.incast_senders)
+
+
+def testbed_25g(mode: str = "ddio", **kw) -> SimConfig:
+    """2x25 Gbps PFC-enabled testbed (§2.1): PCIe3 x8, 64 GB/s DRAM."""
+    base = dict(pfc_enabled=True, line_rate_gbps=50.0, pcie_gbps=500.0,
+                membw_total_gbps=512.0, cpu_membw_gbps=456.0,
+                ddio_bytes=4 << 20, rnic_ecn_cnp=False)
+    base.update(kw)
+    return SimConfig(mode=mode, **base)
+
+
+def testbed_100g(mode: str = "ddio", **kw) -> SimConfig:
+    """2x100 Gbps PFC-free testbed (§2.1): PCIe4 x16, 250 GB/s DRAM."""
+    base = dict(pfc_enabled=False, line_rate_gbps=200.0, pcie_gbps=2048.0,
+                membw_total_gbps=2000.0, cpu_membw_gbps=1760.0,
+                ddio_bytes=6 << 20)
+    base.update(kw)
+    return SimConfig(mode=mode, **base)
+
+
+# --------------------------------------------------------------------------- #
+# Results
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class SimResult:
+    goodput_gbps: float
+    avg_latency_us: float
+    p99_latency_us: float
+    p999_latency_us: float
+    pfc_pause_us: float
+    cnp_count: float
+    ddio_miss_rate: float
+    nic_dram_gbps: float          # DRAM bandwidth induced by the datapath
+    pool_peak_bytes: int
+    pool_avg_bytes: float
+    escape_replaces: int
+    escape_copies: int
+    escape_ecn: int
+    escape_dram_gbps: float
+    dropped_bytes: int
+    completed_messages: int
+
+    def as_row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# --------------------------------------------------------------------------- #
+# Simulator
+# --------------------------------------------------------------------------- #
+class ReceiverSim:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+
+    # message-granular post-NIC hold time (baseline, non-pipelined)
+    def _hold_us_baseline(self) -> float:
+        c = self.cfg
+        return (c.consumer_latency_us +
+                c.msg_bytes * 8.0 / (c.app_gbps * 1e9) * 1e6)
+
+    # slice-granular hold (Jet recycle pipeline): consumer latency dominates,
+    # the pipeline transit adds ~3 slice-times (paper §4.2.2).
+    def _hold_us_jet(self) -> float:
+        c = self.cfg
+        r = c.recycle
+        per_byte_ns = r.get_ns_per_byte + r.process_ns_per_byte()
+        transit = 3.0 * r.slice_bytes * per_byte_ns * 1e-3
+        if not r.pipelined:
+            # unpipelined Jet holds whole messages (ablation mode)
+            return self._hold_us_baseline() + transit
+        return c.consumer_latency_us + transit
+
+    def run(self) -> SimResult:
+        c = self.cfg
+        dt = c.dt_us                       # us
+        ticks = int(c.sim_time_s * 1e6 / dt)
+        bytes_per_gbps_tick = 1e9 / 8.0 * dt * 1e-6   # bytes per (Gbps*tick)
+
+        rate = DcqcnRate(c.dcqcn)
+        # release buckets (bytes becoming consumable at tick t)
+        horizon = ticks + int(1e6 / dt)    # 1 s slack for stragglers
+        rel_base = np.zeros(horizon, dtype=np.float64)
+        rel_strag = np.zeros(horizon, dtype=np.float64)
+
+        rnic_q = 0.0
+        resident = 0.0                     # post-NIC bytes not yet consumed
+        strag_resident = 0.0
+        escape_debt = 0.0                  # escaped bytes whose release is void
+        replace_debt = 0.0                 # portion of debt borrowed via REPLACE
+        pool_cap = float(c.jet_pool_bytes)
+        replace_mem = 0.0
+
+        pfc_paused = False
+        pfc_pause_us = 0.0
+        cnp_count = 0.0
+        cnp_accum_us = c.cnp_interval_us   # allow an immediate first CNP
+        ecn_escape_accum_us = 0.0
+
+        total_arrived = 0.0                # accepted into RNIC buffer
+        total_drained = 0.0                # delivered to host datapath
+        dropped = 0.0
+        nic_dram_bytes = 0.0
+        escape_dram_bytes = 0.0
+        miss_sum, miss_n = 0.0, 0
+        pool_peak, pool_sum = 0.0, 0.0
+        replaces = copies = ecns = 0
+
+        # Message latency tracking.  The num_qps concurrent QPs stripe their
+        # messages across the wire, so one "generation" = num_qps messages
+        # that start and finish together; per-message latency is the
+        # generation's transit time (round-robin interleave approximation).
+        msg = float(c.num_qps * c.msg_bytes)
+        starts: List[float] = []           # t of first byte into RNIC
+        dones: List[float] = []            # t of last byte drained
+        n_started = 0
+        n_drained_msgs = 0
+
+        hold_b = self._hold_us_baseline()
+        hold_j = self._hold_us_jet()
+
+        for t in range(ticks):
+            now_us = t * dt
+            cpu_bw = (c.cpu_membw_schedule(now_us * 1e-6)
+                      if c.cpu_membw_schedule else c.cpu_membw_gbps)
+
+            # ---- sender -> RNIC ------------------------------------------ #
+            offered = min(rate.advance(dt), c.line_rate_gbps *
+                          c.incast_senders)
+            if c.offered_gbps is not None:
+                offered = min(offered, c.offered_gbps)
+            arriving = 0.0 if pfc_paused else offered * bytes_per_gbps_tick
+            space = c.rnic_buffer_bytes - rnic_q
+            accepted = min(arriving, max(0.0, space))
+            dropped += arriving - accepted
+            rnic_q += accepted
+            # message start timestamps
+            new_started = int((total_arrived + accepted) // msg) \
+                - int(total_arrived // msg)
+            if total_arrived == 0 and accepted > 0 and n_started == 0:
+                new_started += 1
+            for _ in range(new_started):
+                starts.append(now_us)
+                n_started += 1
+            total_arrived += accepted
+
+            # ---- drain RNIC -> host -------------------------------------- #
+            if c.mode == "ddio":
+                # posted per-QP receive buffers + unconsumed post-NIC bytes
+                working_set = c.num_qps * c.msg_bytes + resident
+                over = working_set - c.ddio_bytes
+                miss = min(1.0, max(0.0, over / (c.miss_knee * c.ddio_bytes)))
+                miss_sum += miss
+                miss_n += 1
+                avail_dram = max(0.0, c.membw_total_gbps - cpu_bw)
+                drain_bw = c.pcie_gbps
+                if miss > 1e-9:
+                    # each drained byte costs ~2*miss bytes of DRAM traffic
+                    drain_bw = min(drain_bw, avail_dram / (2.0 * miss))
+                drained = min(rnic_q, drain_bw * bytes_per_gbps_tick)
+                nic_dram_bytes += drained * 2.0 * miss
+                hold = hold_b
+                strag_share = 0.0
+            else:  # jet
+                pool_used = resident
+                pool_free = max(0.0, pool_cap - pool_used)
+                drain_bw = min(c.pcie_gbps, c.line_rate_gbps * 4.0)
+                drained = min(rnic_q, drain_bw * bytes_per_gbps_tick,
+                              pool_free)
+                hold = hold_j
+                strag_share = c.straggler_frac
+
+            rnic_q -= drained
+            # schedule release
+            if drained > 0.0:
+                base_part = drained * (1.0 - strag_share)
+                strag_part = drained * strag_share
+                bt = min(horizon - 1, t + max(1, int(hold / dt)))
+                st = min(horizon - 1,
+                         t + max(1, int(hold * c.straggler_mult / dt)))
+                rel_base[bt] += base_part
+                rel_strag[st] += strag_part
+                resident += drained
+                strag_resident += strag_part
+            # message drain-completion timestamps
+            new_done = int((total_drained + drained) // msg) \
+                - int(total_drained // msg)
+            for _ in range(new_done):
+                dones.append(now_us)
+                n_drained_msgs += c.num_qps
+            total_drained += drained
+
+            # ---- post-NIC consumption ------------------------------------ #
+            for arr, is_strag in ((rel_base, False), (rel_strag, True)):
+                r = arr[t]
+                if r <= 0.0:
+                    continue
+                if escape_debt > 0.0:
+                    void = min(r, escape_debt)
+                    escape_debt -= void
+                    r -= void
+                    # a released straggler that had been REPLACE-escaped
+                    # retires its DRAM borrow (re-arming the replace rung)
+                    repay = min(void, replace_debt)
+                    replace_debt -= repay
+                    replace_mem = max(0.0, replace_mem - repay)
+                resident = max(0.0, resident - r)
+                if is_strag:
+                    strag_resident = max(0.0, strag_resident - r)
+
+            # ---- Jet escape ladder (paper Algorithm 1) -------------------- #
+            if c.mode == "jet":
+                avail_frac = max(0.0, pool_cap - resident) / pool_cap
+                if avail_frac < c.cache_safe:
+                    if replace_mem < c.mem_esc_bytes:
+                        x = min(strag_resident,
+                                c.mem_esc_bytes - replace_mem)
+                        if x > 0.0:
+                            resident -= x
+                            strag_resident -= x
+                            escape_debt += x
+                            replace_debt += x
+                            replace_mem += x
+                            replaces += 1
+                            # background re-touch traffic, low frequency
+                            escape_dram_bytes += x * 0.1
+                    else:
+                        x = strag_resident
+                        if x > 0.0:
+                            resident -= x
+                            strag_resident = 0.0
+                            escape_debt += x
+                            escape_dram_bytes += x  # the copy itself
+                            copies += 1
+                    avail_frac = max(0.0, pool_cap - resident) / pool_cap
+                    if avail_frac < c.cache_danger:
+                        ecn_escape_accum_us += dt
+                        if ecn_escape_accum_us >= c.cnp_interval_us:
+                            ecn_escape_accum_us = 0.0
+                            rate.on_cnp()
+                            cnp_count += 1
+                            ecns += 1
+                pool_sum += resident
+                pool_peak = max(pool_peak, resident)
+
+            # ---- congestion signalling ------------------------------------ #
+            q_frac = rnic_q / c.rnic_buffer_bytes
+            if c.pfc_enabled:
+                if pfc_paused:
+                    if q_frac < c.pfc_xon:
+                        pfc_paused = False
+                elif q_frac > c.pfc_xoff:
+                    pfc_paused = True
+                if pfc_paused:
+                    pfc_pause_us += dt
+            # RNIC-watermark CNPs (ConnectX-6 DX feature, §2.1)
+            cnp_accum_us += dt
+            if (c.rnic_ecn_cnp and q_frac > c.ecn_threshold
+                    and cnp_accum_us >= c.cnp_interval_us):
+                cnp_accum_us = 0.0
+                rate.on_cnp()
+                cnp_count += 1
+
+        # ---- aggregate metrics ------------------------------------------- #
+        sim_us = ticks * dt
+        goodput = total_drained * 8.0 / (sim_us * 1e-6) / 1e9
+        post = (hold_j if c.mode == "jet" else hold_b)
+        lats = [d - s + post for s, d in zip(starts, dones)]
+        lats = lats[len(lats) // 10:]      # drop warm-up decile
+        if not lats:
+            lats = [float("nan")]
+        arr = np.array(lats)
+        return SimResult(
+            goodput_gbps=goodput,
+            avg_latency_us=float(np.mean(arr)),
+            p99_latency_us=float(np.percentile(arr, 99)),
+            p999_latency_us=float(np.percentile(arr, 99.9)),
+            pfc_pause_us=pfc_pause_us,
+            cnp_count=cnp_count,
+            ddio_miss_rate=(miss_sum / miss_n) if miss_n else 0.0,
+            nic_dram_gbps=nic_dram_bytes * 8.0 / (sim_us * 1e-6) / 1e9,
+            pool_peak_bytes=int(pool_peak),
+            pool_avg_bytes=pool_sum / max(1, ticks),
+            escape_replaces=replaces,
+            escape_copies=copies,
+            escape_ecn=ecns,
+            escape_dram_gbps=escape_dram_bytes * 8.0 / (sim_us * 1e-6) / 1e9,
+            dropped_bytes=int(dropped),
+            completed_messages=n_drained_msgs,
+        )
+
+
+def run_sim(cfg: SimConfig) -> SimResult:
+    return ReceiverSim(cfg).run()

@@ -1,0 +1,2 @@
+from .pipeline import PipelineConfig, SyntheticPipeline, for_arch
+__all__ = ["PipelineConfig", "SyntheticPipeline", "for_arch"]

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel embodies the RDCA principle in-kernel: operands stream through a
+small recycled VMEM staging pool (BlockSpec double-buffering == the swift
+cache-recycle pipeline) and the big intermediate never exists in HBM.
+
+Validated on CPU with interpret=True against the pure-jnp oracles in ref.py;
+selected automatically on TPU via ops.py.
+"""
+from . import ops, ref
+from .jet_decode_attention import decode_attention_paged
+from .jet_flash_attention import flash_attention
+from .jet_staged_matmul import staged_matmul, staging_pool_bytes
+from .mamba2_ssd import ssd_scan
+
+__all__ = ["decode_attention_paged", "flash_attention", "ops", "ref",
+           "ssd_scan", "staged_matmul", "staging_pool_bytes"]

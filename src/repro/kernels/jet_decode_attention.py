@@ -1,0 +1,117 @@
+"""Jet decode attention over a paged KV cache.
+
+The serving engine stores KV in fixed-size pages allocated from the
+cache-resident buffer pool (`repro.core.pool.DevicePool`) — the slab design of
+paper §4.2 applied to the KV cache.  This kernel consumes one page per grid
+step, staged HBM->VMEM by the Pallas pipeline (the recycle controller), and
+maintains an online-softmax carry.  The page table rides the scalar-prefetch
+channel, mirroring Jet's shared-cache metadata hand-off (paper §3.2 step 4:
+"notifies the application ... with the pointer").
+
+Returns (o, lse): the log-sum-exp makes the output mergeable across sequence
+shards — those (o, lse) tuples are the *small messages* that ride the SRQ path
+in distributed decode (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(table_ref, lengths_ref, q_ref, k_ref, v_ref,
+                   o_ref, lse_ref, m_ref, l_ref, acc_ref, *,
+                   n_pages: int, page: int, group: int, scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = lengths_ref[b]
+    valid_page = (p * page) < seq_len
+
+    @pl.when(valid_page)
+    def _consume():
+        q = q_ref[0].astype(jnp.float32) * scale         # [Hq, D]
+        k = k_ref[0].astype(jnp.float32)                 # [page, Hkv, D]
+        v = v_ref[0].astype(jnp.float32)
+        hq, d = q.shape
+        hkv = k.shape[1]
+        qg = q.reshape(hkv, group, d)
+        s = jnp.einsum("kgd,pkd->kgp", qg, k)            # [Hkv, G, page]
+        pos = p * page + jax.lax.broadcasted_iota(
+            jnp.int32, (hkv, group, page), 2)
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+        s = s.reshape(hq, page)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        pexp = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + pexp.sum(axis=-1, keepdims=True)
+        pv = jnp.einsum("kgp,pkd->kgd", pexp.reshape(hkv, group, page), v)
+        acc_ref[...] = acc_ref[...] * corr + pv.reshape(hq, d)
+        m_ref[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse_ref[0, ...] = m_ref[...] + jnp.log(l)
+
+
+def decode_attention_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                           lengths: jnp.ndarray, *,
+                           interpret: bool = False
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q:[B,Hq,D]; k/v_pages:[P,page,Hkv,D]; page_table:[B,maxp] (-1 holes);
+    lengths:[B] -> (o:[B,Hq,D], lse:[B,Hq])."""
+    bsz, hq, d = q.shape
+    n_pool, page, hkv, _ = k_pages.shape
+    _, maxp = page_table.shape
+    group = hq // hkv
+    # holes (-1) are clamped to page 0; the length mask voids their scores.
+    table = jnp.maximum(page_table, 0).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, maxp),
+        in_specs=[
+            pl.BlockSpec((1, hq, d), lambda b, p, t_, l_: (b, 0, 0)),
+            pl.BlockSpec((1, page, hkv, d),
+                         lambda b, p, t_, l_: (t_[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, page, hkv, d),
+                         lambda b, p, t_, l_: (t_[b, p], 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, hq, d), lambda b, p, t_, l_: (b, 0, 0)),
+            pl.BlockSpec((1, hq, 1), lambda b, p, t_, l_: (b, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, d), jnp.float32),
+        ],
+    )
+    o, lse = pl.pallas_call(
+        functools.partial(_decode_kernel, n_pages=maxp, page=page,
+                          group=group, scale=d ** -0.5),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, hq, d), q.dtype),
+            jax.ShapeDtypeStruct((bsz, hq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(table, lengths.astype(jnp.int32), q, k_pages, v_pages)
+    return o, lse[..., 0]

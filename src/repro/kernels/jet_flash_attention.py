@@ -1,0 +1,119 @@
+"""Jet flash attention: KV streamed through a windowed VMEM staging pool.
+
+Causal (optionally sliding-window) GQA attention where the KV sequence is
+consumed in fragments of ``block_kv`` tokens.  The (m, l, acc) online-softmax
+carry is the only persistent state — the S x T score matrix never exists
+(memory out of the datapath), and each KV fragment's staging slot is recycled
+by the Pallas pipeline as soon as the MXU consumed it (the swift-recycle
+controller, paper §4.2).
+
+Block sizes map to the paper's knobs:
+    block_kv  ~ READ fragment size (<=256 KB rule -> block_kv*D*2B per head)
+    2 staging buffers (Pallas double-buffering) ~ in-flight window
+
+TPU-performance note: on real TPU, fully-masked KV blocks (beyond the causal
+diagonal or outside the sliding window) should be skipped by folding the
+block-level predicate into the grid; in interpret mode we keep the full grid
+and rely on masking for correctness.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  n_kv: int, block_q: int, block_kv: int, causal: bool,
+                  window: Optional[int], kv_seq: int, q_seq: int,
+                  scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale           # [bq, D]
+    k = k_ref[0].astype(jnp.float32)                   # [bkv, D]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bkv]
+
+    offset = kv_seq - q_seq   # right-aligned causality (decode-style q<kv)
+    t_idx = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_kv), 0)
+    s_idx = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (block_q, block_kv), 1)
+    mask = s_idx < kv_seq
+    if causal:
+        mask &= (t_idx + offset) >= s_idx
+    if window is not None:
+        mask &= (t_idx + offset) - s_idx < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _emit():
+        o_ref[0, ...] = (acc_ref[...] /
+                         jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 256, block_kv: int = 512,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q:[B,Hq,T,D] k/v:[B,Hkv,S,D] -> [B,Hq,T,D] (GQA via head grouping)."""
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    bq = min(block_q, t)
+    bkv = min(block_kv, s)
+
+    qf = q.reshape(b * hq, t, d)
+    kf = k.reshape(b * hkv, s, d)
+    vf = v.reshape(b * hkv, s, d)
+    tp, sp = -(-t // bq) * bq, -(-s // bkv) * bkv
+    if tp != t:
+        qf = jnp.pad(qf, ((0, 0), (0, tp - t), (0, 0)))
+    if sp != s:
+        kf = jnp.pad(kf, ((0, 0), (0, sp - s), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, sp - s), (0, 0)))
+    grid = (b * hq, tp // bq, sp // bkv)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, n_kv=grid[2], block_q=bq,
+                          block_kv=bkv, causal=causal, window=window,
+                          kv_seq=s, q_seq=t, scale=d ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, tp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out[:, :t, :].reshape(b, hq, t, d)

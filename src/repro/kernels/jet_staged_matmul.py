@@ -1,0 +1,93 @@
+"""RDCA staged-consumption matmul (the paper's receive path, in-kernel).
+
+C[M,N] = A[M,K] @ B[K,N] where A's K dimension arrives as *fragments* (the
+paper's <=256 KB READ fragments).  The kernel consumes each fragment from a
+small recycled VMEM staging area and accumulates into a VMEM-resident
+accumulator — the gathered operand never round-trips through HBM
+("move memory out of the receiver datapath").
+
+The Pallas pipeline (BlockSpec double-buffering) plays the role of the swift
+cache-recycle controller: a staging slot is rewritten the moment the MXU has
+consumed it.  Block sizes are the pool-sizing knobs:
+
+    VMEM pool = bm*bk (A slot) + bk*bn (B slot) + bm*bn (acc)   x 2 buffers
+
+sized by the same Little's-law reasoning the paper uses for its 12 MB LLC pool
+(see benchmarks/bench_kernels.py for the sizing sweep).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(x: jnp.ndarray, mult, axes) -> jnp.ndarray:
+    pads = [(0, 0)] * x.ndim
+    for m, ax in zip(mult, axes):
+        pads[ax] = (0, (-x.shape[ax]) % m)
+    if any(p != (0, 0) for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+def staged_matmul(a: jnp.ndarray, b: jnp.ndarray, *,
+                  block_m: int = 256, block_n: int = 256,
+                  block_k: int = 512,
+                  out_dtype: Optional[jnp.dtype] = None,
+                  interpret: bool = False) -> jnp.ndarray:
+    """Fragment-staged matmul. a:[M,K] @ b:[K,N] -> [M,N]."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    out_dtype = out_dtype or a.dtype
+    bm, bn, bk = (min(block_m, M), min(block_n, N), min(block_k, K))
+    a = _pad_to(a, (bm, bk), (0, 1))
+    b = _pad_to(b, (bk, bn), (0, 1))
+    Mp, Kp = a.shape
+    _, Np = b.shape
+    grid = (Mp // bm, Np // bn, Kp // bk)
+
+    kernel = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )
+    out = kernel(a, b)
+    return out[:M, :N]
+
+
+def staging_pool_bytes(block_m: int, block_n: int, block_k: int,
+                       dtype_bytes: int = 2, num_buffers: int = 2) -> int:
+    """VMEM footprint of the staging pool for a given tiling (the in-kernel
+    analogue of the paper's 12 MB pool-sizing arithmetic, §4.1.3)."""
+    a_slot = block_m * block_k * dtype_bytes
+    b_slot = block_k * block_n * dtype_bytes
+    acc = block_m * block_n * 4
+    return num_buffers * (a_slot + b_slot) + acc

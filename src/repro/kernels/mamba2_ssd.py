@@ -1,0 +1,100 @@
+"""Chunked Mamba2 SSD scan (for zamba2 and long-context decode).
+
+The SSD recurrence h_t = exp(dt_t a) h_{t-1} + dt_t b_t x_t^T, y_t = c_t h_t
+is computed chunk-by-chunk: intra-chunk work is a masked decay-attention (MXU
+friendly), inter-chunk state is a (N,P) carry in VMEM scratch.  The sequence
+streams through the kernel in fragments exactly like Jet's receive pipeline —
+the carry is the recycled "cache-resident" state; the full [T,N,P] state
+history never exists in HBM.
+
+Grid: (batch, heads, chunks) with chunks innermost so the VMEM state scratch
+persists across a head's chunk sequence.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
+                n_chunks: int, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)        # [L, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)      # [L]
+    a = a_ref[0].astype(jnp.float32)              # scalar
+    b = b_ref[0, :, 0].astype(jnp.float32)        # [L, N]
+    c = c_ref[0, :, 0].astype(jnp.float32)        # [L, N]
+    L = chunk
+
+    ad = dt * a                                    # [L] (negative)
+    cum = jnp.cumsum(ad)                           # [L]
+    seg = cum[:, None] - cum[None, :]              # [L, L]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    dec = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ()))) * dec
+    y_intra = jax.lax.dot_general(scores * dt[None, :], x,
+                                  (((1,), (0,)), ((), ())))     # [L, P]
+    h = h_ref[...]                                 # [N, P]
+    y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, h, (((1,), (0,)), ((), ())))            # [L, P]
+    y_ref[0, :, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    to_end = jnp.exp(cum[-1] - cum)                # [L]
+    h_new = jnp.exp(cum[-1]) * h + jax.lax.dot_general(
+        b * (dt * to_end)[:, None], x, (((0,), (0,)), ((), ())))
+    h_ref[...] = h_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit():
+        hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+             b: jnp.ndarray, c: jnp.ndarray, *, chunk: int = 256,
+             interpret: bool = False
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x:[B,T,H,P] dt:[B,T,H] a:[H] b,c:[B,T,G,N] -> (y:[B,T,H,P],
+    h:[B,H,N,P]).  T must divide by ``chunk``; G must divide H."""
+    B, T, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    assert T % min(chunk, T) == 0
+    L = min(chunk, T)
+    nc = T // L
+    rep = H // G
+    grid = (B, H, nc)
+
+    y, h = pl.pallas_call(
+        functools.partial(_ssd_kernel, n_chunks=nc, chunk=L),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, L, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, L, 1, N),
+                         lambda bi, hi, ci, r=rep: (bi, ci, hi // r, 0)),
+            pl.BlockSpec((1, L, 1, N),
+                         lambda bi, hi, ci, r=rep: (bi, ci, hi // r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)
+    return y, h

@@ -1,0 +1,72 @@
+"""Public, jit'd wrappers for the kernels package.
+
+Implementation selection:
+  * ``impl="auto"``   — Pallas on TPU, reference (pure-jnp) elsewhere. The
+                        reference tier is what XLA lowers for the CPU-hosted
+                        multi-pod dry-run (Mosaic cannot target host CPU).
+  * ``impl="pallas"`` — force the Pallas kernel (compiled on TPU).
+  * ``impl="interpret"`` — Pallas kernel body executed in interpret mode
+                        (CPU correctness validation; used by the test suite).
+  * ``impl="ref"``    — force the pure-jnp reference.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .jet_decode_attention import decode_attention_paged
+from .jet_flash_attention import flash_attention as _flash_pallas
+from .jet_staged_matmul import staged_matmul as _matmul_pallas
+from .mamba2_ssd import ssd_scan as _ssd_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+# --------------------------------------------------------------------------- #
+def staged_matmul(a, b, *, impl: str = "auto", **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.matmul_naive(a, b)
+    return _matmul_pallas(a, b, interpret=(impl == "interpret"), **kw)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, impl: str = "auto", **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         interpret=(impl == "interpret"), **kw)
+
+
+def decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                     impl: str = "auto", **kw) -> Tuple[jnp.ndarray,
+                                                        jnp.ndarray]:
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.decode_attention_paged_ref(q, k_pages, v_pages,
+                                              page_table, lengths)
+    return decode_attention_paged(q, k_pages, v_pages, page_table, lengths,
+                                  interpret=(impl == "interpret"), **kw)
+
+
+def ssd(x, dt, a, b, c, *, chunk: int = 256, impl: str = "auto", **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        y, h = ref.ssd_chunked_ref(x, dt, a, b, c, chunk=min(chunk,
+                                                             x.shape[1]))
+        return y, h
+    return _ssd_pallas(x, dt, a, b, c, chunk=chunk,
+                       interpret=(impl == "interpret"), **kw)

@@ -1,0 +1,262 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Two tiers:
+  * ``*_naive``   — maximally-simple math (the ground truth for tests);
+  * ``*_ref``     — memory-efficient pure-JAX forms (scan-over-chunks) used by
+                    the model code on CPU and for the dry-run lowering, where
+                    Mosaic kernels cannot compile. These are numerically
+                    equivalent to the kernels and are themselves tested
+                    against the naive tier.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# matmul
+# --------------------------------------------------------------------------- #
+def matmul_naive(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# attention (training/prefill)
+# --------------------------------------------------------------------------- #
+def _gqa_expand(k: jnp.ndarray, num_q_heads: int) -> jnp.ndarray:
+    """[B, Hkv, S, D] -> [B, Hq, S, D] by repeating kv heads."""
+    b, hkv, s, d = k.shape
+    group = num_q_heads // hkv
+    return jnp.repeat(k, group, axis=1)
+
+
+def attention_naive(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True,
+                    window: Optional[int] = None,
+                    kv_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-softmax attention. q:[B,Hq,T,D] k/v:[B,Hkv,S,D] -> [B,Hq,T,D]."""
+    b, hq, t, d = q.shape
+    kf = _gqa_expand(k, hq).astype(jnp.float32)
+    vf = _gqa_expand(v, hq).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    s = jnp.einsum("bhtd,bhsd->bhts", qf, kf)
+    t_idx = jnp.arange(t)[:, None]
+    s_idx = jnp.arange(kf.shape[2])[None, :]
+    # align causality for prefill (T==S) and decode-style (T<S, right-aligned)
+    offset = kf.shape[2] - t
+    mask = jnp.ones((t, kf.shape[2]), dtype=bool)
+    if causal:
+        mask &= (t_idx + offset) >= s_idx
+    if window is not None:
+        mask &= (t_idx + offset) - s_idx < window
+    if kv_len is not None:
+        mask = mask[None, :, :] & (s_idx[None, :, :] < kv_len[:, None, None])
+        mask = mask[:, None]
+    else:
+        mask = mask[None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p, vf).astype(q.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        block_kv: int = 512) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV in ``block_kv`` fragments.
+
+    This is the pure-JAX image of the Jet receive pipeline: each KV fragment
+    is a "message fragment" staged through a recycled buffer (the scan carry
+    holds only (m, l, acc) — memory out of the datapath). Used for 32k-token
+    prefill lowering where naive T x S scores would not fit.
+    """
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    nblk = -(-s // block_kv)
+    pad = nblk * block_kv - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = k.reshape(b, hkv, nblk, block_kv, d).astype(jnp.float32)
+    vb = v.reshape(b, hkv, nblk, block_kv, d).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    qg = qf.reshape(b, hkv, group, t, d)
+
+    offset = s - t
+    t_idx = jnp.arange(t)[:, None] + offset
+
+    def step(carry, blk):
+        m_prev, l_prev, acc = carry
+        kblk, vblk, start = blk
+        sc = jnp.einsum("bhgtd,bhsd->bhgts", qg, kblk)
+        s_idx = start + jnp.arange(block_kv)[None, :]
+        mask = s_idx < s  # padding
+        if causal:
+            mask = mask & (t_idx >= s_idx)
+        if window is not None:
+            mask = mask & (t_idx - s_idx < window)
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m_prev, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhgts,bhsd->bhgtd", p, vblk)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, hkv, group, t), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, group, t), jnp.float32),
+            jnp.zeros((b, hkv, group, t, d), jnp.float32))
+    starts = jnp.arange(nblk) * block_kv
+    (m, l, acc), _ = jax.lax.scan(
+        step, init, (kb.transpose(2, 0, 1, 3, 4), vb.transpose(2, 0, 1, 3, 4),
+                     starts))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, hq, t, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# decode attention (paged + distributed combine)
+# --------------------------------------------------------------------------- #
+def decode_attention_naive(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           lengths: jnp.ndarray):
+    """q:[B,Hq,D]; contiguous k/v:[B,S,Hkv,D]; lengths:[B].
+
+    Returns (o:[B,Hq,D], lse:[B,Hq]) — lse enables cross-shard combining
+    (the "small message" SRQ path of distributed decode)."""
+    b, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    group = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, group, d) * (d ** -0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    sc = jnp.einsum("bkgd,bskd->bkgs", qf, kf)
+    mask = jnp.arange(s)[None, :] < lengths[:, None]
+    sc = jnp.where(mask[:, None, None], sc, NEG_INF)
+    m = sc.max(axis=-1)
+    p = jnp.exp(sc - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, vf) / jnp.maximum(l[..., None],
+                                                           1e-30)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return (o.reshape(b, hq, d).astype(q.dtype), lse.reshape(b, hq))
+
+
+def decode_attention_paged_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                               v_pages: jnp.ndarray,
+                               page_table: jnp.ndarray,
+                               lengths: jnp.ndarray):
+    """Paged oracle. k_pages:[P,page,Hkv,D], page_table:[B,maxp] (-1 = hole).
+
+    Gathers each sequence's pages into a contiguous view, then defers to the
+    dense oracle."""
+    b, maxp = page_table.shape
+    page = k_pages.shape[1]
+    safe = jnp.maximum(page_table, 0)
+    kc = k_pages[safe]                      # [B, maxp, page, Hkv, D]
+    vc = v_pages[safe]
+    kc = kc.reshape(b, maxp * page, *k_pages.shape[2:])
+    vc = vc.reshape(b, maxp * page, *v_pages.shape[2:])
+    return decode_attention_naive(q, kc, vc, lengths)
+
+
+def combine_partial_attention(o_parts: jnp.ndarray, lse_parts: jnp.ndarray):
+    """Merge per-shard partial attention (the SRQ small-message combine).
+
+    o_parts:[S,B,H,D], lse_parts:[S,B,H] -> (o:[B,H,D]).  Numerically stable
+    weighted merge: softmax over shard lse."""
+    m = lse_parts.max(axis=0, keepdims=True)
+    w = jnp.exp(lse_parts - m)
+    w = w / jnp.maximum(w.sum(axis=0, keepdims=True), 1e-30)
+    return (o_parts * w[..., None]).sum(axis=0)
+
+
+# --------------------------------------------------------------------------- #
+# Mamba2 SSD scan
+# --------------------------------------------------------------------------- #
+def ssd_naive(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+              b: jnp.ndarray, c: jnp.ndarray,
+              h0: Optional[jnp.ndarray] = None):
+    """Sequential state-space (SSD) oracle.
+
+    x:[B,T,H,P] dt:[B,T,H] a:[H] (negative) b,c:[B,T,G,N] -> y:[B,T,H,P].
+    h_t = exp(dt_t a) h_{t-1} + dt_t * b_t x_t^T ;  y_t = c_t h_t
+    """
+    B, T, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    bx = jnp.repeat(b, rep, axis=2).astype(jnp.float32)   # [B,T,H,N]
+    cx = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp          # [B,H,P],[B,H],[B,H,N],[B,H,N]
+        decay = jnp.exp(dt_t * a)[..., None, None]         # [B,H,1,1]
+        h = h * decay + (dt_t[..., None, None] *
+                         b_t[..., :, None] * x_t[..., None, :])  # [B,H,N,P]
+        y = jnp.einsum("bhn,bhnp->bhp", c_t, h)
+        return h, y
+
+    h_init = (h0.astype(jnp.float32) if h0 is not None
+              else jnp.zeros((B, H, N, P), jnp.float32))
+    hT, ys = jax.lax.scan(
+        step, h_init,
+        (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+         bx.transpose(1, 0, 2, 3), cx.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), hT.astype(jnp.float32)
+
+
+def ssd_chunked_ref(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                    b: jnp.ndarray, c: jnp.ndarray, chunk: int = 256,
+                    h0: Optional[jnp.ndarray] = None):
+    """Chunked SSD (the math of the Pallas kernel, as a pure-JAX scan over
+    chunks). Intra-chunk is a masked 'attention'; inter-chunk carries the
+    (N,P) state — i.e. fragments stream through a recycled carry, never
+    materializing the full sequence state history."""
+    B, T, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    assert T % chunk == 0, "pad sequence to a chunk multiple"
+    L = chunk
+    nc = T // L
+    bx = jnp.repeat(b, rep, axis=2).astype(jnp.float32)
+    cx = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32).reshape(B, nc, L, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B, nc, L, H)
+    bxc = bx.reshape(B, nc, L, H, N)
+    cxc = cx.reshape(B, nc, L, H, N)
+
+    def chunk_step(h, inp):
+        xc, dtc, bc, cc = inp              # [B,L,H,P],[B,L,H],[B,L,H,N]x2
+        ad = dtc * a                        # [B,L,H]  (negative)
+        cum = jnp.cumsum(ad, axis=1)        # [B,L,H]
+        # intra-chunk masked attention
+        seg = cum[:, :, None, :] - cum[:, None, :, :]       # [B,L,L,H]
+        il = jnp.tril(jnp.ones((L, L), bool))
+        dec = jnp.where(il[None, :, :, None], jnp.exp(seg), 0.0)
+        sc = jnp.einsum("blhn,bmhn->blmh", cc, bc) * dec
+        y_intra = jnp.einsum("blmh,bmh,bmhp->blhp", sc, dtc, xc)
+        # inter-chunk state contribution
+        y_inter = jnp.exp(cum)[..., None] * jnp.einsum(
+            "blhn,bhnp->blhp", cc, h)
+        # state update
+        to_end = jnp.exp(cum[:, -1:, :] - cum)              # [B,L,H]
+        h = (jnp.exp(cum[:, -1, :])[..., None, None] * h +
+             jnp.einsum("blhn,blh,blhp->bhnp", bc, dtc * to_end, xc))
+        return h, y_intra + y_inter
+
+    h_init = (h0.astype(jnp.float32) if h0 is not None
+              else jnp.zeros((B, H, N, P), jnp.float32))
+    hT, ys = jax.lax.scan(
+        chunk_step, h_init,
+        (xf.transpose(1, 0, 2, 3, 4), dtf.transpose(1, 0, 2, 3),
+         bxc.transpose(1, 0, 2, 3, 4), cxc.transpose(1, 0, 2, 3, 4)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, P)
+    return y.astype(x.dtype), hT.astype(jnp.float32)

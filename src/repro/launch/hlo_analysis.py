@@ -1,0 +1,271 @@
+"""Trip-count-aware HLO analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE regardless
+of trip count (verified: a 10-iteration scan of a matmul reports 1 matmul of
+FLOPs).  Our models scan over layer units, so FLOPs/bytes/collectives must be
+multiplied by trip counts.  This module parses the optimized HLO:
+
+  * splits the module into computations,
+  * builds a call graph (while body/cond, fusion ``calls=``, ``to_apply=``),
+  * extracts each while loop's trip count from its condition's comparison
+    constant,
+  * accumulates dot FLOPs, dot operand/result bytes (HBM-traffic proxy) and
+    per-type collective bytes, each weighted by loop multiplicity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTSIZE = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+           "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+           "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "s4": 1,
+           "u4": 1}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.*)$")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_BLOCK_RE = re.compile(r"^(ENTRY\s+)?(%?[\w.\-]+)\s*\((.*)\)\s*->")
+_PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*([a-z][a-z0-9]*\[[0-9,]*\])")
+_CALL_RE = re.compile(r"(?:calls=|to_apply=|body=|condition=)(%?[\w.\-]+)")
+_BODY_RE = re.compile(r"body=(%?[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%?[\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_DOT_OPND_RE = re.compile(r"dot\(([^)]*)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0, 0
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n, n * _DTSIZE.get(dt, 4)
+
+
+def _first_shapes(s: str) -> List[str]:
+    return [f"{dt}[{dims}]" for dt, dims in _SHAPE_RE.findall(s)]
+
+
+@dataclasses.dataclass
+class Block:
+    name: str
+    lines: List[str]
+    params: Dict[str, str]          # param name -> shape string
+    is_entry: bool = False
+
+
+def _split_blocks(hlo: str) -> Dict[str, Block]:
+    blocks: Dict[str, Block] = {}
+    cur: Optional[Block] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _BLOCK_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                name = m.group(2).lstrip("%")
+                params = {pm.group(1): pm.group(2)
+                          for pm in _PARAM_RE.finditer(m.group(3))}
+                cur = Block(name, [], params, is_entry=bool(m.group(1)))
+        else:
+            if line.startswith("}"):
+                blocks[cur.name] = cur
+                cur = None
+            else:
+                cur.lines.append(line)
+    return blocks
+
+
+@dataclasses.dataclass
+class BlockStats:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: dict.fromkeys(_COLL_OPS, 0.0))
+    coll_counts: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: dict.fromkeys(_COLL_OPS, 0))
+    whiles: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    calls: List[str] = dataclasses.field(default_factory=list)
+    convs: int = 0
+
+
+def _sym_table(block: Block) -> Dict[str, str]:
+    """name -> result shape string (first shape on the def line)."""
+    table = dict(block.params)
+    for line in block.lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name = m.group(1).lstrip("%")
+        shapes = _first_shapes(m.group(2).split("(")[0])
+        if shapes:
+            table[name] = shapes[0]
+        else:
+            # tuple results: keep the full rhs for byte summing
+            table[name] = m.group(2)
+    return table
+
+
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+
+
+def _collective_operands(line: str, op: str) -> List[str]:
+    """Operand names of a collective call line."""
+    tail = line.split(f" {op}(")[-1] if f" {op}(" in line else \
+        line.split(f" {op}-start(")[-1]
+    names = []
+    for tok in tail.split(")")[0].split(","):
+        tok = tok.strip().lstrip("%")
+        if tok:
+            names.append(tok.split(" ")[-1].lstrip("%"))
+    return names
+
+
+def _bf16_on_tpu(line: str, op: str) -> bool:
+    """True when this f32 collective would run at bf16 width on TPU.
+
+    The CPU backend's float-normalization pass rewrites bf16 collectives:
+    reductions get '..._promoted' reducers and data-movement collectives
+    get their convert hoisted in front (operand named '*convert*').  The
+    TPU backend executes both natively in bf16, so the roofline must count
+    them at 2 bytes.
+    """
+    if "promoted" in line:
+        return True
+    ops = _collective_operands(line, op)
+    return bool(ops) and all("convert" in n for n in ops)
+
+
+def _analyze_block(block: Block) -> BlockStats:
+    st = BlockStats()
+    sym = _sym_table(block)
+    for line in block.lines:
+        if " dot(" in line:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            res_shapes = _first_shapes(m.group(2).split(" dot(")[0])
+            if not res_shapes:
+                continue
+            res_elems, res_bytes = _shape_elems_bytes(res_shapes[0])
+            ops = _DOT_OPND_RE.search(line)
+            cm = _CONTRACT_RE.search(line)
+            k = 1
+            lhs_bytes = rhs_bytes = 0
+            if ops and cm:
+                opnames = [o.strip().lstrip("%").split(" ")[-1]
+                           for o in ops.group(1).split(",")]
+                lhs_shape = sym.get(opnames[0], "")
+                rhs_shape = sym.get(opnames[1], "") if len(opnames) > 1 \
+                    else ""
+                lm = _SHAPE_RE.match(lhs_shape or "")
+                if lm:
+                    dims = [int(d) for d in lm.group(2).split(",") if d]
+                    for ci in cm.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            k *= dims[int(ci)]
+                _, lhs_bytes = _shape_elems_bytes(lhs_shape or "")
+                _, rhs_bytes = _shape_elems_bytes(rhs_shape or "")
+            st.dot_flops += 2.0 * res_elems * k
+            st.dot_bytes += res_bytes + lhs_bytes + rhs_bytes
+            continue
+        if " convolution(" in line:
+            st.convs += 1
+        for op in _COLL_OPS:
+            if f" {op}(" in line or f" {op}-start(" in line:
+                if "-done(" in line:
+                    continue
+                m = _DEF_RE.match(line)
+                if not m:
+                    break
+                head = m.group(2).split(f" {op}")[0]
+                size = sum(_shape_elems_bytes(s)[1]
+                           for s in _first_shapes(head))
+                # Count collectives the CPU backend widened to f32 at
+                # their on-TPU (bf16) width — see _bf16_on_tpu.
+                if _bf16_on_tpu(line, op):
+                    size /= 2.0
+                g = _GROUPS_RE.search(line)
+                if g:
+                    n = len(g.group(1).split(","))
+                else:
+                    g2 = _GROUPS2_RE.search(line)
+                    n = int(g2.group(2)) if g2 else 2
+                n = max(n, 2)
+                if op == "all-gather":
+                    b = size * (n - 1) / n
+                elif op == "all-reduce":
+                    b = 2.0 * size * (n - 1) / n
+                elif op == "reduce-scatter":
+                    b = size * (n - 1)
+                elif op == "all-to-all":
+                    b = size * (n - 1) / n
+                else:
+                    b = size
+                st.coll[op] += b
+                st.coll_counts[op] += 1
+                break
+        bm = _BODY_RE.search(line)
+        if bm and " while(" in line:
+            cm2 = _COND_RE.search(line)
+            st.whiles.append((bm.group(1).lstrip("%"),
+                              cm2.group(1).lstrip("%") if cm2 else ""))
+            continue
+        cm3 = _CALL_RE.findall(line)
+        if cm3 and " while(" not in line:
+            st.calls.extend(c.lstrip("%") for c in cm3)
+    return st
+
+
+def _trip_count(cond_block: Optional[Block]) -> int:
+    if cond_block is None:
+        return 1
+    consts = [int(c) for line in cond_block.lines
+              for c in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def analyze(hlo: str) -> Dict[str, object]:
+    blocks = _split_blocks(hlo)
+    stats = {name: _analyze_block(b) for name, b in blocks.items()}
+    entry = next((b.name for b in blocks.values() if b.is_entry), None)
+    if entry is None:
+        return {"error": "no ENTRY computation found"}
+
+    totals = {"dot_flops": 0.0, "dot_bytes": 0.0,
+              "coll": dict.fromkeys(_COLL_OPS, 0.0),
+              "coll_counts": dict.fromkeys(_COLL_OPS, 0),
+              "convs": 0, "trip_counts": []}
+
+    seen_depth = [0]
+
+    def visit(name: str, mult: float) -> None:
+        if name not in stats or seen_depth[0] > 64:
+            return
+        seen_depth[0] += 1
+        st = stats[name]
+        totals["dot_flops"] += mult * st.dot_flops
+        totals["dot_bytes"] += mult * st.dot_bytes
+        for op in _COLL_OPS:
+            totals["coll"][op] += mult * st.coll[op]
+            totals["coll_counts"][op] += st.coll_counts[op]
+        totals["convs"] += st.convs
+        for body, cond in st.whiles:
+            tc = _trip_count(blocks.get(cond))
+            totals["trip_counts"].append(tc)
+            visit(body, mult * tc)
+        for c in st.calls:
+            if c != name:
+                visit(c, mult)
+        seen_depth[0] -= 1
+
+    visit(entry, 1.0)
+    totals["coll_total"] = sum(totals["coll"].values())
+    return totals

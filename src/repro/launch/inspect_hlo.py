@@ -1,0 +1,125 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+                           ).strip()
+"""Collective-shape inspector: lower one dry-run cell and print every
+collective op with its shape, replica-group size, trip-count weight and
+ring-model bytes — the profiling view the perf loop works from.
+
+  PYTHONPATH=src python -m repro.launch.inspect_hlo \
+      --arch chatglm3-6b --shape train_4k [--mesh single] [--variant '{...}']
+"""
+import argparse
+import json
+import re
+from collections import defaultdict
+
+import jax
+
+from . import hlo_analysis
+from .dryrun import build_cell
+from .mesh import make_production_mesh
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def inspect(hlo: str, top: int = 25):
+    blocks = hlo_analysis._split_blocks(hlo)
+    stats = {n: hlo_analysis._analyze_block(b) for n, b in blocks.items()}
+    entry = next(b.name for b in blocks.values() if b.is_entry)
+
+    # block -> multiplicity (product of enclosing while trip counts)
+    mult = defaultdict(float)
+
+    def visit(name, m):
+        if name not in stats:
+            return
+        mult[name] = max(mult[name], m)
+        st = stats[name]
+        for body, cond in st.whiles:
+            visit(body, m * hlo_analysis._trip_count(blocks.get(cond)))
+        for c in st.calls:
+            if c != name:
+                visit(c, m)
+
+    visit(entry, 1.0)
+
+    rows = []
+    for bname, block in blocks.items():
+        m = mult.get(bname, 0.0)
+        if m == 0.0:
+            continue
+        for line in block.lines:
+            for op in _COLL_OPS:
+                if f" {op}(" not in line and f" {op}-start(" not in line:
+                    continue
+                if "-done(" in line:
+                    continue
+                dm = hlo_analysis._DEF_RE.match(line)
+                if not dm:
+                    continue
+                head = dm.group(2).split(f" {op}")[0]
+                shapes = hlo_analysis._first_shapes(head)
+                size = sum(hlo_analysis._shape_elems_bytes(s)[1]
+                           for s in shapes)
+                g = hlo_analysis._GROUPS_RE.search(line)
+                n = (len(g.group(1).split(",")) if g else
+                     int(hlo_analysis._GROUPS2_RE.search(line).group(2))
+                     if hlo_analysis._GROUPS2_RE.search(line) else 2)
+                n = max(n, 2)
+                factor = {"all-gather": (n - 1) / n,
+                          "all-reduce": 2 * (n - 1) / n,
+                          "reduce-scatter": float(n - 1),
+                          "all-to-all": (n - 1) / n,
+                          "collective-permute": 1.0}[op]
+                bf16 = hlo_analysis._bf16_on_tpu(line, op)
+                rows.append({
+                    "op": op + ("*" if bf16 else ""),
+                    "shape": "+".join(shapes[:3]), "groups": n,
+                    "trip_mult": m, "bytes_one": size,
+                    "bytes_total": size * factor * m * (0.5 if bf16
+                                                        else 1.0),
+                    "block": bname[:40],
+                })
+                break
+    rows.sort(key=lambda r: -r["bytes_total"])
+    return rows[:top]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+    variant = json.loads(args.variant) if args.variant else {}
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    with mesh:
+        fn, cargs, shardings, specs, donate = build_cell(
+            args.arch, args.shape, mesh, variant)
+        lowered = jax.jit(fn, in_shardings=shardings,
+                          donate_argnums=donate).lower(*cargs)
+        compiled = lowered.compile()
+        hlo = compiled.as_text()
+    rows = inspect(hlo, args.top)
+    total = defaultdict(float)
+    for r in rows:
+        total[r["op"]] += r["bytes_total"]
+    print(f"{'op':18s} {'shape':44s} {'grp':>4s} {'trips':>6s} "
+          f"{'GB_total':>9s}  block   (* = counted bf16: CPU backend "
+          f"widened, TPU native)")
+    for r in rows:
+        print(f"{r['op']:18s} {r['shape']:44s} {r['groups']:4d} "
+              f"{r['trip_mult']:6.0f} {r['bytes_total']/1e9:9.2f}  "
+              f"{r['block']}")
+    print("\nper-op totals (top rows only):",
+          {k: f"{v/1e9:.1f}GB" for k, v in total.items()})
+
+
+if __name__ == "__main__":
+    main()

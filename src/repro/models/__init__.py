@@ -1,0 +1,9 @@
+"""Model zoo covering the 10 assigned architectures."""
+from . import api
+from .api import (abstract_params, decode_step, forward, init_decode_state,
+                  init_params, input_specs, loss_fn, prefill,
+                  synthetic_inputs)
+
+__all__ = ["abstract_params", "api", "decode_step", "forward",
+           "init_decode_state", "init_params", "input_specs", "loss_fn",
+           "prefill", "synthetic_inputs"]

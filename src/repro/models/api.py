@@ -1,0 +1,87 @@
+"""Model API: abstract init, input specs per (arch x shape), entry points.
+
+``input_specs`` returns ShapeDtypeStructs for every model input of a cell —
+weak-type-correct, shardable, no device allocation — exactly what the
+multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..parallel.sharding import ParallelCtx
+from . import decoding, transformer
+
+# re-exports
+init_params = transformer.init_params
+forward = transformer.forward
+loss_fn = transformer.loss_fn
+prefill = decoding.prefill
+decode_step = decoding.decode_step
+init_decode_state = decoding.init_decode_state
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.float32):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda k: transformer.init_params(cfg, k, dtype),
+        jax.random.key(0))
+
+
+def token_shape(cfg: ArchConfig, batch: int, seq: int):
+    if cfg.num_codebooks:
+        return (batch, cfg.num_codebooks, seq)
+    return (batch, seq)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of the step function."""
+    b, t = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        out = {
+            "tokens": sds(token_shape(cfg, b, t), jnp.int32),
+            "targets": sds((b, t), jnp.int32),
+        }
+        if cfg.num_patches:
+            out["patches"] = sds((b, cfg.num_patches, cfg.d_model), dtype)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": sds(token_shape(cfg, b, t), jnp.int32)}
+        if cfg.num_patches:
+            out["patches"] = sds((b, cfg.num_patches, cfg.d_model), dtype)
+        return out
+    # decode: one new token against a cache of t tokens
+    state = jax.eval_shape(
+        functools.partial(decoding.init_decode_state, cfg, b, t,
+                          dtype=dtype))
+    tok = sds((b, cfg.num_codebooks) if cfg.num_codebooks else (b,),
+              jnp.int32)
+    return {"tokens": tok, "state": state,
+            "lengths": sds((b,), jnp.int32)}
+
+
+def synthetic_inputs(cfg: ArchConfig, shape: ShapeConfig, key,
+                     dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Concrete random inputs matching input_specs (for smoke tests)."""
+    specs = input_specs(cfg, shape, dtype)
+    out: Dict[str, Any] = {}
+    for name, s in specs.items():
+        if name == "state":
+            out[name] = decoding.init_decode_state(cfg, shape.global_batch,
+                                                   shape.seq_len, dtype)
+        elif s.dtype == jnp.int32 and name in ("tokens", "targets"):
+            key, sub = jax.random.split(key)
+            out[name] = jax.random.randint(sub, s.shape, 0,
+                                           cfg.vocab_size, jnp.int32)
+        elif name == "lengths":
+            out[name] = jnp.full(s.shape, shape.seq_len - 1, jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            out[name] = jax.random.normal(sub, s.shape, s.dtype)
+    return out

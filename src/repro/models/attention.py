@@ -1,0 +1,120 @@
+"""Attention: GQA / MQA / sliding-window / cross-attention, with training
+(flash, KV streamed in fragments), prefill (returns the built KV cache) and
+decode (sequence-parallel partial-softmax combine) paths.
+
+Distributed decode is the model-level image of the paper's two-path design:
+KV fragments are the *large messages* (each shard consumes its KV slice from
+a staged buffer) and the per-shard (o, lse) partials are the *small messages*
+merged SRQ-style (`repro.kernels.ref.combine_partial_attention`)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..kernels import ops, ref
+from ..parallel.sharding import ParallelCtx
+from .layers import apply_rope
+
+
+def attn_init(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    d, ad, kvd = cfg.d_model, cfg.attn_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, ad), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, kvd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, kvd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (ad, d), dtype) * (ad ** -0.5),
+    }
+
+
+def _project_qkv(params: dict, x: jnp.ndarray, cfg: ArchConfig,
+                 positions: jnp.ndarray, rope: bool = True):
+    b, t, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, t, cfg.num_heads, cfg.hd)
+    k = (x @ params["wk"]).reshape(b, t, cfg.num_kv_heads, cfg.hd)
+    v = (x @ params["wv"]).reshape(b, t, cfg.num_kv_heads, cfg.hd)
+    if rope:
+        q = apply_rope(q, positions, cfg.hd, cfg.rope_fraction,
+                       cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.hd, cfg.rope_fraction,
+                       cfg.rope_theta)
+    return q, k, v
+
+
+def self_attention(params: dict, x: jnp.ndarray, cfg: ArchConfig,
+                   ctx: ParallelCtx,
+                   return_kv: bool = False):
+    """Training/prefill self-attention. x: [B, T, D]."""
+    b, t, _ = x.shape
+    positions = jnp.arange(t)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    # [B, H, T, hd] layout for the kernels
+    o = ops.flash_attention(q.transpose(0, 2, 1, 3),
+                            k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3),
+                            causal=True, window=cfg.sliding_window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.attn_dim)
+    out = o @ params["wo"]
+    if return_kv:
+        return out, (k, v)   # [B, T, Hkv, hd] — prefill cache build
+    return out
+
+
+def cross_attention(params: dict, x: jnp.ndarray, kv_src: jnp.ndarray,
+                    cfg: ArchConfig, ctx: ParallelCtx) -> jnp.ndarray:
+    """x: [B, T, D] attends over kv_src: [B, P, D] (patch embeddings)."""
+    b, t, _ = x.shape
+    p = kv_src.shape[1]
+    q = (x @ params["wq"]).reshape(b, t, cfg.num_heads, cfg.hd)
+    k = (kv_src @ params["wk"]).reshape(b, p, cfg.num_kv_heads, cfg.hd)
+    v = (kv_src @ params["wv"]).reshape(b, p, cfg.num_kv_heads, cfg.hd)
+    o = ops.flash_attention(q.transpose(0, 2, 1, 3),
+                            k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=False)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.attn_dim)
+    return o @ params["wo"]
+
+
+# --------------------------------------------------------------------------- #
+# Decode (one token, KV cache)
+# --------------------------------------------------------------------------- #
+def cache_update(cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                 k_new: jnp.ndarray, v_new: jnp.ndarray,
+                 lengths: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Insert one token per sequence. cache: [B, S, Hkv, hd]; ring-buffer
+    semantics (pos = len % S) support sliding-window caches."""
+    b, s = cache_k.shape[0], cache_k.shape[1]
+    pos = (lengths % s).astype(jnp.int32)
+    bidx = jnp.arange(b)
+    cache_k = cache_k.at[bidx, pos].set(k_new[:, 0])
+    cache_v = cache_v.at[bidx, pos].set(v_new[:, 0])
+    return cache_k, cache_v
+
+
+def decode_self_attention(params: dict, x: jnp.ndarray,
+                          cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                          lengths: jnp.ndarray, cfg: ArchConfig,
+                          ctx: ParallelCtx):
+    """x: [B, 1, D]; cache: [B, S, Hkv, hd]; lengths: [B] tokens already in
+    cache.  Returns (out [B,1,D], new_cache_k, new_cache_v).
+
+    When ``ctx`` has a mesh and the cache is sequence-sharded, XLA partitions
+    the softmax reduction; the (o, lse)-combine formulation below keeps that
+    reduction per-shard-local followed by a small combine (SRQ path)."""
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(params, x, cfg, lengths[:, None])
+    cache_k, cache_v = cache_update(cache_k, cache_v, k_new, v_new, lengths)
+    s = cache_k.shape[1]
+    # Ring-buffer validity: before wrap-around slots [0, len+1) hold data;
+    # after wrap every slot does.  SWA caches are allocated with S = window,
+    # so the ring itself enforces the sliding window.
+    valid_count = jnp.minimum(lengths + 1, s)
+    o, _lse = ref.decode_attention_naive(
+        q.reshape(b, cfg.num_heads, cfg.hd), cache_k, cache_v, valid_count)
+    out = o.reshape(b, 1, cfg.attn_dim) @ params["wo"]
+    return out, cache_k, cache_v

@@ -1,0 +1,260 @@
+"""Prefill and decode paths (serving): KV caches, SSM states, ring buffers.
+
+Decode state mirrors the parameter layout (pattern-stacked + remainder) so
+the decode step is the same ``lax.scan`` over units as training.  KV caches
+are ring buffers sized ``min(max_len, sliding_window)`` — a sliding-window
+arch at 500k context carries only its window (the Little's-law sizing).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels import ref as kref
+from ..parallel.sharding import ParallelCtx
+from . import attention as attn
+from . import ssm, xlstm
+from .layers import mlp_apply, rms_norm
+from .transformer import (embed_tokens, layer_kinds, segments, unembed,
+                          _shared_block)
+
+State = Dict[str, Any]
+
+
+def cache_len_for(cfg: ArchConfig, max_len: int) -> int:
+    if cfg.sliding_window:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+# --------------------------------------------------------------------------- #
+# state init
+# --------------------------------------------------------------------------- #
+def _layer_state(kind: str, cfg: ArchConfig, batch: int, s_cache: int,
+                 dtype) -> State:
+    st: State = {}
+    kv_shape = (batch, s_cache, cfg.num_kv_heads, cfg.hd)
+    if kind.startswith("attn") or kind == "mamba_attn":
+        st["kv"] = (jnp.zeros(kv_shape, dtype), jnp.zeros(kv_shape, dtype))
+    if kind == "attn_cross":
+        xshape = (batch, cfg.num_patches, cfg.num_kv_heads, cfg.hd)
+        st["xkv"] = (jnp.zeros(xshape, dtype), jnp.zeros(xshape, dtype))
+    if kind in ("mamba", "mamba_attn"):
+        st["mamba"] = ssm.mamba_state_init(cfg, batch, dtype)
+    if kind == "mlstm":
+        st["mlstm"] = xlstm.mlstm_state_init(cfg, batch)
+    if kind == "slstm":
+        st["slstm"] = xlstm.slstm_state_init(cfg, batch)
+    return st
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> State:
+    pattern, n_units, rem = segments(cfg)
+    s_cache = cache_len_for(cfg, max_len)
+
+    def stacked(kind):
+        one = _layer_state(kind, cfg, batch, s_cache, dtype)
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (n_units,) + l.shape).copy(), one)
+
+    return {
+        "pattern": tuple(stacked(k) for k in pattern),
+        "remainder": tuple(_layer_state(k, cfg, batch, s_cache, dtype)
+                           for k in rem),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# prefill
+# --------------------------------------------------------------------------- #
+def _ring_place(kv: jnp.ndarray, s_cache: int) -> jnp.ndarray:
+    """Place the last ``s_cache`` tokens of [B,T,...] into ring slots such
+    that token t sits at slot t % s_cache."""
+    t = kv.shape[1]
+    if t <= s_cache:
+        pad = [(0, 0)] * kv.ndim
+        pad[1] = (0, s_cache - t)
+        return jnp.pad(kv, pad)
+    tail = kv[:, -s_cache:]
+    return jnp.roll(tail, shift=t % s_cache, axis=1)
+
+
+def _prefill_layer(kind: str, p, x, cfg, ctx, shared, patches, s_cache):
+    st: State = {}
+    h = rms_norm(x, p["ln1"])
+    if kind.startswith("attn"):
+        y, (k, v) = attn.self_attention(p["attn"], h, cfg, ctx,
+                                        return_kv=True)
+        x = x + y
+        st["kv"] = (_ring_place(k, s_cache), _ring_place(v, s_cache))
+        if kind == "attn_cross":
+            x = x + attn.cross_attention(p["xattn"], rms_norm(x, p["ln_x"]),
+                                         patches, cfg, ctx)
+            b, np_, _ = patches.shape
+            xk = (patches @ p["xattn"]["wk"]).reshape(
+                b, np_, cfg.num_kv_heads, cfg.hd)
+            xv = (patches @ p["xattn"]["wv"]).reshape(
+                b, np_, cfg.num_kv_heads, cfg.hd)
+            st["xkv"] = (xk, xv)
+        h2 = rms_norm(x, p["ln2"])
+        if kind == "attn_moe":
+            from .moe import moe_apply
+            y2, _ = moe_apply(p["ffn"], h2, cfg, ctx)
+            x = x + y2
+        else:
+            x = x + mlp_apply(p["ffn"], h2, cfg.mlp)
+    elif kind in ("mamba", "mamba_attn"):
+        y, mst = ssm.mamba_apply(p["mamba"], h, cfg, ctx, return_state=True)
+        x = x + y
+        st["mamba"] = mst
+        if kind == "mamba_attn":
+            hs = rms_norm(x, shared["ln1"])
+            ys, (k, v) = attn.self_attention(shared["attn"], hs, cfg, ctx,
+                                             return_kv=True)
+            x = x + ys
+            x = x + mlp_apply(shared["ffn"], rms_norm(x, shared["ln2"]),
+                              cfg.mlp)
+            st["kv"] = (_ring_place(k, s_cache), _ring_place(v, s_cache))
+    elif kind == "mlstm":
+        y, mst = xlstm.mlstm_apply(p["mlstm"], h, cfg, ctx,
+                                   return_state=True)
+        x = x + y
+        st["mlstm"] = mst
+    elif kind == "slstm":
+        y, sst = xlstm.slstm_apply(p["slstm"], h, cfg, ctx,
+                                   return_state=True)
+        x = x + y
+        st["slstm"] = sst
+    return x, st
+
+
+def prefill(params, cfg: ArchConfig, ctx: ParallelCtx, tokens: jnp.ndarray,
+            patches: Optional[jnp.ndarray] = None, max_len: int = 0,
+            compute_dtype=jnp.bfloat16):
+    """Process the prompt; returns (last-position logits [B,V], state,
+    lengths [B]).  ``max_len`` sizes the decode cache (default: prompt len)."""
+    pattern, n_units, rem = segments(cfg)
+    t = tokens.shape[-1]
+    max_len = max_len or t
+    s_cache = cache_len_for(cfg, max_len)
+    cast = lambda tr: jax.tree.map(lambda w: w.astype(compute_dtype)
+                                   if w.dtype == jnp.float32 else w, tr)
+    x = embed_tokens(params, tokens, cfg, compute_dtype)
+    bsz = x.shape[0]
+    x = ctx.constrain(x, ctx.act_for(bsz))
+    if patches is not None:
+        patches = patches.astype(compute_dtype)
+    shared = cast(params.get("shared_attn"))
+
+    def scan_body(x, unit_params):
+        sts = []
+        for pos, kind in enumerate(pattern):
+            x, st = _prefill_layer(kind, cast(unit_params[pos]), x, cfg,
+                                   ctx, shared, patches, s_cache)
+            x = ctx.constrain(x, ctx.act_for(bsz))
+            sts.append(st)
+        return x, tuple(sts)
+
+    x, pat_state = jax.lax.scan(scan_body, x, params["pattern"])
+    rem_states = []
+    for p_l, kind in zip(params["remainder"],
+                         layer_kinds(cfg)[n_units * len(pattern):]):
+        x, st = _prefill_layer(kind, cast(p_l), x, cfg, ctx, shared,
+                               patches, s_cache)
+        rem_states.append(st)
+    logits = unembed(params, x[:, -1:, :], cfg)[:, 0]
+    lengths = jnp.full((tokens.shape[0],), t, jnp.int32)
+    return logits, {"pattern": pat_state, "remainder": tuple(rem_states)}, \
+        lengths
+
+
+# --------------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------------- #
+def _decode_layer(kind: str, p, st: State, x, lengths, cfg, ctx, shared):
+    new: State = {}
+    h = rms_norm(x, p["ln1"])
+    if kind.startswith("attn"):
+        y, ck, cv = attn.decode_self_attention(p["attn"], h, st["kv"][0],
+                                               st["kv"][1], lengths, cfg,
+                                               ctx)
+        x = x + y
+        new["kv"] = (ck, cv)
+        if kind == "attn_cross":
+            xk, xv = st["xkv"]
+            b = x.shape[0]
+            q = (rms_norm(x, p["ln_x"]) @ p["xattn"]["wq"]).reshape(
+                b, cfg.num_heads, cfg.hd)
+            np_ = xk.shape[1]
+            o, _ = kref.decode_attention_naive(
+                q, xk, xv, jnp.full((b,), np_, jnp.int32))
+            x = x + o.reshape(b, 1, cfg.attn_dim) @ p["xattn"]["wo"]
+            new["xkv"] = (xk, xv)
+        h2 = rms_norm(x, p["ln2"])
+        if kind == "attn_moe":
+            from .moe import moe_apply
+            y2, _ = moe_apply(p["ffn"], h2, cfg, ctx)
+            x = x + y2
+        else:
+            x = x + mlp_apply(p["ffn"], h2, cfg.mlp)
+    elif kind in ("mamba", "mamba_attn"):
+        y, mst = ssm.mamba_decode(p["mamba"], h, st["mamba"], cfg, ctx)
+        x = x + y
+        new["mamba"] = mst
+        if kind == "mamba_attn":
+            hs = rms_norm(x, shared["ln1"])
+            y2, ck, cv = attn.decode_self_attention(
+                shared["attn"], hs, st["kv"][0], st["kv"][1], lengths, cfg,
+                ctx)
+            x = x + y2
+            x = x + mlp_apply(shared["ffn"], rms_norm(x, shared["ln2"]),
+                              cfg.mlp)
+            new["kv"] = (ck, cv)
+    elif kind == "mlstm":
+        y, mst = xlstm.mlstm_decode(p["mlstm"], h, st["mlstm"], cfg, ctx)
+        x = x + y
+        new["mlstm"] = mst
+    elif kind == "slstm":
+        y, sst = xlstm.slstm_decode(p["slstm"], h, st["slstm"], cfg, ctx)
+        x = x + y
+        new["slstm"] = sst
+    return x, new
+
+
+def decode_step(params, cfg: ArchConfig, ctx: ParallelCtx, state: State,
+                tokens: jnp.ndarray, lengths: jnp.ndarray,
+                compute_dtype=jnp.bfloat16):
+    """One decode step. tokens: [B] (or [B,K] audio); lengths: [B] tokens
+    already in the cache.  Returns (logits [B,V], new_state)."""
+    pattern, n_units, rem = segments(cfg)
+    cast = lambda tr: jax.tree.map(lambda w: w.astype(compute_dtype)
+                                   if w.dtype == jnp.float32 else w, tr)
+    tok = tokens[..., None]        # [B,1] (or [B,K,1] audio)
+    x = embed_tokens(params, tok, cfg, compute_dtype)   # [B,1,D]
+    bsz = x.shape[0]
+    shared = cast(params.get("shared_attn"))
+
+    def scan_body(x, xs):
+        unit_params, unit_state = xs
+        new_states = []
+        for pos, kind in enumerate(pattern):
+            x, st = _decode_layer(kind, cast(unit_params[pos]),
+                                  unit_state[pos], x, lengths, cfg, ctx,
+                                  shared)
+            new_states.append(st)
+        return x, tuple(new_states)
+
+    x, new_pat = jax.lax.scan(scan_body, x,
+                              (params["pattern"], state["pattern"]))
+    new_rem = []
+    for p_l, st, kind in zip(params["remainder"], state["remainder"],
+                             layer_kinds(cfg)[n_units * len(pattern):]):
+        x, nst = _decode_layer(kind, cast(p_l), st, x, lengths, cfg, ctx,
+                               shared)
+        new_rem.append(nst)
+    logits = unembed(params, x, cfg)[:, 0]
+    return logits, {"pattern": new_pat, "remainder": tuple(new_rem)}

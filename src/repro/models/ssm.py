@@ -1,0 +1,116 @@
+"""Mamba2 block (SSD) for zamba2: projections + causal depthwise conv +
+chunked SSD scan + gated output.
+
+The chunked SSD scan (kernels/mamba2_ssd.py, ref.ssd_chunked_ref) is itself a
+Jet-style pipeline: sequence fragments stream through a recycled (N,P) state
+carry — the full state history never materializes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels import ops
+from ..parallel.sharding import ParallelCtx
+
+CONV_K = 4
+
+
+def mamba_dims(cfg: ArchConfig) -> Tuple[int, int, int, int, int]:
+    d_in = 2 * cfg.d_model
+    h = cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    return d_in, h, p, g, n
+
+
+def mamba_init(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    d_in, h, p, g, n = mamba_dims(cfg)
+    conv_ch = d_in + 2 * g * n
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    return {
+        "w_xbc": jax.random.normal(ks[0], (d, conv_ch), dtype) * s,
+        "w_z": jax.random.normal(ks[1], (d, d_in), dtype) * s,
+        "w_dt": jax.random.normal(ks[2], (d, h), dtype) * s,
+        "dt_bias": jnp.zeros((h,), dtype) + jnp.asarray(
+            jnp.log(jnp.expm1(0.05)), dtype),       # softplus^-1(0.05)
+        "a_log": jnp.log(jnp.linspace(1.0, 8.0, h)).astype(dtype),
+        "d_skip": jnp.ones((h,), dtype),
+        "conv_w": jax.random.normal(ks[3], (CONV_K, conv_ch), dtype) * 0.3,
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "w_out": jax.random.normal(ks[4], (d_in, d), dtype) * (d_in ** -0.5),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along T. x: [B, T, C]; w: [K, C].
+    ``state``: [B, K-1, C] left context (decode).  Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):, :]
+    return y, new_state
+
+
+def mamba_apply(params: dict, x: jnp.ndarray, cfg: ArchConfig,
+                ctx: ParallelCtx, return_state: bool = False):
+    """Training/prefill. x: [B, T, D] -> [B, T, D]."""
+    b, t, d = x.shape
+    d_in, h, p, g, n = mamba_dims(cfg)
+    xbc, conv_state = _causal_conv(x @ params["w_xbc"], params["conv_w"],
+                                   params["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_in].reshape(b, t, h, p)
+    bmat = xbc[..., d_in:d_in + g * n].reshape(b, t, g, n)
+    cmat = xbc[..., d_in + g * n:].reshape(b, t, g, n)
+    dt = jax.nn.softplus(x @ params["w_dt"] + params["dt_bias"])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    y, h_t = ops.ssd(xs, dt, a, bmat, cmat, chunk=min(256, t))
+    y = y + params["d_skip"][None, None, :, None] * xs
+    y = y.reshape(b, t, d_in) * jax.nn.silu(x @ params["w_z"])
+    out = y @ params["w_out"]
+    if return_state:
+        return out, (conv_state, h_t)
+    return out
+
+
+def mamba_decode(params: dict, x: jnp.ndarray, state, cfg: ArchConfig,
+                 ctx: ParallelCtx):
+    """One-token decode. x: [B, 1, D]; state = (conv_state [B,K-1,C],
+    h [B,H,N,P]) -> (out [B,1,D], new_state)."""
+    b = x.shape[0]
+    d_in, h, p, g, n = mamba_dims(cfg)
+    conv_state, h_ssm = state
+    xbc, conv_state = _causal_conv(x @ params["w_xbc"], params["conv_w"],
+                                   params["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)[:, 0]                       # [B, C]
+    xs = xbc[..., :d_in].reshape(b, h, p)
+    bm = xbc[..., d_in:d_in + g * n].reshape(b, g, n)
+    cm = xbc[..., d_in + g * n:].reshape(b, g, n)
+    bm = jnp.repeat(bm, h // g, axis=1)                # [B, H, N]
+    cm = jnp.repeat(cm, h // g, axis=1)
+    dt = jax.nn.softplus(x[:, 0] @ params["w_dt"] + params["dt_bias"])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)[..., None, None]           # [B, H, 1, 1]
+    h_new = h_ssm * decay + (dt[..., None, None] * bm[..., :, None] *
+                             xs[..., None, :].astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", cm.astype(jnp.float32), h_new)
+    y = y.astype(x.dtype) + params["d_skip"][None, :, None] * xs
+    y = y.reshape(b, 1, d_in) * jax.nn.silu(x @ params["w_z"])
+    return y @ params["w_out"], (conv_state, h_new)
+
+
+def mamba_state_init(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    d_in, h, p, g, n = mamba_dims(cfg)
+    conv_ch = d_in + 2 * g * n
+    return (jnp.zeros((batch, CONV_K - 1, conv_ch), dtype),
+            jnp.zeros((batch, h, n, p), jnp.float32))

@@ -1,0 +1,275 @@
+"""Generic decoder LM assembled from an ArchConfig.
+
+Covers all 10 assigned architectures with one machinery:
+  * layer *kinds* per position (attn_dense / attn_moe / attn_cross / mamba /
+    mamba_attn / mlstm / slstm) repeat with a pattern period (moe_every,
+    attn_every, slstm_every, cross_attn_every);
+  * parameters for one pattern unit are stacked over the repeat count and the
+    forward pass is a ``lax.scan`` over units (compact HLO — essential for
+    compiling 40+ dry-run cells on one CPU);
+  * a remainder segment handles non-divisible layer counts (zamba2: 38 = 6*6+2);
+  * zamba2's *shared* attention block has unstacked weights referenced by
+    every ``mamba_attn`` position (its KV caches are per-invocation).
+
+Three entry points: ``forward`` (train logits), ``prefill`` (logits + decode
+state), ``decode_step`` (one token with state).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..parallel.sharding import ParallelCtx
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm, xlstm
+from .layers import (cross_entropy, embed_init, init_rms, mlp_apply,
+                     mlp_init, rms_norm)
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# structure
+# --------------------------------------------------------------------------- #
+def layer_kinds(cfg: ArchConfig) -> List[str]:
+    kinds = []
+    for i in range(cfg.num_layers):
+        if cfg.xlstm:
+            kinds.append("slstm" if cfg.slstm_every and
+                         (i + 1) % cfg.slstm_every == 0 else "mlstm")
+        elif cfg.family in ("ssm", "hybrid"):
+            kinds.append("mamba_attn" if cfg.attn_every and
+                         (i + 1) % cfg.attn_every == 0 else "mamba")
+        elif cfg.cross_attn_every and (i + 1) % cfg.cross_attn_every == 0:
+            kinds.append("attn_cross")
+        elif cfg.is_moe_layer(i):
+            kinds.append("attn_moe")
+        else:
+            kinds.append("attn_dense")
+    return kinds
+
+
+def pattern_period(cfg: ArchConfig) -> int:
+    for c in (cfg.moe_every if cfg.num_experts else 0, cfg.attn_every,
+              cfg.slstm_every, cfg.cross_attn_every):
+        if c and c > 1:
+            return c
+    return 1
+
+
+def segments(cfg: ArchConfig) -> Tuple[List[str], int, List[str]]:
+    """(pattern_kinds, n_units, remainder_kinds)."""
+    kinds = layer_kinds(cfg)
+    period = pattern_period(cfg)
+    n_units = cfg.num_layers // period
+    return kinds[:period], n_units, kinds[n_units * period:]
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+def _init_layer(kind: str, key, cfg: ArchConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Params = {"ln1": init_rms(d, dtype)}
+    if kind.startswith("attn"):
+        p["attn"] = attn.attn_init(ks[0], cfg, dtype)
+        if kind == "attn_cross":
+            p["ln_x"] = init_rms(d, dtype)
+            p["xattn"] = attn.attn_init(ks[1], cfg, dtype)
+        p["ln2"] = init_rms(d, dtype)
+        p["ffn"] = (moe_mod.moe_init(ks[2], cfg, dtype)
+                    if kind == "attn_moe"
+                    else mlp_init(ks[2], d, cfg.d_ff, cfg.mlp, dtype))
+    elif kind in ("mamba", "mamba_attn"):
+        p["mamba"] = ssm.mamba_init(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["mlstm"] = xlstm.mlstm_init(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["slstm"] = xlstm.slstm_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> Params:
+    pattern, n_units, rem = segments(cfg)
+    keys = jax.random.split(key, 8)
+    params: Params = {}
+    if cfg.num_codebooks:
+        params["embed"] = embed_init(keys[0], cfg.num_codebooks *
+                                     cfg.vocab_size, cfg.d_model, dtype
+                                     ).reshape(cfg.num_codebooks,
+                                               cfg.vocab_size, cfg.d_model)
+    else:
+        params["embed"] = embed_init(keys[0], cfg.vocab_size, cfg.d_model,
+                                     dtype)
+    # stacked pattern params: tuple over pattern positions, leaves [n_units,.]
+    unit_keys = jax.random.split(keys[1], n_units)
+    params["pattern"] = tuple(
+        jax.vmap(lambda k, kind=kind: _init_layer(
+            kind, jax.random.fold_in(k, pos), cfg, dtype))(unit_keys)
+        for pos, kind in enumerate(pattern))
+    params["remainder"] = tuple(
+        _init_layer(kind, jax.random.fold_in(keys[2], i), cfg, dtype)
+        for i, kind in enumerate(rem))
+    if any(k == "mamba_attn" for k in pattern + rem):
+        # zamba2 shared transformer block (attn + mlp), weights shared
+        params["shared_attn"] = {
+            "ln1": init_rms(cfg.d_model, dtype),
+            "attn": attn.attn_init(keys[3], cfg, dtype),
+            "ln2": init_rms(cfg.d_model, dtype),
+            "ffn": mlp_init(keys[4], cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+        }
+    params["final_norm"] = init_rms(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(keys[5], cfg.vocab_size, cfg.d_model,
+                                       dtype).T
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# per-layer application
+# --------------------------------------------------------------------------- #
+def _shared_block(shared: Params, x, cfg, ctx):
+    x = x + attn.self_attention(shared["attn"],
+                                rms_norm(x, shared["ln1"]), cfg, ctx)
+    x = x + mlp_apply(shared["ffn"], rms_norm(x, shared["ln2"]), cfg.mlp)
+    return x
+
+
+def _apply_layer(kind: str, p: Params, x, cfg, ctx, shared, patches, aux):
+    # name the TP-psum'd sublayer outputs so the "layer_out" remat policy
+    # can save exactly these (backward replay then skips re-running the
+    # forward all-reduces — EXPERIMENTS.md §Perf)
+    mark = lambda v: checkpoint_name(v, "layer_out")
+    h = rms_norm(x, p["ln1"])
+    if kind.startswith("attn"):
+        x = x + mark(attn.self_attention(p["attn"], h, cfg, ctx))
+        if kind == "attn_cross":
+            x = x + mark(attn.cross_attention(p["xattn"],
+                                              rms_norm(x, p["ln_x"]),
+                                              patches, cfg, ctx))
+        h2 = rms_norm(x, p["ln2"])
+        if kind == "attn_moe":
+            y, a = moe_mod.moe_apply(p["ffn"], h2, cfg, ctx)
+            aux = {k: aux[k] + a[k] for k in aux}
+            x = x + mark(y)
+        else:
+            x = x + mark(mlp_apply(p["ffn"], h2, cfg.mlp))
+    elif kind in ("mamba", "mamba_attn"):
+        x = x + ssm.mamba_apply(p["mamba"], h, cfg, ctx)
+        if kind == "mamba_attn":
+            x = _shared_block(shared, x, cfg, ctx)
+    elif kind == "mlstm":
+        x = x + xlstm.mlstm_apply(p["mlstm"], h, cfg, ctx)
+    elif kind == "slstm":
+        x = x + xlstm.slstm_apply(p["slstm"], h, cfg, ctx)
+    return x, aux
+
+
+AUX0 = {"lb_loss": jnp.float32(0.0), "overflow": jnp.float32(0.0)}
+
+
+def _remat(fn, ctx: ParallelCtx):
+    if ctx.remat == "none":
+        return fn
+    if ctx.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if ctx.remat == "layer_out":
+        # save the TP-psum'd sublayer outputs only: backward replay skips
+        # the forward all-reduces at ~2 saved activations per layer
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names(
+                "layer_out"))
+    return jax.checkpoint(fn)
+
+
+# --------------------------------------------------------------------------- #
+# forward (train)
+# --------------------------------------------------------------------------- #
+def embed_tokens(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,
+                 dtype) -> jnp.ndarray:
+    if cfg.num_codebooks:
+        # tokens: [B, K, T] — sum the codebook embeddings (EnCodec stub)
+        parts = [jnp.take(params["embed"][k], tokens[:, k], axis=0)
+                 for k in range(cfg.num_codebooks)]
+        return sum(parts).astype(dtype)
+    return jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+
+
+def unembed(params: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    x = rms_norm(x, params["final_norm"])
+    if cfg.tie_embeddings:
+        table = params["embed"]
+        if cfg.num_codebooks:
+            table = table[0]
+        return x @ table.T.astype(x.dtype)
+    return x @ params["unembed"].astype(x.dtype)
+
+
+def forward(params: Params, cfg: ArchConfig, ctx: ParallelCtx,
+            tokens: jnp.ndarray, patches: Optional[jnp.ndarray] = None,
+            compute_dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence forward -> (logits [B,T,V], aux)."""
+    pattern, n_units, rem = segments(cfg)
+    cast = lambda t: jax.tree.map(lambda w: w.astype(compute_dtype)
+                                  if w.dtype == jnp.float32 else w, t)
+    x = embed_tokens(params, tokens, cfg, compute_dtype)
+    bsz = x.shape[0]
+    x = ctx.constrain(x, ctx.act_for(bsz))
+    if patches is not None:
+        patches = patches.astype(compute_dtype)
+    shared = cast(params.get("shared_attn"))
+
+    # bf16_weight_gather: cast the stacked pattern tree to compute dtype
+    # BEFORE the scan, while every leaf is still in its home (FSDP/TP)
+    # sharding — the per-unit FSDP all-gathers inside the scan then move
+    # 2-byte values instead of 4-byte masters (EXPERIMENTS.md §Perf).
+    pattern_params = cast(params["pattern"]) if ctx.bf16_weight_gather \
+        else params["pattern"]
+    body_cast = (lambda t: t) if ctx.bf16_weight_gather else cast
+
+    def unit_body(x, unit_params):
+        aux = dict(AUX0)
+        for pos, kind in enumerate(pattern):
+            x, aux = _apply_layer(kind, body_cast(unit_params[pos]), x, cfg,
+                                  ctx, shared, patches, aux)
+            x = ctx.constrain(x, ctx.act_for(bsz))
+        return x, aux
+
+    def scan_body(carry, unit_params):
+        x, aux_sum = carry
+        x, aux = _remat(unit_body, ctx)(x, unit_params)
+        return (x, {k: aux_sum[k] + aux[k] for k in aux_sum}), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, dict(AUX0)), pattern_params)
+    for p_l, kind in zip(params["remainder"],
+                         layer_kinds(cfg)[n_units * len(pattern):]):
+        x, aux = _apply_layer(kind, cast(p_l), x, cfg, ctx, shared, patches,
+                              aux)
+    logits = unembed(params, x, cfg)   # unembed casts tables to x.dtype
+    logits = ctx.constrain(logits, P(ctx.batch_axes_for(bsz) or None, None,
+                                     ctx.model_axis))
+    return logits, aux
+
+
+def loss_fn(params: Params, cfg: ArchConfig, ctx: ParallelCtx,
+            batch: Dict[str, jnp.ndarray],
+            compute_dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux = forward(params, cfg, ctx, batch["tokens"],
+                          batch.get("patches"), compute_dtype)
+    loss = cross_entropy(logits, batch["targets"])
+    if cfg.num_experts:
+        loss = loss + 0.01 * aux["lb_loss"] / max(1, cfg.num_layers)
+    metrics = {"loss": loss, **aux}
+    return loss, metrics

@@ -1,0 +1,197 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, sequential recurrence with block-diagonal recurrent weights).
+
+The chunked mLSTM is mathematically a gated linear attention; like the SSD
+kernel it streams sequence fragments through a recycled (Dk,Dv) state carry
+(the Jet pipeline shape).  Simplification vs. the paper's stabilized
+exponential gating: input/forget gates use sigmoid (bounded, so no max-
+stabilizer state is required); recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..parallel.sharding import ParallelCtx
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int]:
+    h = cfg.num_heads
+    dh = cfg.hd
+    return h, dh
+
+
+# --------------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------------- #
+def mlstm_init(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    h, dh = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, h * dh), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, h * dh), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, h * dh), dtype) * s,
+        "wo": jax.random.normal(ks[3], (h * dh, d), dtype) * ((h * dh) ** -0.5),
+        "w_if": jax.random.normal(ks[4], (d, 2 * h), dtype) * s,
+        "if_bias": jnp.concatenate([jnp.full((h,), -2.0),
+                                    jnp.full((h,), 3.0)]).astype(dtype),
+    }
+
+
+def mlstm_apply(params: dict, x: jnp.ndarray, cfg: ArchConfig,
+                ctx: ParallelCtx, chunk: int = 128,
+                return_state: bool = False):
+    """Chunk-parallel mLSTM. x: [B, T, D]."""
+    b, t, d = x.shape
+    h, dh = _dims(cfg)
+    L = min(chunk, t)
+    assert t % L == 0
+    nc = t // L
+    q = (x @ params["wq"]).reshape(b, t, h, dh).astype(jnp.float32) \
+        * (dh ** -0.5)
+    k = (x @ params["wk"]).reshape(b, t, h, dh).astype(jnp.float32)
+    v = (x @ params["wv"]).reshape(b, t, h, dh).astype(jnp.float32)
+    gates = x @ params["w_if"] + params["if_bias"]
+    ig = jax.nn.sigmoid(gates[..., :h].astype(jnp.float32))   # [B,T,H]
+    lf = jax.nn.log_sigmoid(gates[..., h:].astype(jnp.float32))
+
+    qc = q.reshape(b, nc, L, h, dh)
+    kc = k.reshape(b, nc, L, h, dh)
+    vc = v.reshape(b, nc, L, h, dh)
+    ic = ig.reshape(b, nc, L, h)
+    fc = lf.reshape(b, nc, L, h)
+
+    def step(carry, inp):
+        cmat, nvec = carry                  # [B,H,Dk,Dv], [B,H,Dk]
+        qq, kk, vv, ii, ff = inp
+        cum = jnp.cumsum(ff, axis=1)        # [B,L,H]
+        seg = cum[:, :, None, :] - cum[:, None, :, :]
+        tril = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+        dec = jnp.where(tril, jnp.exp(seg), 0.0) * ii[:, None, :, :]
+        sc = jnp.einsum("blhd,bmhd->blmh", qq, kk) * dec
+        num = jnp.einsum("blmh,bmhv->blhv", sc, vv)
+        den = sc.sum(axis=2)                 # [B,L,H]
+        dq = jnp.exp(cum)
+        num = num + dq[..., None] * jnp.einsum("blhk,bhkv->blhv", qq, cmat)
+        den = den + dq * jnp.einsum("blhk,bhk->blh", qq, nvec)
+        y = num / jnp.maximum(jnp.abs(den)[..., None], 1.0)
+        to_end = jnp.exp(cum[:, -1:, :] - cum) * ii      # [B,L,H]
+        cmat = (jnp.exp(cum[:, -1, :])[..., None, None] * cmat +
+                jnp.einsum("blh,blhk,blhv->bhkv", to_end, kk, vv))
+        nvec = (jnp.exp(cum[:, -1, :])[..., None] * nvec +
+                jnp.einsum("blh,blhk->bhk", to_end, kk))
+        return (cmat, nvec), y
+
+    init = (jnp.zeros((b, h, dh, dh), jnp.float32),
+            jnp.zeros((b, h, dh), jnp.float32))
+    (cmat, nvec), ys = jax.lax.scan(
+        step, init, (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+                     vc.transpose(1, 0, 2, 3, 4), ic.transpose(1, 0, 2, 3),
+                     fc.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h * dh).astype(x.dtype)
+    out = y @ params["wo"]
+    if return_state:
+        return out, (cmat, nvec)
+    return out
+
+
+def mlstm_decode(params: dict, x: jnp.ndarray, state, cfg: ArchConfig,
+                 ctx: ParallelCtx):
+    """x: [B,1,D]; state=(C [B,H,Dk,Dv], n [B,H,Dk])."""
+    b = x.shape[0]
+    h, dh = _dims(cfg)
+    cmat, nvec = state
+    q = (x[:, 0] @ params["wq"]).reshape(b, h, dh).astype(jnp.float32) \
+        * (dh ** -0.5)
+    k = (x[:, 0] @ params["wk"]).reshape(b, h, dh).astype(jnp.float32)
+    v = (x[:, 0] @ params["wv"]).reshape(b, h, dh).astype(jnp.float32)
+    gates = x[:, 0] @ params["w_if"] + params["if_bias"]
+    ig = jax.nn.sigmoid(gates[..., :h].astype(jnp.float32))
+    fg = jax.nn.sigmoid(gates[..., h:].astype(jnp.float32))
+    cmat = fg[..., None, None] * cmat + \
+        ig[..., None, None] * k[..., :, None] * v[..., None, :]
+    nvec = fg[..., None] * nvec + ig[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, cmat)
+    den = jnp.einsum("bhk,bhk->bh", q, nvec)
+    y = num / jnp.maximum(jnp.abs(den)[..., None], 1.0)
+    out = y.reshape(b, 1, h * dh).astype(x.dtype) @ params["wo"]
+    return out, (cmat, nvec)
+
+
+def mlstm_state_init(cfg: ArchConfig, batch: int):
+    h, dh = _dims(cfg)
+    return (jnp.zeros((batch, h, dh, dh), jnp.float32),
+            jnp.zeros((batch, h, dh), jnp.float32))
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------------- #
+def slstm_init(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    h, dh = _dims(cfg)
+    ks = jax.random.split(key, 3)
+    s = d ** -0.5
+    return {
+        # input projections for (z, i, f, o)
+        "w_x": jax.random.normal(ks[0], (d, 4 * d), dtype) * s,
+        # block-diagonal recurrent weights, one [Dh, 4Dh] block per head
+        "r_h": jax.random.normal(ks[1], (h, dh, 4 * dh), dtype) * (dh ** -0.5),
+        "bias": jnp.zeros((4 * d,), dtype),
+        "wo": jax.random.normal(ks[2], (d, d), dtype) * s,
+    }
+
+
+def _slstm_cell(params, cfg, xproj_t, carry):
+    """One recurrent step. xproj_t: [B, 4D]; carry = (hidden, c, n)."""
+    h_heads, dh = _dims(cfg)
+    hidden, c, n = carry                     # [B,D], [B,D], [B,D]
+    b = hidden.shape[0]
+    hh = hidden.reshape(b, h_heads, dh)
+    rec = jnp.einsum("bhk,hkm->bhm", hh, params["r_h"]).reshape(
+        b, 4 * cfg.d_model)
+    za, ia, fa, oa = jnp.split(xproj_t + rec + params["bias"], 4, axis=-1)
+    z = jnp.tanh(za)
+    i = jax.nn.sigmoid(ia)
+    f = jax.nn.sigmoid(fa)
+    o = jax.nn.sigmoid(oa)
+    c = f * c + i * z
+    n = f * n + i
+    hidden = o * c / jnp.maximum(jnp.abs(n), 1.0)
+    return hidden, c, n
+
+
+def slstm_apply(params: dict, x: jnp.ndarray, cfg: ArchConfig,
+                ctx: ParallelCtx, return_state: bool = False):
+    """Sequential sLSTM. x: [B, T, D] (scan over T — inherently serial)."""
+    b, t, d = x.shape
+    xproj = x @ params["w_x"]                # [B, T, 4D]
+
+    def step(carry, xt):
+        carry = _slstm_cell(params, cfg, xt, carry)
+        return carry, carry[0]
+
+    init = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(3))
+    carry, hs = jax.lax.scan(step, init, xproj.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype) @ params["wo"]
+    if return_state:
+        return y, carry
+    return y
+
+
+def slstm_decode(params: dict, x: jnp.ndarray, state, cfg: ArchConfig,
+                 ctx: ParallelCtx):
+    xproj = x[:, 0] @ params["w_x"]
+    carry = _slstm_cell(params, cfg, xproj, state)
+    y = carry[0][:, None, :].astype(x.dtype) @ params["wo"]
+    return y, carry
+
+
+def slstm_state_init(cfg: ArchConfig, batch: int):
+    return tuple(jnp.zeros((batch, cfg.d_model), jnp.float32)
+                 for _ in range(3))

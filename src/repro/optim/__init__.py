@@ -1,0 +1,4 @@
+"""Optimizers: AdamW (+8-bit moments), schedules."""
+from .adamw import OptConfig, global_norm, init, schedule, update
+
+__all__ = ["OptConfig", "global_norm", "init", "schedule", "update"]

@@ -1,0 +1,140 @@
+"""Jet staged collectives: RDCA applied across chips.
+
+The paper's receive path keeps DRAM out of the datapath by having consumers
+eat fragments straight from a small recycled cache pool.  The TPU analogue:
+never materialize the all-gathered operand in HBM — pass shards around a ring
+(`ppermute`) and have the MXU consume each shard the step it arrives, with at
+most ``window`` fragments in flight (the paper's in-flight window).
+
+Primitives (all used *inside* shard_map):
+  * ring_allgather_matmul    — y = x @ W, W sharded on the contraction dim
+  * ring_matmul_reduce_scatter — y_shard = (x @ W) reduce-scattered
+  * windowed_allgather       — chunked all-gather with bounded in-flight bytes
+  * srq_combine              — small-message combine for (o, lse) partials
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _ring_perm(axis_name: str, n: int):
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def ring_allgather_matmul(x: jnp.ndarray, w_shard: jnp.ndarray,
+                          axis_name: str, axis_size: int,
+                          frags: int = 1) -> jnp.ndarray:
+    """y = x @ W_full where W is sharded on dim 0 (contraction) over
+    ``axis_name``.  x: [..., D] (full D locally); w_shard: [D/m, F].
+
+    Each ring step consumes the currently-held W shard against the matching
+    x slice while the next shard travels — W_full never exists.  ``frags``
+    further fragments each shard (the paper's <=256 KB READ fragments) to
+    shrink the staging footprint; the Pallas staged_matmul plays the same
+    game inside one chip.
+    """
+    m = axis_size
+    r = jax.lax.axis_index(axis_name)
+    dk = w_shard.shape[0]
+    perm = _ring_perm(axis_name, m)
+
+    def step(carry, i):
+        y, w_cur = carry
+        src = (r - i) % m                     # owner of w_cur after i hops
+        xs = jax.lax.dynamic_slice_in_dim(x, src * dk, dk, axis=x.ndim - 1)
+        if frags > 1:
+            fk = dk // frags
+            for f in range(frags):            # fragment-granular recycle
+                y = y + jax.lax.dynamic_slice_in_dim(
+                    xs, f * fk, fk, axis=x.ndim - 1) @ \
+                    jax.lax.dynamic_slice_in_dim(w_cur, f * fk, fk, 0)
+        else:
+            y = y + xs @ w_cur
+        w_nxt = jax.lax.ppermute(w_cur, axis_name, perm)
+        return (y, w_nxt), None
+
+    y0 = jnp.zeros(x.shape[:-1] + (w_shard.shape[1],),
+                   jnp.promote_types(x.dtype, w_shard.dtype))
+    (y, _), _ = jax.lax.scan(step, (y0, w_shard), jnp.arange(m))
+    return y.astype(x.dtype)
+
+
+def ring_reduce_scatter(y_partial: jnp.ndarray, axis_name: str,
+                        axis_size: int) -> jnp.ndarray:
+    """Ring reduce-scatter over the last axis.
+
+    ``y_partial``: [..., F] per-rank partial sums (e.g. after a TP matmul
+    whose contraction dim was sharded).  Returns the summed shard
+    [..., F/m] owned by this rank.  The accumulating fragment rides the
+    ring — the full summed [..., F] tensor never exists on any chip
+    (memory out of the datapath).
+    """
+    m = axis_size
+    r = jax.lax.axis_index(axis_name)
+    perm = _ring_perm(axis_name, m)
+    fk = y_partial.shape[-1] // m
+    ax = y_partial.ndim - 1
+
+    def contribution(c):
+        return jax.lax.dynamic_slice_in_dim(y_partial, c * fk, fk, axis=ax)
+
+    # chunk c starts at rank (c+1)%m and lands fully-summed at rank c
+    acc = contribution((r - 1) % m).astype(jnp.float32)
+
+    def step(acc, i):
+        acc = jax.lax.ppermute(acc, axis_name, perm)
+        c = (r - 1 - (i + 1)) % m
+        return acc + contribution(c), None
+
+    acc, _ = jax.lax.scan(step, acc, jnp.arange(m - 1))
+    return acc.astype(y_partial.dtype)
+
+
+def windowed_allgather(x_shard: jnp.ndarray, axis_name: str, axis_size: int,
+                       window: int = 4) -> jnp.ndarray:
+    """Chunked ring all-gather with at most ``window`` fragments in flight.
+
+    Functionally identical to lax.all_gather(tiled); structurally it is the
+    receiver-driven READ: fragments arrive one ring hop per step and are
+    written into the local assembly buffer.  ``window`` bounds in-flight
+    fragments (XLA's scheduler sees ``window`` independent ppermute chains).
+    """
+    m = axis_size
+    r = jax.lax.axis_index(axis_name)
+    perm = _ring_perm(axis_name, m)
+    n0 = x_shard.shape[0]
+    out = jnp.zeros((m * n0,) + x_shard.shape[1:], x_shard.dtype)
+    out = jax.lax.dynamic_update_slice_in_dim(out, x_shard, r * n0, 0)
+    # split each shard into `window` fragments; run `window` interleaved rings
+    frag = max(1, n0 // window)
+    bufs = [jax.lax.dynamic_slice_in_dim(x_shard, f * frag,
+                                         min(frag, n0 - f * frag), 0)
+            for f in range(min(window, -(-n0 // frag)))]
+
+    for i in range(m - 1):
+        new_bufs = []
+        for f, b in enumerate(bufs):
+            b = jax.lax.ppermute(b, axis_name, perm)
+            src = (r - i - 1) % m
+            out = jax.lax.dynamic_update_slice_in_dim(
+                out, b, src * n0 + f * frag, 0)
+            new_bufs.append(b)
+        bufs = new_bufs
+    return out
+
+
+def srq_combine(o_part: jnp.ndarray, lse_part: jnp.ndarray,
+                axis_name: str) -> jnp.ndarray:
+    """Distributed-decode small-message combine: all-gather per-shard
+    (o, lse) tuples (a few KB — the SRQ path) and merge with stable softmax
+    weights.  o_part: [B,H,D]; lse_part: [B,H]."""
+    o_all = jax.lax.all_gather(o_part, axis_name)        # [m,B,H,D]
+    lse_all = jax.lax.all_gather(lse_part, axis_name)    # [m,B,H]
+    m = lse_all.max(axis=0, keepdims=True)
+    w = jnp.exp(lse_all - m)
+    w = w / jnp.maximum(w.sum(axis=0, keepdims=True), 1e-30)
+    return (o_all * w[..., None]).sum(axis=0)

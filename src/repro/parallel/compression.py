@@ -1,0 +1,93 @@
+"""Gradient compression for cross-pod sync: blockwise-int8 with error
+feedback (EF21-style).  At 512+ chips the pod-to-pod links are the scarcest
+resource; quantizing the inter-pod all-reduce to int8 cuts that traffic 4x
+while error feedback keeps the optimizer unbiased in the long run.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_flat(x: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise symmetric int8. Returns (q [N/B, B] int8, scale [N/B])."""
+    flat, _ = _pad_flat(x)
+    blocks = flat.reshape(-1, BLOCK).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    shape, dtype=jnp.float32) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def quantize_int8_rowwise(x: jnp.ndarray) -> Tuple[jnp.ndarray,
+                                                   jnp.ndarray]:
+    """Symmetric int8 with one scale per last-dim row — NO reshape.
+
+    Keeping the parameter's shape (q) and its leading dims (scale) means
+    the quantized optimizer state carries the parameter's sharding
+    verbatim.  The flat ``[-1, 256]`` layout of :func:`quantize_int8`
+    forced the SPMD partitioner into full-tensor rematerialization when a
+    leaf was sharded on interior dims (e.g. llama4 expert weights
+    [units, E, D, F] sharded (model, data)): ~483 GB of all-gather per
+    tensor per step.  Row-wise scales eliminate that entirely.
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)[..., None]
+    q = jnp.clip(jnp.round(xf / safe), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_rowwise(q: jnp.ndarray, scale: jnp.ndarray,
+                            dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def compressed_psum(x: jnp.ndarray, err: jnp.ndarray, axis_name: str
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-feedback compressed all-reduce (mean) over ``axis_name``.
+
+    Returns (mean_of_dequantized, new_error).  The wire format IS int8:
+    each rank all-gathers its int8 payload plus one f32 scale per last-dim
+    row (~3.9x less traffic than an f32 all-reduce), then dequantizes and
+    averages locally.  Error feedback keeps the long-run mean unbiased."""
+    target = x + err
+    q, scale = quantize_int8_rowwise(target)
+    deq = dequantize_int8_rowwise(q, scale)
+    new_err = target - deq
+    # int8 on the wire
+    q_all = jax.lax.all_gather(q, axis_name)          # [n, ...] int8
+    s_all = jax.lax.all_gather(scale, axis_name)      # [n, ...] f32 rows
+    deq_all = q_all.astype(jnp.float32) * s_all[..., None]
+    return jnp.mean(deq_all, axis=0), new_err
+
+
+def compression_ratio(shape) -> float:
+    n = 1
+    for s in shape:
+        n *= s
+    raw = n * 4
+    comp = n * 1 + (-(-n // BLOCK)) * 4
+    return raw / comp

@@ -1,0 +1,79 @@
+"""GPipe-style pipeline parallelism over the ``pod`` axis.
+
+The multi-pod mesh's default use of ``pod`` is hierarchical data parallel
+(DESIGN.md §4).  Alternatively the two pods can run as two pipeline
+stages: each pod holds half the layer stack and microbatch activations
+hand off over the cross-pod links via ``ppermute`` — a *far* smaller
+cross-pod payload than DP's gradient all-reduce when layers are wide
+(activations [B_micro, T, D] vs parameter-sized gradients).
+
+This is the paper's large-message story applied across pods: the
+inter-stage activation is the READ payload, the pipeline register is the
+single-slot staging buffer, and the microbatch count bounds in-flight
+work exactly like the in-flight-bytes window.
+
+Autodiff: ``jax.grad`` differentiates straight through the schedule
+(the transpose of ``ppermute`` is the reversed permutation), yielding
+GPipe's synchronous backward.  Combine with ``jax.checkpoint`` around
+``stage_fn`` for activation memory ~ O(microbatches) per stage.
+
+Off by default; exercised by tests/multidev_driver.py.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def stage_index(axis_name: str) -> jnp.ndarray:
+    return jax.lax.axis_index(axis_name)
+
+
+def gpipe(stage_fn: Callable, x_micro: jnp.ndarray, axis_name: str,
+          n_stages: int) -> jnp.ndarray:
+    """Run ``stage_fn`` as an ``n_stages``-deep pipeline (inside shard_map).
+
+    ``stage_fn(x) -> y`` applies THIS device's stage (it closes over the
+    local stage parameters; activations keep one shape across stages).
+    ``x_micro``: [M, ...] microbatches, replicated over ``axis_name``.
+    Returns [M, ...] final-stage outputs, valid on the last stage's rank
+    (use :func:`broadcast_from_last` to make them SPMD-uniform).
+    """
+    m = x_micro.shape[0]
+    r = jax.lax.axis_index(axis_name)
+    fwd = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def tick(reg, t):
+        # stage 0 ingests microbatch t; others take the pipeline register
+        mb = jax.lax.dynamic_index_in_dim(
+            x_micro, jnp.clip(t, 0, m - 1), 0, keepdims=False)
+        inp = jnp.where(r == 0, mb, reg)
+        out = stage_fn(inp)
+        # hand off to the next stage (last stage's send is dropped)
+        reg_next = jax.lax.ppermute(out, axis_name, fwd)
+        return reg_next, out
+
+    _, emits = jax.lax.scan(tick, jnp.zeros_like(x_micro[0]),
+                            jnp.arange(m + n_stages - 1))
+    # the last stage emits microbatch k at tick k + (n_stages - 1)
+    return emits[n_stages - 1:]
+
+
+def broadcast_from_last(y: jnp.ndarray, axis_name: str,
+                        n_stages: int) -> jnp.ndarray:
+    """Make the final-stage output uniform across the pipeline axis."""
+    r = jax.lax.axis_index(axis_name)
+    mask = (r == n_stages - 1).astype(y.dtype)
+    return jax.lax.psum(y * mask, axis_name)
+
+
+def stack_stages(params_tree, n_stages: int):
+    """Split a [L, ...]-stacked layer tree into [S, L/S, ...] stage
+    stacks (shard dim 0 over the pipeline axis in shard_map in_specs)."""
+    def split(leaf):
+        l = leaf.shape[0]
+        assert l % n_stages == 0, f"layers {l} % stages {n_stages} != 0"
+        return leaf.reshape((n_stages, l // n_stages) + leaf.shape[1:])
+    return jax.tree.map(split, params_tree)

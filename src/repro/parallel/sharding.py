@@ -1,0 +1,139 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP) for the production
+mesh, MaxText-style.
+
+Mesh axes:
+  * ``pod``   — data parallel across pods (multi-pod mesh only)
+  * ``data``  — data parallel + FSDP (ZeRO-3 parameter/optimizer sharding)
+  * ``model`` — tensor parallel (heads/ff), expert parallel (MoE),
+                sequence parallel (decode KV)
+
+Logical axes used by the model code:
+
+  batch        -> (pod, data)         activations
+  seq          -> None (train) / model (decode KV: sequence parallel)
+  embed        -> None                activation feature dim
+  heads        -> model               attention q heads
+  kv_heads     -> model-if-divisible  (else replicated; SP covers decode)
+  mlp          -> model               FFN hidden
+  expert       -> model               MoE expert dim
+  vocab        -> model               embedding/unembedding vocab shards
+  fsdp         -> data                the non-TP dim of every weight
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ParallelCtx:
+    """Everything the model needs to know about distribution.
+
+    ``mesh=None`` means single-device eager execution (unit tests); all
+    constraint application becomes a no-op and MoE uses its dense reference
+    path unless ``force_ep`` is set.
+    """
+    mesh: Optional[Mesh] = None
+    data_axes: Tuple[str, ...] = ("data",)   # ("pod","data") multi-pod
+    model_axis: str = "model"
+    fsdp: bool = True                        # ZeRO-3 parameter sharding
+    seq_parallel_decode: bool = True
+    use_ep: bool = True                      # shard_map expert parallelism
+    remat: str = "full"                      # full | dots | none
+    moe_capacity_factor: Optional[float] = None
+    # staged (jet) collectives toggle for the hillclimbed configs
+    jet_collectives: bool = False
+    jet_chunk_bytes: int = 256 << 10         # READ fragment size (paper)
+    jet_window: int = 4                      # in-flight fragments
+    # perf-variant flags (EXPERIMENTS.md §Perf). Defaults preserve the
+    # paper-faithful baseline; the dry-run --variant switch flips them.
+    bf16_weight_gather: bool = False         # cast params to compute dtype
+    #                                          BEFORE FSDP gathers (2B wire)
+
+    # ---- helpers -------------------------------------------------------- #
+    @property
+    def have_mesh(self) -> bool:
+        return self.mesh is not None
+
+    def axis_size(self, name: str) -> int:
+        if not self.have_mesh:
+            return 1
+        return self.mesh.shape[name]
+
+    @property
+    def model_size(self) -> int:
+        return self.axis_size(self.model_axis) if self.have_mesh else 1
+
+    @property
+    def dp_size(self) -> int:
+        if not self.have_mesh:
+            return 1
+        s = 1
+        for a in self.data_axes:
+            s *= self.axis_size(a)
+        return s
+
+    def _div(self, n: int, axis: Optional[str]) -> bool:
+        return axis is not None and self.have_mesh and \
+            n % self.axis_size(axis) == 0
+
+    # ---- PartitionSpecs -------------------------------------------------- #
+    def batch_axes_for(self, b: int) -> Tuple[str, ...]:
+        """Largest prefix-combination of data axes that divides batch ``b``
+        (batch=1 long-context decode falls back to replication)."""
+        if not self.have_mesh:
+            return ()
+        axes = []
+        prod = 1
+        for a in self.data_axes:
+            prod *= self.axis_size(a)
+            if b % prod == 0:
+                axes.append(a)
+            else:
+                break
+        return tuple(axes)
+
+    def act_for(self, b: int, trailing: int = 2) -> P:
+        """Activations [B, ..., D]: batch sharded where divisible."""
+        ax = self.batch_axes_for(b)
+        return P(ax if ax else None, *([None] * trailing))
+
+    def spec_weight(self, shape: Tuple[int, ...], tp_dim: Optional[int],
+                    fsdp_dim: Optional[int]) -> P:
+        """Weight spec: TP on ``tp_dim`` over model axis, FSDP on
+        ``fsdp_dim`` over data axis (when divisible)."""
+        parts: list = [None] * len(shape)
+        if tp_dim is not None and self._div(shape[tp_dim], self.model_axis):
+            parts[tp_dim] = self.model_axis
+        if (self.fsdp and fsdp_dim is not None and fsdp_dim != tp_dim
+                and self._div(shape[fsdp_dim], "data")
+                and "data" in (self.mesh.axis_names if self.have_mesh
+                               else ())):
+            parts[fsdp_dim] = "data"
+        return P(*parts)
+
+    def sharding(self, spec: P) -> Optional[NamedSharding]:
+        if not self.have_mesh:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+    def constrain(self, x, spec: P):
+        if not self.have_mesh:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.sharding(spec))
+
+    def kv_cache_spec(self, b: int, s: int) -> P:
+        """Decode KV cache [B, S, Hkv, hd]: batch over data axes, sequence
+        over the model axis (sequence parallelism — head-count agnostic)."""
+        ax = self.batch_axes_for(b)
+        bspec = ax if ax else None
+        if self.seq_parallel_decode and self._div(s, self.model_axis):
+            return P(bspec, self.model_axis, None, None)
+        return P(bspec, None, None, None)
+
+
+def single_device_ctx(**kw) -> ParallelCtx:
+    return ParallelCtx(mesh=None, **kw)

@@ -1,0 +1,6 @@
+"""Serving: Jet-admitted batched engine + paged KV cache."""
+from .engine import EngineConfig, Request, ServingEngine
+from .kv_cache import PagedKV, PagedKVConfig
+
+__all__ = ["EngineConfig", "PagedKV", "PagedKVConfig", "Request",
+           "ServingEngine"]

@@ -1,0 +1,150 @@
+"""Batched serving engine with the Jet receive path as admission control.
+
+The mapping (paper §3.2 workflow -> serving):
+  * requests = incoming transfers; prompt bytes ride the *READ* path
+    (fragmented, windowed admission via JetService), generated tokens are
+    *small messages* (SRQ);
+  * batch lanes = the cache-resident buffer pool: a fixed slab of decode
+    lanes whose KV state is pre-allocated once; a lane is recycled the
+    moment its sequence finishes (swift recycle);
+  * slow/stuck sequences (consumer stalls) are stragglers: the escape
+    ladder first flags them, then evicts (copy-out) their lane, and under
+    danger pressure rejects new admissions (ECN).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..core.jet import JetConfig, JetService, QoS
+from ..models import api as model_api
+from ..parallel.sharding import ParallelCtx
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray          # [T] token ids
+    max_new_tokens: int
+    qos: QoS = QoS.NORMAL
+    # filled by the engine
+    lane: int = -1
+    generated: Optional[List[int]] = None
+    xfer_id: int = -1
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_lanes: int = 8           # decode batch slab (the buffer pool)
+    max_len: int = 256
+    bytes_per_token: int = 4096  # KV bytes/token — Jet admission accounting
+    eos_token: int = 1
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, ectx: EngineConfig,
+                 params, ctx: ParallelCtx,
+                 jet_cfg: Optional[JetConfig] = None,
+                 compute_dtype=jnp.float32):
+        self.cfg = cfg
+        self.ecfg = ectx
+        self.params = params
+        self.ctx = ctx
+        self.jet = JetService(jet_cfg or JetConfig())
+        self.jet.register(0, QoS.NORMAL)
+        self.compute_dtype = compute_dtype
+        self.state = model_api.init_decode_state(
+            cfg, ectx.max_lanes, ectx.max_len, compute_dtype)
+        self.lengths = jnp.zeros((ectx.max_lanes,), jnp.int32)
+        self.tokens = jnp.zeros((ectx.max_lanes,), jnp.int32)
+        self.active: Dict[int, Request] = {}     # lane -> request
+        self.waiting: List[Request] = []
+        self.done: Dict[int, Request] = {}
+        self.now = 0.0
+        self._decode = jax.jit(
+            lambda p, s, t, l: model_api.decode_step(
+                p, cfg, ctx, s, t, l, compute_dtype=compute_dtype))
+        self._prefill = jax.jit(
+            lambda p, t: model_api.prefill(
+                p, cfg, ctx, t, max_len=ectx.max_len,
+                compute_dtype=compute_dtype))
+
+    # ---- submission (paper step 2) --------------------------------------- #
+    def submit(self, req: Request) -> None:
+        req.generated = []
+        req.xfer_id = self.jet.request(
+            0, len(req.prompt) * self.ecfg.bytes_per_token, self.now)
+        self.waiting.append(req)
+
+    def _free_lanes(self) -> List[int]:
+        return [i for i in range(self.ecfg.max_lanes)
+                if i not in self.active]
+
+    # ---- admission + prefill (paper step 3/4) ----------------------------- #
+    def _admit(self) -> None:
+        # Jet admissions are sticky: a transfer admitted to the pool waits
+        # for a free lane (its pool reservation is already held).
+        self._jet_admitted = getattr(self, "_jet_admitted", set())
+        self._jet_admitted |= {t.xfer_id for t in self.jet.pump(self.now)}
+        still = []
+        for req in self.waiting:
+            lanes = self._free_lanes()
+            if req.xfer_id in self._jet_admitted and lanes:
+                lane = lanes[0]
+                req.lane = lane
+                self.active[lane] = req
+                prompt = jnp.asarray(req.prompt)[None, :]
+                logits, state1, lengths1 = self._prefill(self.params, prompt)
+                # scatter the single-sequence state into the lane slab;
+                # pattern leaves are [n_units, B, ...], remainder [B, ...]
+                self.state = {
+                    "pattern": jax.tree.map(
+                        lambda slab, new: slab.at[:, lane].set(new[:, 0]),
+                        self.state["pattern"], state1["pattern"]),
+                    "remainder": jax.tree.map(
+                        lambda slab, new: slab.at[lane].set(new[0]),
+                        self.state["remainder"], state1["remainder"]),
+                }
+                self.lengths = self.lengths.at[lane].set(len(req.prompt))
+                tok = int(jnp.argmax(logits[0]))
+                req.generated.append(tok)
+                self.tokens = self.tokens.at[lane].set(tok)
+            else:
+                still.append(req)
+        self.waiting = still
+
+    # ---- one engine tick --------------------------------------------------- #
+    def step(self, dt: float = 1e-3) -> None:
+        self.now += dt
+        self._admit()
+        if self.active:
+            logits, self.state = self._decode(self.params, self.state,
+                                              self.tokens, self.lengths)
+            self.lengths = self.lengths + jnp.asarray(
+                [1 if i in self.active else 0
+                 for i in range(self.ecfg.max_lanes)], jnp.int32)
+            next_tok = jnp.argmax(logits, axis=-1)
+            self.tokens = next_tok.astype(jnp.int32)
+            finished = []
+            for lane, req in self.active.items():
+                tok = int(next_tok[lane])
+                req.generated.append(tok)
+                if (tok == self.ecfg.eos_token or
+                        len(req.generated) >= req.max_new_tokens):
+                    finished.append(lane)
+            for lane in finished:          # swift recycle of the lane slab
+                req = self.active.pop(lane)
+                self.jet.complete(req.xfer_id, self.now)
+                self.done[req.req_id] = req
+        self.jet.tick_escape(self.now)
+
+    def run_until_done(self, max_ticks: int = 1000) -> None:
+        for _ in range(max_ticks):
+            if not self.active and not self.waiting:
+                return
+            self.step()

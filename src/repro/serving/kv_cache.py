@@ -1,0 +1,91 @@
+"""Paged KV cache backed by the cache-resident buffer pool (DevicePool).
+
+The slab design of paper §4.2 applied to serving KV: pages of ``page_size``
+tokens are allocated from a functional free bitmap; sequences map to pages
+via a page table; the Pallas jet_decode_attention kernel consumes pages
+directly.  Freeing a finished sequence recycles its pages immediately
+(swift recycle); an exhausted pool surfaces the escape path (caller evicts
+or rejects — see serving.engine).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.pool import DevicePool
+
+
+@dataclasses.dataclass
+class PagedKVConfig:
+    num_pages: int
+    page_size: int
+    num_kv_heads: int
+    head_dim: int
+    max_pages_per_seq: int
+    dtype: object = jnp.bfloat16
+
+
+@jax.tree_util.register_pytree_node_class
+class PagedKV:
+    """Single-layer paged KV store + allocator state."""
+
+    def __init__(self, k_pages, v_pages, pool: DevicePool, page_table,
+                 lengths):
+        self.k_pages = k_pages          # [P, page, Hkv, D]
+        self.v_pages = v_pages
+        self.pool = pool
+        self.page_table = page_table    # [B, maxp] int32, -1 = hole
+        self.lengths = lengths          # [B] int32
+
+    def tree_flatten(self):
+        return ((self.k_pages, self.v_pages, self.pool, self.page_table,
+                 self.lengths), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def create(cls, cfg: PagedKVConfig, batch: int) -> "PagedKV":
+        shape = (cfg.num_pages, cfg.page_size, cfg.num_kv_heads,
+                 cfg.head_dim)
+        return cls(jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype),
+                   DevicePool.create(cfg.num_pages),
+                   jnp.full((batch, cfg.max_pages_per_seq), -1, jnp.int32),
+                   jnp.zeros((batch,), jnp.int32))
+
+    def append(self, b: int, k_new: jnp.ndarray, v_new: jnp.ndarray
+               ) -> Tuple["PagedKV", jnp.ndarray]:
+        """Append one token's (k, v) [Hkv, D] to sequence ``b``.  Allocates
+        a fresh page from the pool on page boundaries.  Returns
+        (new_cache, ok) — ok=False means pool exhausted (escape)."""
+        page = self.k_pages.shape[1]
+        pos = self.lengths[b]
+        page_idx = pos // page
+        off = pos % page
+        need_page = off == 0
+        pool, fresh, got = self.pool.alloc(1)
+        use_pool = jnp.logical_and(need_page, got)
+        pool = DevicePool(jnp.where(need_page, pool.free, self.pool.free))
+        table = self.page_table.at[b, page_idx].set(
+            jnp.where(need_page, fresh[0], self.page_table[b, page_idx]))
+        phys = table[b, page_idx]
+        safe = jnp.maximum(phys, 0)
+        k_pages = self.k_pages.at[safe, off].set(k_new.astype(
+            self.k_pages.dtype))
+        v_pages = self.v_pages.at[safe, off].set(v_new.astype(
+            self.v_pages.dtype))
+        ok = jnp.logical_or(jnp.logical_not(need_page), got)
+        return PagedKV(k_pages, v_pages, pool, table,
+                       self.lengths.at[b].add(1)), ok
+
+    def release(self, b: int) -> "PagedKV":
+        """Free all pages of sequence ``b`` back to the pool (recycle)."""
+        pages = self.page_table[b]
+        pool = self.pool.release(pages)
+        table = self.page_table.at[b].set(-1)
+        return PagedKV(self.k_pages, self.v_pages, pool, table,
+                       self.lengths.at[b].set(0))

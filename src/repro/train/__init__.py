@@ -1,0 +1,6 @@
+from .loop import LoopConfig, StragglerMonitor, run
+from .steps import (abstract_state, init_state, make_eval_step,
+                    make_train_step, param_specs, state_specs)
+__all__ = ["LoopConfig", "StragglerMonitor", "abstract_state", "init_state",
+           "make_eval_step", "make_train_step", "param_specs", "run",
+           "state_specs"]

@@ -1,0 +1,159 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp
+oracles, plus hypothesis property checks on the online-softmax combine."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.jet_staged_matmul import staging_pool_bytes
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == np.float16 or \
+        dtype == "bfloat16" else dict(rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("m,k,n", [(32, 32, 32), (100, 130, 70),
+                                   (256, 512, 128), (17, 65, 33)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_staged_matmul_sweep(m, k, n, dtype):
+    a = jnp.asarray(RNG.normal(size=(m, k)), dtype=dtype)
+    b = jnp.asarray(RNG.normal(size=(k, n)), dtype=dtype)
+    out = ops.staged_matmul(a, b, impl="interpret", block_m=32, block_n=32,
+                            block_k=64)
+    want = ref.matmul_naive(a, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype != np.float32 else 1e-4,
+                               atol=2e-2 if dtype != np.float32 else 1e-4)
+
+
+def test_staging_pool_sizing():
+    # the in-kernel pool must fit VMEM (~128 MB) with double buffering
+    assert staging_pool_bytes(256, 256, 512) < 16 << 20
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("t,s,window", [(16, 16, None), (16, 16, 8),
+                                        (8, 24, None)])
+def test_flash_attention_sweep(hq, hkv, t, s, window):
+    b, d = 2, 16
+    q = jnp.asarray(RNG.normal(size=(b, hq, t, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), jnp.float32)
+    want = ref.attention_naive(q, k, v, causal=True, window=window)
+    got_ref = ref.flash_attention_ref(q, k, v, causal=True, window=window,
+                                      block_kv=8)
+    got_pl = ops.flash_attention(q, k, v, causal=True, window=window,
+                                 impl="interpret", block_q=8, block_kv=8)
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got_pl), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    b, hq, hkv, t, d = 1, 2, 2, 16, 16
+    q = jnp.asarray(RNG.normal(size=(b, hq, t, d)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, t, d)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, t, d)), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, impl="interpret", block_q=8,
+                              block_kv=8)
+    want = ref.attention_naive(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("hq,hkv,page,maxp", [(4, 2, 8, 4), (8, 8, 4, 6),
+                                              (8, 2, 16, 2)])
+def test_decode_attention_paged_sweep(hq, hkv, page, maxp):
+    b, d, pool = 3, 32, 24
+    kp = jnp.asarray(RNG.normal(size=(pool, page, hkv, d)), jnp.float32)
+    vp = jnp.asarray(RNG.normal(size=(pool, page, hkv, d)), jnp.float32)
+    lengths = jnp.asarray(RNG.integers(1, page * maxp, size=b), jnp.int32)
+    table = np.full((b, maxp), -1, np.int32)
+    used = set()
+    for i in range(b):
+        need = -(-int(lengths[i]) // page)
+        for j in range(need):
+            pid = next(p for p in RNG.permutation(pool) if p not in used)
+            used.add(pid)
+            table[i, j] = pid
+    table = jnp.asarray(table)
+    q = jnp.asarray(RNG.normal(size=(b, hq, d)), jnp.float32)
+    o_ref, lse_ref = ref.decode_attention_paged_ref(q, kp, vp, table,
+                                                    lengths)
+    o_pl, lse_pl = ops.decode_attention(q, kp, vp, table, lengths,
+                                        impl="interpret")
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(lse_pl), np.asarray(lse_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(1, 5))
+@settings(max_examples=10, deadline=None)
+def test_combine_partial_attention_is_exact(n_shards):
+    """Sharded partial-softmax + SRQ combine == unsharded attention."""
+    b, h, d, s = 2, 2, 8, 8 * n_shards
+    rng = np.random.default_rng(n_shards)
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    lengths = jnp.full((b,), s, jnp.int32)
+    o_full, _ = ref.decode_attention_naive(q, k, v, lengths)
+    parts, lses = [], []
+    for i in range(n_shards):
+        ks = k[:, i * 8:(i + 1) * 8]
+        vs = v[:, i * 8:(i + 1) * 8]
+        o, lse = ref.decode_attention_naive(q, ks, vs,
+                                            jnp.full((b,), 8, jnp.int32))
+        parts.append(o)
+        lses.append(lse)
+    o_comb = ref.combine_partial_attention(jnp.stack(parts),
+                                           jnp.stack(lses))
+    np.testing.assert_allclose(np.asarray(o_comb), np.asarray(o_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("h,g,n,p,chunk", [(4, 2, 6, 8, 8), (2, 1, 4, 16, 4),
+                                           (8, 8, 8, 8, 16)])
+def test_ssd_sweep(h, g, n, p, chunk):
+    b, t = 2, 32
+    x = jnp.asarray(RNG.normal(size=(b, t, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(b, t, h)), jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    bb = jnp.asarray(RNG.normal(size=(b, t, g, n)), jnp.float32)
+    cc = jnp.asarray(RNG.normal(size=(b, t, g, n)), jnp.float32)
+    y0, h0 = ref.ssd_naive(x, dt, a, bb, cc)
+    y1, h1 = ref.ssd_chunked_ref(x, dt, a, bb, cc, chunk=chunk)
+    y2, h2 = ops.ssd(x, dt, a, bb, cc, chunk=chunk, impl="interpret")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y0), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h0), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_state_carry_matches_decode_recurrence():
+    """Chunked h_T must equal step-by-step decode recurrence state."""
+    b, t, h, p, g, n = 1, 16, 2, 4, 1, 4
+    x = jnp.asarray(RNG.normal(size=(b, t, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(b, t, h)), jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    bb = jnp.asarray(RNG.normal(size=(b, t, g, n)), jnp.float32)
+    cc = jnp.asarray(RNG.normal(size=(b, t, g, n)), jnp.float32)
+    _, h_chunk = ref.ssd_chunked_ref(x, dt, a, bb, cc, chunk=8)
+    _, h_seq = ref.ssd_naive(x, dt, a, bb, cc)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h_seq),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,124 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward /
+train step on CPU, asserting output shapes + finiteness (assignment
+requirement), plus decode-path consistency (prefill+decode == forward)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ShapeConfig, tiny_config
+from repro.models import api
+from repro.models.transformer import layer_kinds, segments
+from repro.parallel.sharding import single_device_ctx
+
+CTX = single_device_ctx(moe_capacity_factor=4.0)
+SHAPE = ShapeConfig("smoke", "train", 32, 2)
+
+
+@pytest.fixture(scope="module")
+def tiny_setups():
+    out = {}
+    key = jax.random.key(0)
+    for name, arch in ARCHS.items():
+        cfg = tiny_config(arch)
+        params = api.init_params(cfg, key)
+        batch = api.synthetic_inputs(cfg, SHAPE, key, dtype=jnp.float32)
+        out[name] = (cfg, params, batch)
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_forward_shapes_and_finite(tiny_setups, name):
+    cfg, params, batch = tiny_setups[name]
+    logits, aux = jax.jit(
+        lambda p, b: api.forward(p, cfg, CTX, b["tokens"],
+                                 b.get("patches"),
+                                 compute_dtype=jnp.float32))(params, batch)
+    b, t = batch["targets"].shape
+    assert logits.shape == (b, t, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_train_step_finite_loss(tiny_setups, name):
+    cfg, params, batch = tiny_setups[name]
+    loss, metrics = jax.jit(
+        lambda p, b: api.loss_fn(p, cfg, CTX, b,
+                                 compute_dtype=jnp.float32))(params, batch)
+    assert np.isfinite(float(loss))
+    if cfg.num_experts:
+        assert float(metrics["overflow"]) < 0.6
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_layer_structure_covers_config(name):
+    arch = ARCHS[name]
+    kinds = layer_kinds(arch)
+    assert len(kinds) == arch.num_layers
+    pattern, n_units, rem = segments(arch)
+    assert n_units * len(pattern) + len(rem) == arch.num_layers
+    if arch.num_experts:
+        n_moe = sum(k == "attn_moe" for k in kinds)
+        assert n_moe == sum(arch.is_moe_layer(i)
+                            for i in range(arch.num_layers))
+    if arch.attn_every:
+        assert "mamba_attn" in kinds
+    if arch.slstm_every:
+        assert kinds.count("slstm") == arch.num_layers // arch.slstm_every
+    if arch.cross_attn_every:
+        assert kinds.count("attn_cross") == \
+            arch.num_layers // arch.cross_attn_every
+
+
+@pytest.mark.parametrize("name", ["h2o-danube-1.8b", "zamba2-1.2b",
+                                  "xlstm-125m", "gemma-7b",
+                                  "musicgen-large"])
+def test_prefill_decode_matches_forward(tiny_setups, name):
+    """Greedy next-token from (prefill, then decode_step) must equal
+    argmax of the full forward logits at successive positions."""
+    cfg, params, batch = tiny_setups[name]
+    toks = batch["tokens"][:1]          # single sequence
+    t = toks.shape[-1]
+    patches = batch["patches"][:1] if "patches" in batch else None
+    logits_full, _ = api.forward(params, cfg, CTX, toks, patches,
+                                 compute_dtype=jnp.float32)
+    lg_pf, state, lengths = api.prefill(params, cfg, CTX, toks, patches,
+                                        max_len=t + 4,
+                                        compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(lg_pf),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+    # one decode step fed with the last prompt token's argmax
+    tok = (jnp.argmax(lg_pf, -1).astype(jnp.int32))
+    if cfg.num_codebooks:
+        tok = jnp.tile(tok[:, None], (1, cfg.num_codebooks))
+    lg_dec, _ = api.decode_step(params, cfg, CTX, state, tok, lengths,
+                                compute_dtype=jnp.float32)
+    assert np.isfinite(np.asarray(lg_dec)).all()
+
+
+def test_swa_ring_buffer_decode_matches_window_attention():
+    """Danube with a tiny window: decoding past the window must equal
+    attention over only the last `window` tokens."""
+    cfg = tiny_config(ARCHS["h2o-danube-1.8b"])
+    assert cfg.sliding_window == 64
+    import dataclasses
+    cfg = dataclasses.replace(cfg, sliding_window=8, num_layers=2)
+    key = jax.random.key(1)
+    params = api.init_params(cfg, key)
+    toks = jax.random.randint(key, (1, 24), 0, cfg.vocab_size, jnp.int32)
+    # decode from scratch, token by token
+    state = api.init_decode_state(cfg, 1, 8, jnp.float32)
+    lengths = jnp.zeros((1,), jnp.int32)
+    outs = []
+    for i in range(24):
+        lg, state = api.decode_step(params, cfg, CTX, state, toks[:, i],
+                                    lengths, compute_dtype=jnp.float32)
+        lengths = lengths + 1
+        outs.append(lg)
+    # full forward with window masking
+    logits_full, _ = api.forward(params, cfg, CTX, toks,
+                                 compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(outs[-1][0]),
+                               np.asarray(logits_full[0, -1]),
+                               rtol=5e-3, atol=5e-3)

@@ -1,0 +1,25 @@
+"""Multi-device integration tests (8 host CPU devices, subprocess).
+
+Covers: MoE EP == dense oracle, capacity escape, jet staged collectives
+(ring allgather-matmul / reduce-scatter / windowed allgather / SRQ combine),
+compressed psum with error feedback, distributed train step == single-device,
+and elastic checkpoint reshard.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_multidevice_suite():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "multidev_driver.py")],
+        env=env, capture_output=True, text=True, timeout=1150)
+    sys.stdout.write(proc.stdout[-4000:])
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "multi-device driver failed"

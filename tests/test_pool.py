@@ -1,0 +1,93 @@
+"""Property tests for the cache-resident buffer pool (paper §4.1/§4.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pool import DevicePool, SlabPool
+
+
+@given(st.lists(st.tuples(st.integers(0, 3),          # app
+                          st.integers(1, 64 * 4096),  # nbytes
+                          st.booleans()),              # free-after?
+                min_size=1, max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_slab_pool_invariants(ops):
+    pool = SlabPool(capacity_bytes=64 * 4096, slot_bytes=4096)
+    live = {}
+    now = 0.0
+    for i, (app, nbytes, free_after) in enumerate(ops):
+        now += 1.0
+        ids = pool.alloc(app, nbytes, now)
+        need = pool.slots_needed(nbytes)
+        if ids is None:
+            # refusal must be justified
+            assert need * pool.slot_bytes > pool.available_bytes
+            continue
+        assert len(ids) == need
+        assert len(set(ids)) == len(ids)            # no double-allocation
+        for sid in ids:
+            assert all(sid not in v for v in live.values())
+        live.setdefault(app, []).extend(ids)
+        if free_after and live.get(app):
+            pool.free(app, live.pop(app))
+    # conservation: free + live slots == capacity (no replaced slots here)
+    n_live = sum(len(v) for v in live.values())
+    assert pool.available_bytes == (pool.num_slots - n_live) * pool.slot_bytes
+
+
+def test_double_free_raises():
+    pool = SlabPool(capacity_bytes=8 * 4096)
+    ids = pool.alloc(0, 4096, 0.0)
+    pool.free(0, ids)
+    with pytest.raises(KeyError):
+        pool.free(0, ids)
+
+
+def test_wrong_owner_free_raises():
+    pool = SlabPool(capacity_bytes=8 * 4096)
+    ids = pool.alloc(0, 4096, 0.0)
+    with pytest.raises(ValueError):
+        pool.free(1, ids)
+
+
+def test_straggler_accounting_monotone_head():
+    pool = SlabPool(capacity_bytes=32 * 4096)
+    for t in range(8):
+        pool.alloc(7, 4096, float(t))
+    assert pool.oldest_age(7, 10.0) == 10.0
+    # slots older than 5.5 at t=10: alloc_ts < 4.5 -> ts 0..4 = 5 slots
+    assert len(pool.straggler_slots(7, 10.0, 5.5)) == 5
+    assert pool.straggler_ratio(7, 10.0, 5.5) == pytest.approx(5 / 8)
+
+
+def test_replace_keeps_recyclable_size_constant():
+    """Paper §4.3: replacement swaps a straggler for a DRAM-backed slot so
+    the usable pool size is unchanged."""
+    pool = SlabPool(capacity_bytes=4 * 4096)
+    ids = pool.alloc(0, 4 * 4096, 0.0)
+    assert pool.available_bytes == 0
+    borrowed = pool.replace(ids[:2])
+    assert borrowed == 2 * 4096
+    assert pool.available_bytes == 2 * 4096        # fresh slots joined
+    assert pool.replace_mem_bytes == 2 * 4096
+    pool.free(0, ids)                               # replaced slots retire
+    assert pool.replace_mem_bytes == 0
+    assert pool.available_bytes == 4 * 4096
+
+
+@given(st.integers(1, 16), st.integers(0, 16))
+@settings(max_examples=30, deadline=None)
+def test_device_pool_alloc_release(n_slots, n_alloc):
+    pool = DevicePool.create(n_slots)
+    pool2, idx, ok = pool.alloc(n_alloc)
+    idx = np.asarray(idx)
+    if n_alloc <= n_slots:
+        assert bool(ok)
+        assert len(set(idx.tolist())) == n_alloc or n_alloc == 0
+        assert int(pool2.available()) == n_slots - n_alloc
+    else:
+        assert not bool(ok)
+    pool3 = pool2.release(idx)
+    expected = n_slots if n_alloc <= n_slots else n_slots
+    if n_alloc <= n_slots:
+        assert int(pool3.available()) == expected

@@ -1,0 +1,81 @@
+"""Recycle-controller model (paper §4.2) + Jet service facade (§3)."""
+import pytest
+
+from repro.core.jet import JetConfig, JetService, QoS
+from repro.core.recycle import (RecycleModel, little_law_bytes,
+                                paper_default, paper_unoptimized,
+                                slice_message)
+
+
+def test_littles_law_paper_example():
+    # paper §2.2: 200 Gbps x 200 us -> 5 MB
+    assert little_law_bytes(200.0, 200.0) == pytest.approx(5e6, rel=0.01)
+
+
+def test_slice_message():
+    s = slice_message(10_000)
+    assert sum(s) == 10_000 and max(s) <= 4096
+    assert len(slice_message(4096)) == 1
+
+
+def test_optimizations_reduce_timespan():
+    """Each of the paper's three accelerations must shrink the slot-holding
+    time; all three together must dominate."""
+    base = paper_unoptimized()
+    msg = 256 << 10
+    t_base = base.slot_holding_time_us(msg)
+    import dataclasses
+    t_thread = dataclasses.replace(base, threads=4).slot_holding_time_us(msg)
+    t_pipe = dataclasses.replace(base, pipelined=True).slot_holding_time_us(
+        msg)
+    t_simpl = dataclasses.replace(base, crc_offload=True,
+                                  struct_serialization=True
+                                  ).slot_holding_time_us(msg)
+    t_all = paper_default().slot_holding_time_us(msg)
+    assert t_thread < t_base
+    assert t_pipe < t_base
+    assert t_simpl < t_base
+    assert t_all < min(t_thread, t_pipe, t_simpl)
+    # pipelining is the big lever: slot time becomes O(slice), not O(message)
+    assert t_pipe < t_base / 10
+
+
+def test_pool_sizing_fits_12mb():
+    """With the optimized recycle path + jitter headroom, the paper's 12 MB
+    pool sustains 200 Gbps (its feasibility claim)."""
+    m = paper_default()
+    need = m.required_pool_bytes(200.0, 256 << 10, headroom=2.0)
+    assert need <= 12 << 20
+
+
+def test_jet_workflow_roundtrip():
+    jet = JetService(JetConfig(pool_bytes=1 << 20))
+    jet.register(1, QoS.NORMAL)
+    xid = jet.request(1, 300 << 10, now=0.0)
+    admitted = jet.pump(0.0)
+    assert [t.xfer_id for t in admitted] == [xid]
+    assert jet.pool.available_bytes < 1 << 20
+    jet.complete(xid, 1.0)
+    assert jet.pool.available_bytes == 1 << 20      # swift recycle
+
+
+def test_jet_qos_priority_and_fallback():
+    jet = JetService(JetConfig(pool_bytes=256 << 10))
+    jet.register(1, QoS.LOW)
+    jet.register(2, QoS.HIGH)
+    jet.request(1, 200 << 10, now=0.0)
+    hi = jet.request(2, 200 << 10, now=0.0)
+    admitted = jet.pump(0.0)
+    # HIGH admitted first even though LOW was requested earlier
+    assert admitted and admitted[0].xfer_id == hi
+    # LOW falls back to memory buffers when the pool can't host it (§5)
+    jet.pump(0.0)
+    assert jet.memory_fallbacks == 1
+
+
+def test_jet_small_message_classification():
+    jet = JetService()
+    jet.register(1)
+    x = jet.request(1, 1024, now=0.0)
+    t = jet.pump(0.0)
+    assert t[0].small                                # SEND/RECV + SRQ path

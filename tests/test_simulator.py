@@ -1,0 +1,109 @@
+"""Validate the receive-datapath simulator against the paper's claims
+(DESIGN.md table C1-C7).  Bands are deliberately generous — the simulator is
+calibrated, not fitted point-wise."""
+import pytest
+
+from repro.core import simulator as S
+
+
+@pytest.fixture(scope="module")
+def sweep():
+    out = {}
+    for name, mk in (("100g", S.testbed_100g), ("25g", S.testbed_25g)):
+        for msg_kb in (64, 256, 1024):
+            for mode in ("ddio", "jet"):
+                out[(name, msg_kb, mode)] = S.run_sim(
+                    mk(mode, msg_bytes=msg_kb << 10, sim_time_s=0.02))
+    return out
+
+
+def test_c1_throughput_drop_64k_to_1m(sweep):
+    """Paper fig 2: ~43% throughput drop at 1 MB vs 64 KB under membw
+    contention (both testbeds)."""
+    for bed in ("100g", "25g"):
+        b64 = sweep[(bed, 64, "ddio")].goodput_gbps
+        b1m = sweep[(bed, 1024, "ddio")].goodput_gbps
+        drop = 1 - b1m / b64
+        assert 0.30 < drop < 0.55, (bed, drop)
+
+
+def test_c2_latency_grows_order_of_magnitude(sweep):
+    """Paper fig 2c: avg latency grows ~10-25x from 64 KB to 1 MB."""
+    for bed in ("100g", "25g"):
+        r = (sweep[(bed, 1024, "ddio")].avg_latency_us /
+             sweep[(bed, 64, "ddio")].avg_latency_us)
+        assert r > 5.0, (bed, r)
+
+
+def test_c3_ddio_miss_rate_leaky_dma(sweep):
+    """Paper fig 3b: miss rate ~0 at 64 KB, 100% at 1 MB."""
+    for bed in ("100g", "25g"):
+        assert sweep[(bed, 64, "ddio")].ddio_miss_rate < 0.1
+        assert sweep[(bed, 1024, "ddio")].ddio_miss_rate > 0.95
+
+
+def test_c3b_doubling_ddio_does_not_help():
+    """Paper §6: even 2x DDIO ways keep the throughput drop at 1 MB."""
+    base = S.run_sim(S.testbed_100g("ddio", msg_bytes=1 << 20,
+                                    sim_time_s=0.02))
+    doubled = S.run_sim(S.testbed_100g("ddio", msg_bytes=1 << 20,
+                                       sim_time_s=0.02,
+                                       ddio_bytes=12 << 20))
+    assert doubled.goodput_gbps < 1.15 * base.goodput_gbps
+
+
+def test_c4_jet_throughput_gain(sweep):
+    """Paper figs 6a/7a: Jet >=1.5x baseline at 256 KB; PFC/CNP ~ 0."""
+    for bed in ("100g", "25g"):
+        jet = sweep[(bed, 256, "jet")]
+        base = sweep[(bed, 256, "ddio")]
+        assert jet.goodput_gbps / base.goodput_gbps > 1.5, bed
+        assert jet.pfc_pause_us == 0
+        assert jet.cnp_count <= base.cnp_count
+    # and Jet holds line rate
+    assert sweep[("100g", 1024, "jet")].goodput_gbps > 195
+
+
+def test_c5_latency_improvement(sweep):
+    """Paper figs 6b/7b: Jet improves avg latency substantially."""
+    for bed in ("100g", "25g"):
+        jet = sweep[(bed, 256, "jet")].avg_latency_us
+        base = sweep[(bed, 256, "ddio")].avg_latency_us
+        assert jet < 0.65 * base, (bed, jet, base)
+
+
+def test_c6_concurrency_window_saturation():
+    """Paper fig 5: ~4 concurrent READs saturate 2x100G; 32 is safe."""
+    # model: per-READ bandwidth-delay product limits throughput
+    rtt_us, frag = 30.0, 256 << 10
+    for conc, expect_full in ((1, False), (4, True), (32, True)):
+        bw = min(200.0, conc * frag * 8 / (rtt_us * 1e-6) / 1e9)
+        achieved = S.run_sim(S.testbed_100g(
+            "jet", msg_bytes=frag, sim_time_s=0.01,
+            offered_gbps=bw)).goodput_gbps
+        assert (achieved > 190) == expect_full, (conc, achieved)
+
+
+def test_c7_pool_and_escape_budget(sweep):
+    """Paper §4.3/fig 10-11: 12 MB pool suffices; escape membw < 1 GB/s
+    (8 Gbps); pool peak well under capacity."""
+    jet = sweep[("100g", 256, "jet")]
+    assert jet.pool_peak_bytes < 12 << 20
+    assert jet.escape_dram_gbps < 8.0
+    assert jet.nic_dram_gbps < 0.2 * sweep[("100g", 256,
+                                            "ddio")].nic_dram_gbps + 1.0
+
+
+def test_jet_under_extreme_pressure_engages_escape():
+    """Shrunken pool + heavy stragglers must walk the full ladder without
+    deadlock, and ECN backpressure must throttle the sender."""
+    r = S.run_sim(S.testbed_100g("jet", msg_bytes=256 << 10,
+                                 sim_time_s=0.12, jet_pool_bytes=2 << 20,
+                                 straggler_frac=0.3, straggler_mult=100.0))
+    assert r.escape_replaces > 0                       # rung 1 engaged
+    assert r.escape_ecn > 0                            # rung 3 engaged
+    assert r.pool_peak_bytes <= 2 << 20                # pool never overflows
+    assert r.goodput_gbps > 0.1                        # no deadlock
+    # ECN backpressure throttles the sender far below line rate (the pool
+    # is 22x over-committed by straggler mass — protection is the point)
+    assert r.goodput_gbps < 50.0

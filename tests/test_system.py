@@ -1,0 +1,221 @@
+"""System-level integration tests: assigned-config fidelity, end-to-end
+training convergence, dry-run artifact coverage, benchmark harness claims
+and roofline arithmetic."""
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch, tiny_config
+from repro.configs.base import ShapeConfig
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+# --------------------------------------------------------------------------- #
+# assigned-architecture fidelity: exact values from the assignment table
+# --------------------------------------------------------------------------- #
+ASSIGNED = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+    "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+    "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+    "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+    "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+    "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+    "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+}
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_assigned_config_values(name):
+    cfg = get_arch(name)
+    want = ASSIGNED[name]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == want, f"{name}: {got} != {want}"
+
+
+def test_assigned_special_features():
+    assert get_arch("llama4-maverick-400b-a17b").num_experts == 128
+    assert get_arch("llama4-scout-17b-a16e").num_experts == 16
+    assert get_arch("chatglm3-6b").rope_fraction == 0.5
+    assert get_arch("h2o-danube-1.8b").sliding_window
+    assert get_arch("gemma-7b").head_dim == 256
+    assert get_arch("gemma-7b").mlp == "geglu"
+    assert get_arch("musicgen-large").num_codebooks == 4
+    assert get_arch("xlstm-125m").xlstm
+    assert get_arch("llama-3.2-vision-11b").cross_attn_every > 0
+    assert get_arch("zamba2-1.2b").ssm_state == 64
+    # long-context eligibility: only the sub-quadratic archs
+    sub = {n for n in ARCHS if get_arch(n).subquadratic}
+    assert sub == {"h2o-danube-1.8b", "xlstm-125m", "zamba2-1.2b"}
+
+
+def test_param_counts_match_public_sizes():
+    """Total parameter counts land near the public model sizes (matmul
+    params only — embeddings excluded — so bands are loose)."""
+    bands = {
+        "chatglm3-6b": (5.0e9, 7.5e9),
+        "gemma-7b": (6.5e9, 9.5e9),
+        "starcoder2-15b": (13e9, 17e9),
+        "h2o-danube-1.8b": (1.4e9, 2.2e9),
+        "llama4-scout-17b-a16e": (90e9, 115e9),     # 16e total ~109B
+        "llama4-maverick-400b-a17b": (350e9, 430e9),
+        "zamba2-1.2b": (0.9e9, 1.6e9),
+    }
+    for name, (lo, hi) in bands.items():
+        total, active = get_arch(name).param_counts()
+        assert lo < total < hi, f"{name}: {total/1e9:.2f}B not in band"
+        assert active <= total
+    # MoE active params: scout ~16-17B active of ~109B total
+    total, active = get_arch("llama4-scout-17b-a16e").param_counts()
+    assert active < 0.25 * total
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end: tiny model trains and the loss actually decreases
+# --------------------------------------------------------------------------- #
+def test_train_loss_decreases(tmp_path):
+    from repro.data import pipeline
+    from repro.optim import adamw
+    from repro.parallel.sharding import single_device_ctx
+    from repro.train import loop as loop_mod
+
+    cfg = tiny_config(ARCHS["h2o-danube-1.8b"])
+    shape = ShapeConfig("t", "train", 64, 8)
+    data = pipeline.for_arch(cfg, shape)
+    out = loop_mod.run(
+        cfg, single_device_ctx(), adamw.OptConfig(lr=3e-3, total_steps=150),
+        loop_mod.LoopConfig(total_steps=150, ckpt_every=1000,
+                            ckpt_dir=str(tmp_path), log_every=25),
+        data, jax.random.key(0))
+    hist = out["history"]
+    # learnable synthetic structure: loss must fall well below the start
+    assert hist[-1]["loss"] < 0.75 * hist[0]["loss"], hist
+
+
+# --------------------------------------------------------------------------- #
+# dry-run artifact coverage (deliverable e): 33 cells x 2 meshes, all OK
+# --------------------------------------------------------------------------- #
+def _dryrun_records():
+    files = glob.glob(os.path.join(REPO, "experiments", "dryrun", "*.json"))
+    return [json.load(open(p)) for p in files]
+
+
+def test_dryrun_coverage_complete():
+    recs = [r for r in _dryrun_records() if r.get("tag", "") == ""]
+    if not recs:
+        pytest.skip("dry-run artifacts not generated yet")
+    cells = {(r["arch"], r["shape"], r["mesh"]) for r in recs}
+    # 10 archs x (train, prefill, decode) + 3 sub-quadratic x long_500k
+    assert len(cells) == 66, f"expected 66 cells, got {len(cells)}"
+    assert all(r["ok"] for r in recs), [
+        (r["arch"], r["shape"], r["mesh"]) for r in recs if not r["ok"]]
+    meshes = {r["mesh"] for r in recs}
+    assert meshes == {"single", "multi"}
+
+
+def test_dryrun_multipod_shards_pod_axis():
+    recs = [r for r in _dryrun_records()
+            if r.get("tag", "") == "" and r["ok"]]
+    if not recs:
+        pytest.skip("dry-run artifacts not generated yet")
+    for r in recs:
+        if r["mesh"] == "multi":
+            assert r["mesh_shape"] == {"pod": 2, "data": 16, "model": 16}
+        else:
+            assert r["mesh_shape"] == {"data": 16, "model": 16}
+        # collectives were actually emitted (sharded program, not replicated)
+        if r["shape"] != "long_500k":      # batch-1 decode may be all-local
+            assert r["collective_total_per_device"] > 0, (
+                r["arch"], r["shape"], r["mesh"])
+
+
+def test_dryrun_cli_end_to_end(tmp_path):
+    """The dry-run CLI lowers + compiles + records a cell in a fresh
+    subprocess (8 placeholder devices, custom 2x4 mesh)."""
+    import subprocess
+    import sys
+    env = dict(os.environ, REPRO_DRYRUN_DEVICES="8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "xlstm-125m", "--shape", "train_4k", "--mesh", "single",
+         "--out", str(tmp_path), "--force",
+         "--variant", '{"tag":"clitest","mesh_shape":[2,4]}'],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    rec = json.load(open(tmp_path /
+                         "xlstm-125m__train_4k__single__clitest.json"))
+    assert rec["ok"] and rec["flops_per_device"] > 0
+    assert rec["mesh_shape"] == {"data": 2, "model": 4}
+
+
+# --------------------------------------------------------------------------- #
+# benchmark harness: paper-claim bands (C4, C8) via the public bench API
+# --------------------------------------------------------------------------- #
+def test_bench_receiver_datapath_claims():
+    import sys
+    sys.path.insert(0, REPO)
+    from benchmarks import bench_receiver_datapath as B
+    rows = B.run()
+    idx = {(r["testbed"], r["mode"], r["msg_kb"]): r for r in rows}
+    for bed in ("25g_pfc", "100g_pfcfree"):
+        jet = idx[(bed, "jet", 256)]
+        ddio = idx[(bed, "ddio", 256)]
+        assert jet["goodput_gbps"] > 1.5 * ddio["goodput_gbps"]
+        assert jet["pfc_pause_us"] == 0
+    # C3b: doubling DDIO ways does not rescue the baseline
+    d2 = next(r for r in rows if r["mode"] == "ddio_2x_ways")
+    d1 = idx[("100g_pfcfree", "ddio", 1024)]
+    assert d2["goodput_gbps"] < 1.15 * d1["goodput_gbps"]
+
+
+def test_bench_hpc_collectives_bands():
+    import sys
+    sys.path.insert(0, REPO)
+    from benchmarks import bench_hpc_collectives as B
+    rows = {r["collective"]: r for r in B.run()}
+    # within ~8 points of the paper's fig 13 and correctly ordered
+    assert abs(rows["all-to-all"]["improvement_pct"] - 35.1) < 8
+    assert abs(rows["all-gather"]["improvement_pct"] - 25.0) < 8
+    assert abs(rows["all-reduce"]["improvement_pct"] - 5.5) < 8
+    assert rows["all-to-all"]["improvement_pct"] > \
+        rows["all-gather"]["improvement_pct"] > \
+        rows["all-reduce"]["improvement_pct"]
+
+
+# --------------------------------------------------------------------------- #
+# roofline arithmetic
+# --------------------------------------------------------------------------- #
+def test_roofline_terms():
+    import sys
+    sys.path.insert(0, REPO)
+    from benchmarks import roofline as R
+    recs = R.load("single", "")
+    if not recs:
+        pytest.skip("dry-run artifacts not generated yet")
+    rows = [R.analyze_record(r) for r in recs]
+    assert len(rows) == 33
+    for r in rows:
+        assert r["compute_s"] >= 0 and r["memory_s"] >= 0
+        assert r["bound"] in ("compute", "memory", "collective")
+        assert 0 <= r["roofline_frac"] <= 1.0 + 1e-9
+        # useful-FLOP ratio sane: not >2.2x and not absurdly tiny for train
+        if r["shape"] == "train_4k":
+            assert 0.3 < r["useful_ratio"] < 2.2, r
+    # the MODEL_FLOPS convention: train >= 3x prefill per token
+    by = {(r["arch"], r["shape"]): r for r in rows}
+    t = by[("chatglm3-6b", "train_4k")]["model_gflops_dev"]
+    p = by[("chatglm3-6b", "prefill_32k")]["model_gflops_dev"]
+    # train_4k: 1M tokens x 6ND; prefill_32k: 1M tokens x 2ND -> ratio 3
+    assert abs(t / p - 3.0) < 0.2

@@ -1,0 +1,100 @@
+"""Unit tests for the perf-variant machinery: accum microbatching math,
+serving dtype selection, and the capacity audit."""
+import dataclasses
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ShapeConfig, tiny_config
+from repro.models import api
+from repro.optim import adamw
+from repro.parallel.sharding import single_device_ctx
+from repro.train import steps as steps_mod
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_accum_matches_full_batch_single_device():
+    """Gradient accumulation equals the full-batch step bit-for-nearly."""
+    cfg = dataclasses.replace(tiny_config(ARCHS["starcoder2-15b"]),
+                              num_layers=2)
+    opt_cfg = adamw.OptConfig(lr=1e-3)
+    key = jax.random.key(0)
+    batch = api.synthetic_inputs(cfg, ShapeConfig("t", "train", 32, 8),
+                                 key, dtype=jnp.float32)
+    ctx = single_device_ctx()
+    s1, m1 = jax.jit(steps_mod.make_train_step(
+        cfg, ctx, opt_cfg, jnp.float32))(
+        steps_mod.init_state(cfg, opt_cfg, key), batch)
+    micro = {k: v.reshape((4, 2) + v.shape[1:]) for k, v in batch.items()}
+    s2, m2 = jax.jit(steps_mod.make_train_step(
+        cfg, ctx, opt_cfg, jnp.float32, accum_steps=4))(
+        steps_mod.init_state(cfg, opt_cfg, key), micro)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-3
+    for a, b in zip(jax.tree.leaves(s1["params"]),
+                    jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_accum_preserves_state_structure():
+    cfg = dataclasses.replace(tiny_config(ARCHS["gemma-7b"]), num_layers=2)
+    opt_cfg = adamw.OptConfig()
+    key = jax.random.key(0)
+    batch = api.synthetic_inputs(cfg, ShapeConfig("t", "train", 16, 4),
+                                 key, dtype=jnp.float32)
+    micro = {k: v.reshape((2, 2) + v.shape[1:]) for k, v in batch.items()}
+    state = steps_mod.init_state(cfg, opt_cfg, key)
+    new, _ = jax.jit(steps_mod.make_train_step(
+        cfg, single_device_ctx(), opt_cfg, jnp.float32,
+        accum_steps=2))(state, micro)
+    assert jax.tree.structure(new) == jax.tree.structure(state)
+    assert int(new["step"]) == 1
+
+
+def test_compressed_pod_state_has_err_tree():
+    cfg = dataclasses.replace(tiny_config(ARCHS["chatglm3-6b"]),
+                              num_layers=2)
+    opt_cfg = adamw.OptConfig(compressed_pod_grads=True)
+    state = steps_mod.abstract_state(cfg, opt_cfg)
+    assert "err" in state
+    # err mirrors params shapes at bf16
+    for p, e in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(state["err"])):
+        assert p.shape == e.shape and e.dtype == jnp.bfloat16
+    # and without the flag there is no err tree
+    state2 = steps_mod.abstract_state(cfg, adamw.OptConfig())
+    assert "err" not in state2
+
+
+def test_serving_bf16_abstract_params():
+    cfg = ARCHS["llama4-scout-17b-a16e"]
+    p32 = api.abstract_params(cfg)
+    p16 = api.abstract_params(cfg, jnp.bfloat16)
+    a, b = jax.tree.leaves(p32)[0], jax.tree.leaves(p16)[0]
+    assert a.dtype == jnp.float32 and b.dtype == jnp.bfloat16
+    assert a.shape == b.shape
+
+
+def test_capacity_audit_covers_all_cells():
+    sys.path.insert(0, REPO)
+    from benchmarks import capacity
+    rows = capacity.run()
+    if not rows:
+        pytest.skip("dry-run artifacts not generated yet")
+    assert len(rows) == 33
+    # every over-budget cell has a concrete fitting strategy
+    for r in rows:
+        if not r["fits_16gb"]:
+            assert r["strategy"] != "-", r
+    # the big train cells exceed as-is (full activations) and are flagged
+    by = {(r["arch"], r["shape"]): r for r in rows}
+    for arch in ("llama4-maverick-400b-a17b", "llama4-scout-17b-a16e",
+                 "starcoder2-15b"):
+        assert not by[(arch, "train_4k")]["fits_16gb"]
+    # small models fit everywhere
+    assert by[("xlstm-125m", "train_4k")]["fits_16gb"]

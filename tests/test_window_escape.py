@@ -1,0 +1,105 @@
+"""Property tests: READ windows (paper §4.1.2) + escape ladder (§4.3)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.escape import Action, EscapeConfig, EscapeController
+from repro.core.pool import SlabPool
+from repro.core.window import ReadWindow, fragment
+
+
+def test_fragmentation_rule():
+    # paper: slice into <=256 KB fragments
+    frags = fragment(1_000_000)
+    assert sum(frags) == 1_000_000
+    assert all(f <= 256 << 10 for f in frags)
+    assert frags[:-1] == [256 << 10] * (len(frags) - 1)
+    with pytest.raises(ValueError):
+        fragment(0)
+
+
+@given(st.lists(st.tuples(st.integers(1, 256 << 10), st.booleans()),
+                min_size=1, max_size=80))
+@settings(max_examples=50, deadline=None)
+def test_window_invariants(events):
+    w = ReadWindow(max_concurrency=8, max_inflight_bytes=1 << 20)
+    inflight_ids = []
+    now = 0.0
+    for nbytes, complete_one in events:
+        now += 1.0
+        w.submit(nbytes, now)
+        admitted = w.pump(now)
+        inflight_ids.extend(r.req_id for r in admitted)
+        w.check_invariants()
+        if complete_one and inflight_ids:
+            w.complete(inflight_ids.pop(0))
+            w.check_invariants()
+    # FIFO: admitted ids are monotonically increasing
+    assert inflight_ids == sorted(inflight_ids)
+
+
+def test_window_concurrency_cap():
+    w = ReadWindow(max_concurrency=4, max_inflight_bytes=100 << 20)
+    for _ in range(10):
+        w.submit(1024, 0.0)
+    admitted = w.pump(0.0)
+    assert len(admitted) == 4                       # concurrency window
+    w.complete(admitted[0].req_id)
+    assert len(w.pump(1.0)) == 1                    # window slides
+
+
+def test_window_bytes_cap_and_aimd():
+    w = ReadWindow(max_concurrency=32, max_inflight_bytes=1 << 20)
+    for _ in range(8):
+        w.submit(256 << 10, 0.0)
+    assert len(w.pump(0.0)) == 4                    # 4 x 256KB = 1 MB
+    cap0 = w.cap_bytes
+    w.on_ecn()
+    assert w.cap_bytes == cap0 // 2                 # multiplicative decrease
+    for _ in range(1000):
+        w.on_quiet()
+    assert w.cap_bytes == cap0                      # additive recovery, capped
+
+
+def _pressured_pool():
+    pool = SlabPool(capacity_bytes=16 * 4096)
+    ids_a = pool.alloc(0, 10 * 4096, now=0.0)
+    ids_b = pool.alloc(1, 5 * 4096, now=10.0)
+    return pool, ids_a, ids_b
+
+
+def test_escape_ladder_none_when_healthy():
+    pool = SlabPool(capacity_bytes=16 * 4096)
+    pool.alloc(0, 4 * 4096, 0.0)
+    esc = EscapeController(EscapeConfig(cache_safe=0.2, cache_danger=0.05))
+    assert esc.step(pool, 1.0) == [(Action.NONE, None)]
+
+
+def test_escape_ladder_replace_then_copy_then_ecn():
+    cfg = EscapeConfig(cache_safe=0.5, cache_danger=0.4,
+                       mem_esc_bytes=2 * 4096, credit=0.5,
+                       straggler_age=1.0)
+    esc = EscapeController(cfg)
+    pool, ids_a, ids_b = _pressured_pool()
+    # t=20: app0's slots (age 20) are stragglers; available 1/16 < safe
+    acts = esc.step(pool, 20.0)
+    kinds = [a for a, _ in acts]
+    assert Action.REPLACE in kinds                 # rung 1
+    assert pool.replace_mem_bytes == cfg.mem_esc_bytes
+    # replace budget exhausted -> rung 2: copy app0 (100% stragglers)
+    acts2 = esc.step(pool, 21.0)
+    kinds2 = [a for a, _ in acts2]
+    assert Action.COPY in kinds2
+    assert esc.stats.bytes_copied > 0
+    # app0's slots were evicted
+    assert pool.held_slots(0) == 0
+
+
+def test_escape_marks_ecn_under_danger():
+    cfg = EscapeConfig(cache_safe=0.9, cache_danger=0.8,
+                       mem_esc_bytes=0, credit=2.0,  # no replace, no copy
+                       straggler_age=1e9)
+    esc = EscapeController(cfg)
+    pool = SlabPool(capacity_bytes=16 * 4096)
+    pool.alloc(0, 15 * 4096, 0.0)
+    acts = esc.step(pool, 1.0)
+    assert (Action.MARK_ECN, None) in acts         # rung 3 (last resort)
