@@ -1,0 +1,142 @@
+"""Fabric benchmarks: Clos incast/HoL behaviour + vectorized sweep engine.
+
+Three parts:
+
+1. **Incast scaling** — N storage senders burst into one Jet/DDIO receiver
+   across a 2-leaf Clos; reports incast completion time, victim-flow
+   goodput and (with PFC) pause fan-out — the fleet-level pathologies a
+   single-receiver simulator cannot show.
+2. **Equivalence anchor** — a 1-sender/1-receiver fabric must reproduce
+   ``run_sim(testbed_100g(...))`` goodput (acceptance: within 5%; actual:
+   exact, the fabric is cut-through at 1 tick).
+3. **Sweep engine** — a >=32-point grid advanced by the jax vmap+scan
+   engine vs the batched-numpy reference vs sequential ``run_sim`` calls;
+   reports max relative deviation (acceptance: <=1%) and speedups (cold =
+   including XLA compile; warm = steady-state, the operating point when a
+   grid shape is re-swept).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import simulator as S
+from repro.fabric import scenarios as SC
+from repro.fabric.sweep import grid_configs, run_sweep
+
+from .common import emit
+
+NAME = "fabric"
+PAPER_REF = "§2.1/§6 testbed at fleet scale"
+
+
+def run_incast() -> List[Dict]:
+    rows: List[Dict] = []
+    for mode in ("ddio", "jet"):
+        for n in (2, 4, 8):
+            for pfc in (False, True):
+                sc = SC.incast(n_senders=n, mode=mode, pfc=pfc,
+                               burst_mb=1.0, sim_time_s=0.02)
+                r = sc.run()
+                rx = r.per_host["h1_0"]
+                rows.append({
+                    "scenario": sc.name,
+                    "mode": mode, "senders": n, "pfc": int(pfc),
+                    "incast_fct_us": r.incast_completion_us,
+                    "victim_gbps": r.victim_goodput_gbps,
+                    "recv_gbps": rx.goodput_gbps,
+                    "pause_fanout": r.pause_fanout,
+                    "ecn_mb": r.ecn_marked_bytes / 1e6,
+                    "dropped_mb": r.switch_dropped_bytes / 1e6,
+                })
+    return rows
+
+
+def run_equivalence() -> List[Dict]:
+    rows: List[Dict] = []
+    for mode in ("ddio", "jet"):
+        ref = S.run_sim(S.testbed_100g(mode, sim_time_s=0.01))
+        got = SC.single_pair(mode, sim_time_s=0.01).run() \
+            .per_host["h0_1"]
+        rows.append({
+            "mode": mode,
+            "run_sim_gbps": ref.goodput_gbps,
+            "fabric_gbps": got.goodput_gbps,
+            "rel_err": abs(got.goodput_gbps - ref.goodput_gbps)
+            / max(ref.goodput_gbps, 1e-9),
+        })
+    return rows
+
+
+def run_sweep_bench() -> List[Dict]:
+    cfgs, _ = grid_configs(
+        S.testbed_100g, mode="ddio", sim_time_s=0.01,
+        msg_bytes=[64 << 10, 128 << 10, 256 << 10, 512 << 10,
+                   768 << 10, 1 << 20],
+        cpu_membw_gbps=[1200.0, 1400.0, 1500.0, 1600.0, 1760.0, 1900.0],
+        ddio_bytes=[4 << 20, 6 << 20])
+
+    t0 = time.time()
+    jx_cold = run_sweep(cfgs, backend="jax")
+    t_cold = time.time() - t0
+    t0 = time.time()
+    jx = run_sweep(cfgs, backend="jax")
+    t_warm = time.time() - t0
+    t0 = time.time()
+    ref = run_sweep(cfgs, backend="numpy")
+    t_np = time.time() - t0
+    t0 = time.time()
+    seq = np.array([S.run_sim(c).goodput_gbps for c in cfgs])
+    t_seq = time.time() - t0
+
+    g_jx, g_np = jx["goodput_gbps"], ref["goodput_gbps"]
+    dev_np = float(np.max(np.abs(g_jx - g_np) / np.maximum(g_np, 1e-9)))
+    dev_seq = float(np.max(np.abs(g_np - seq) / np.maximum(seq, 1e-9)))
+    del jx_cold
+    return [{
+        "grid_points": len(cfgs),
+        "seq_run_sim_s": t_seq,
+        "numpy_batched_s": t_np,
+        "jax_cold_s": t_cold,       # includes one-time XLA compile
+        "jax_warm_s": t_warm,       # steady state (compiled program cached)
+        "speedup_cold": t_seq / t_cold,
+        "speedup_warm": t_seq / t_warm,
+        "max_rel_dev_vs_numpy": dev_np,
+        "max_rel_dev_numpy_vs_run_sim": dev_seq,
+    }]
+
+
+def run() -> List[Dict]:
+    return run_incast()
+
+
+def main() -> None:
+    rows = run_incast()
+    emit(NAME, rows)
+    eq = run_equivalence()
+    emit(NAME + "_equivalence", eq)
+    sw = run_sweep_bench()
+    emit(NAME + "_sweep", sw)
+
+    worst_eq = max(r["rel_err"] for r in eq)
+    hol = [r for r in rows if r["pfc"] and r["senders"] == 8
+           and r["mode"] == "ddio"]
+    free = [r for r in rows if not r["pfc"] and r["senders"] == 8
+            and r["mode"] == "ddio"]
+    s = sw[0]
+    print(f"# single-pair fabric == run_sim within {worst_eq:.2%} "
+          f"(acceptance 5%)")
+    if hol and free:
+        print(f"# incast-8 PFC HoL: victim {hol[0]['victim_gbps']:.1f} Gbps "
+              f"(pause fan-out {hol[0]['pause_fanout']}) vs "
+              f"{free[0]['victim_gbps']:.1f} Gbps PFC-free")
+    print(f"# sweep {s['grid_points']} pts: vectorized matches numpy ref "
+          f"within {s['max_rel_dev_vs_numpy']:.3%} (acceptance 1%); "
+          f"x{s['speedup_warm']:.1f} warm / x{s['speedup_cold']:.1f} cold "
+          f"vs sequential run_sim (acceptance >=5x warm)")
+
+
+if __name__ == "__main__":
+    main()

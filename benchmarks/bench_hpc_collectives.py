@@ -123,6 +123,7 @@ import json
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.parallel import collectives as coll
+from repro.parallel.compat import shard_map
 from repro.launch import hlo_analysis
 
 m = 8
@@ -141,7 +142,7 @@ def jet_ring(x, w):
 rows = []
 for name, fn, w_spec in (("xla_allgather", xla_ag_matmul, P("model", None)),
                          ("jet_ring", jet_ring, P("model", None))):
-    sm = jax.shard_map(fn, mesh=mesh, in_specs=(P(), w_spec),
+    sm = shard_map(fn, mesh=mesh, in_specs=(P(), w_spec),
                        out_specs=P(), check_vma=False)
     lowered = jax.jit(sm).lower(x, w)
     compiled = lowered.compile()

@@ -16,6 +16,7 @@ MODULES = [
     ("concurrency_window", "fig 5 — READ concurrency saturation"),
     ("pool_and_escape", "figs 10/11 — pool sizing, recycle, escape ladder"),
     ("traffic_patterns", "fig 9 — OLAP / backup / OLTP"),
+    ("fabric", "Clos incast/HoL + vectorized sweep engine"),
     ("hpc_collectives", "fig 13 — MPI collective latency"),
     ("kernels", "Pallas kernel correctness + arithmetic intensity"),
     ("roofline", "dry-run roofline terms per (arch x shape)"),

@@ -19,13 +19,14 @@ from jax.sharding import PartitionSpec as P           # noqa: E402
 
 from repro.launch import hlo_analysis                 # noqa: E402
 from repro.parallel import collectives as coll        # noqa: E402
+from repro.parallel.compat import shard_map           # noqa: E402
 
 M = 8
 MESH = jax.make_mesh((M,), ("model",))
 
 
 def report(name, fn, in_specs, args, want, out_specs=P()):
-    sm = jax.shard_map(fn, mesh=MESH, in_specs=in_specs,
+    sm = shard_map(fn, mesh=MESH, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
     jitted = jax.jit(sm)
     got = jitted(*args)

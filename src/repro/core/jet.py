@@ -124,8 +124,15 @@ class JetService:
 
     # -- steps 4-6: arrival notification + release ------------------------------
     def complete(self, xfer_id: int, now: float) -> None:
-        """Application finished consuming; release slots back to the pool."""
-        t = self._live.pop(xfer_id)
+        """Application finished consuming; release slots back to the pool.
+
+        Idempotent w.r.t. escape: an escape COPY may already have evicted
+        the transfer's slots (and ``tick_escape`` may have dropped its
+        bookkeeping) — completing such a transfer is a no-op, not an error.
+        """
+        t = self._live.pop(xfer_id, None)
+        if t is None:
+            return
         # slots may have been evicted by an escape COPY already
         live = [s for s in t.slots if s in self.pool._slots]
         if live:

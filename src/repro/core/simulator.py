@@ -24,7 +24,6 @@ Calibration constants mirror the paper's two testbeds:
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, List, Optional
 
 import numpy as np
@@ -134,225 +133,258 @@ class SimResult:
 
 
 # --------------------------------------------------------------------------- #
-# Simulator
+# The step-able receiver host (the tick body behind run_sim and the fabric)
 # --------------------------------------------------------------------------- #
-class ReceiverSim:
-    def __init__(self, cfg: SimConfig):
-        self.cfg = cfg
+def hold_us_baseline(c: SimConfig) -> float:
+    """Message-granular post-NIC hold time (baseline, non-pipelined)."""
+    return (c.consumer_latency_us +
+            c.msg_bytes * 8.0 / (c.app_gbps * 1e9) * 1e6)
 
-    # message-granular post-NIC hold time (baseline, non-pipelined)
-    def _hold_us_baseline(self) -> float:
+
+def hold_us_jet(c: SimConfig) -> float:
+    """Slice-granular hold (Jet recycle pipeline): consumer latency
+    dominates, the pipeline transit adds ~3 slice-times (paper §4.2.2)."""
+    r = c.recycle
+    per_byte_ns = r.get_ns_per_byte + r.process_ns_per_byte()
+    transit = 3.0 * r.slice_bytes * per_byte_ns * 1e-3
+    if not r.pipelined:
+        # unpipelined Jet holds whole messages (ablation mode)
+        return hold_us_baseline(c) + transit
+    return c.consumer_latency_us + transit
+
+
+@dataclasses.dataclass
+class HostFeedback:
+    """Per-tick receiver feedback routed back to the sender/fabric."""
+    accepted: float = 0.0     # bytes taken into the RNIC buffer
+    dropped: float = 0.0      # bytes lost at the RNIC (lossy mode)
+    cnps: int = 0             # congestion notifications for the sender(s)
+    pfc_paused: bool = False  # receiver asserts pause on its access link
+
+
+class ReceiverHost:
+    """The paper's receiver datapath advanced one fluid tick at a time.
+
+    This is ``ReceiverSim.run()``'s former monolithic loop as a step-able
+    component: the caller supplies the bytes arriving on the access link
+    each tick (already gated by any PFC pause it honours) and routes the
+    returned CNPs to the congestion-controlled sender(s).  ``run_sim``
+    drives exactly one of these; ``repro.fabric`` composes N of them
+    behind a Clos fabric.
+    """
+
+    def __init__(self, cfg: SimConfig, sim_ticks: Optional[int] = None):
+        c = self.cfg = cfg
+        self.dt = c.dt_us
+        ticks = (sim_ticks if sim_ticks is not None
+                 else int(c.sim_time_s * 1e6 / self.dt))
+        # release buckets (bytes becoming consumable at tick t);
+        # 1 s slack past the end for straggler releases
+        self.horizon = ticks + int(1e6 / self.dt)
+        self.rel_base = np.zeros(self.horizon, dtype=np.float64)
+        self.rel_strag = np.zeros(self.horizon, dtype=np.float64)
+
+        self.rnic_q = 0.0
+        self.resident = 0.0               # post-NIC bytes not yet consumed
+        self.strag_resident = 0.0
+        self.escape_debt = 0.0            # escaped bytes whose release is void
+        self.replace_debt = 0.0           # portion of debt borrowed by REPLACE
+        self.pool_cap = float(c.jet_pool_bytes)
+        self.replace_mem = 0.0
+
+        self.pfc_paused = False
+        self.pfc_pause_us = 0.0
+        self.cnp_count = 0.0
+        self.cnp_accum_us = c.cnp_interval_us  # allow an immediate first CNP
+        self.ecn_escape_accum_us = 0.0
+
+        self.total_arrived = 0.0          # accepted into RNIC buffer
+        self.total_drained = 0.0          # delivered to host datapath
+        self.dropped = 0.0
+        self.nic_dram_bytes = 0.0
+        self.escape_dram_bytes = 0.0
+        self.miss_sum, self.miss_n = 0.0, 0
+        self.pool_peak, self.pool_sum = 0.0, 0.0
+        self.replaces = self.copies = self.ecns = 0
+
+        # Message latency tracking.  The num_qps concurrent QPs stripe
+        # their messages across the wire, so one "generation" = num_qps
+        # messages that start and finish together; per-message latency is
+        # the generation's transit time (round-robin interleave approx).
+        self.msg = float(c.num_qps * c.msg_bytes)
+        self.starts: List[float] = []     # t of first byte into RNIC
+        self.dones: List[float] = []      # t of last byte drained
+        self.n_started = 0
+        self.n_drained_msgs = 0
+
+        self.hold_b = hold_us_baseline(c)
+        self.hold_j = hold_us_jet(c)
+        self.t = 0
+
+    def step(self, arriving: float) -> HostFeedback:
+        """Advance one tick with ``arriving`` bytes offered on the link."""
         c = self.cfg
-        return (c.consumer_latency_us +
-                c.msg_bytes * 8.0 / (c.app_gbps * 1e9) * 1e6)
+        dt = self.dt
+        t = self.t
+        if t >= self.horizon:
+            # past this point the release arrays would silently stop
+            # cycling bytes and the pool would deadlock — fail loudly
+            raise RuntimeError(
+                f"ReceiverHost stepped past its horizon ({self.horizon} "
+                f"ticks); construct it with sim_ticks covering the run")
+        now_us = t * dt
+        bytes_per_gbps_tick = 1e9 / 8.0 * dt * 1e-6
+        fb = HostFeedback()
+        cpu_bw = (c.cpu_membw_schedule(now_us * 1e-6)
+                  if c.cpu_membw_schedule else c.cpu_membw_gbps)
 
-    # slice-granular hold (Jet recycle pipeline): consumer latency dominates,
-    # the pipeline transit adds ~3 slice-times (paper §4.2.2).
-    def _hold_us_jet(self) -> float:
+        # ---- link -> RNIC ------------------------------------------------ #
+        space = c.rnic_buffer_bytes - self.rnic_q
+        accepted = min(arriving, max(0.0, space))
+        self.dropped += arriving - accepted
+        fb.dropped = arriving - accepted
+        fb.accepted = accepted
+        self.rnic_q += accepted
+        # message start timestamps
+        new_started = int((self.total_arrived + accepted) // self.msg) \
+            - int(self.total_arrived // self.msg)
+        if self.total_arrived == 0 and accepted > 0 and self.n_started == 0:
+            new_started += 1
+        for _ in range(new_started):
+            self.starts.append(now_us)
+            self.n_started += 1
+        self.total_arrived += accepted
+
+        # ---- drain RNIC -> host ------------------------------------------ #
+        if c.mode == "ddio":
+            # posted per-QP receive buffers + unconsumed post-NIC bytes
+            working_set = c.num_qps * c.msg_bytes + self.resident
+            over = working_set - c.ddio_bytes
+            miss = min(1.0, max(0.0, over / (c.miss_knee * c.ddio_bytes)))
+            self.miss_sum += miss
+            self.miss_n += 1
+            avail_dram = max(0.0, c.membw_total_gbps - cpu_bw)
+            drain_bw = c.pcie_gbps
+            if miss > 1e-9:
+                # each drained byte costs ~2*miss bytes of DRAM traffic
+                drain_bw = min(drain_bw, avail_dram / (2.0 * miss))
+            drained = min(self.rnic_q, drain_bw * bytes_per_gbps_tick)
+            self.nic_dram_bytes += drained * 2.0 * miss
+            hold = self.hold_b
+            strag_share = 0.0
+        else:  # jet
+            pool_free = max(0.0, self.pool_cap - self.resident)
+            drain_bw = min(c.pcie_gbps, c.line_rate_gbps * 4.0)
+            drained = min(self.rnic_q, drain_bw * bytes_per_gbps_tick,
+                          pool_free)
+            hold = self.hold_j
+            strag_share = c.straggler_frac
+
+        self.rnic_q -= drained
+        # schedule release
+        if drained > 0.0:
+            base_part = drained * (1.0 - strag_share)
+            strag_part = drained * strag_share
+            bt = min(self.horizon - 1, t + max(1, int(hold / dt)))
+            st = min(self.horizon - 1,
+                     t + max(1, int(hold * c.straggler_mult / dt)))
+            self.rel_base[bt] += base_part
+            self.rel_strag[st] += strag_part
+            self.resident += drained
+            self.strag_resident += strag_part
+        # message drain-completion timestamps
+        new_done = int((self.total_drained + drained) // self.msg) \
+            - int(self.total_drained // self.msg)
+        for _ in range(new_done):
+            self.dones.append(now_us)
+            self.n_drained_msgs += c.num_qps
+        self.total_drained += drained
+
+        # ---- post-NIC consumption ---------------------------------------- #
+        for arr, is_strag in ((self.rel_base, False), (self.rel_strag, True)):
+            r = arr[t]
+            if r <= 0.0:
+                continue
+            if self.escape_debt > 0.0:
+                void = min(r, self.escape_debt)
+                self.escape_debt -= void
+                r -= void
+                # a released straggler that had been REPLACE-escaped
+                # retires its DRAM borrow (re-arming the replace rung)
+                repay = min(void, self.replace_debt)
+                self.replace_debt -= repay
+                self.replace_mem = max(0.0, self.replace_mem - repay)
+            self.resident = max(0.0, self.resident - r)
+            if is_strag:
+                self.strag_resident = max(0.0, self.strag_resident - r)
+
+        # ---- Jet escape ladder (paper Algorithm 1) ------------------------ #
+        if c.mode == "jet":
+            avail_frac = max(0.0, self.pool_cap - self.resident) \
+                / self.pool_cap
+            if avail_frac < c.cache_safe:
+                if self.replace_mem < c.mem_esc_bytes:
+                    x = min(self.strag_resident,
+                            c.mem_esc_bytes - self.replace_mem)
+                    if x > 0.0:
+                        self.resident -= x
+                        self.strag_resident -= x
+                        self.escape_debt += x
+                        self.replace_debt += x
+                        self.replace_mem += x
+                        self.replaces += 1
+                        # background re-touch traffic, low frequency
+                        self.escape_dram_bytes += x * 0.1
+                else:
+                    x = self.strag_resident
+                    if x > 0.0:
+                        self.resident -= x
+                        self.strag_resident = 0.0
+                        self.escape_debt += x
+                        self.escape_dram_bytes += x  # the copy itself
+                        self.copies += 1
+                avail_frac = max(0.0, self.pool_cap - self.resident) \
+                    / self.pool_cap
+                if avail_frac < c.cache_danger:
+                    self.ecn_escape_accum_us += dt
+                    if self.ecn_escape_accum_us >= c.cnp_interval_us:
+                        self.ecn_escape_accum_us = 0.0
+                        self.cnp_count += 1
+                        self.ecns += 1
+                        fb.cnps += 1
+            self.pool_sum += self.resident
+            self.pool_peak = max(self.pool_peak, self.resident)
+
+        # ---- congestion signalling ---------------------------------------- #
+        q_frac = self.rnic_q / c.rnic_buffer_bytes
+        if c.pfc_enabled:
+            if self.pfc_paused:
+                if q_frac < c.pfc_xon:
+                    self.pfc_paused = False
+            elif q_frac > c.pfc_xoff:
+                self.pfc_paused = True
+            if self.pfc_paused:
+                self.pfc_pause_us += dt
+        # RNIC-watermark CNPs (ConnectX-6 DX feature, §2.1)
+        self.cnp_accum_us += dt
+        if (c.rnic_ecn_cnp and q_frac > c.ecn_threshold
+                and self.cnp_accum_us >= c.cnp_interval_us):
+            self.cnp_accum_us = 0.0
+            self.cnp_count += 1
+            fb.cnps += 1
+
+        fb.pfc_paused = self.pfc_paused
+        self.t += 1
+        return fb
+
+    def finalize(self) -> SimResult:
+        """Aggregate the per-tick state into the paper-facing SimResult."""
         c = self.cfg
-        r = c.recycle
-        per_byte_ns = r.get_ns_per_byte + r.process_ns_per_byte()
-        transit = 3.0 * r.slice_bytes * per_byte_ns * 1e-3
-        if not r.pipelined:
-            # unpipelined Jet holds whole messages (ablation mode)
-            return self._hold_us_baseline() + transit
-        return c.consumer_latency_us + transit
-
-    def run(self) -> SimResult:
-        c = self.cfg
-        dt = c.dt_us                       # us
-        ticks = int(c.sim_time_s * 1e6 / dt)
-        bytes_per_gbps_tick = 1e9 / 8.0 * dt * 1e-6   # bytes per (Gbps*tick)
-
-        rate = DcqcnRate(c.dcqcn)
-        # release buckets (bytes becoming consumable at tick t)
-        horizon = ticks + int(1e6 / dt)    # 1 s slack for stragglers
-        rel_base = np.zeros(horizon, dtype=np.float64)
-        rel_strag = np.zeros(horizon, dtype=np.float64)
-
-        rnic_q = 0.0
-        resident = 0.0                     # post-NIC bytes not yet consumed
-        strag_resident = 0.0
-        escape_debt = 0.0                  # escaped bytes whose release is void
-        replace_debt = 0.0                 # portion of debt borrowed via REPLACE
-        pool_cap = float(c.jet_pool_bytes)
-        replace_mem = 0.0
-
-        pfc_paused = False
-        pfc_pause_us = 0.0
-        cnp_count = 0.0
-        cnp_accum_us = c.cnp_interval_us   # allow an immediate first CNP
-        ecn_escape_accum_us = 0.0
-
-        total_arrived = 0.0                # accepted into RNIC buffer
-        total_drained = 0.0                # delivered to host datapath
-        dropped = 0.0
-        nic_dram_bytes = 0.0
-        escape_dram_bytes = 0.0
-        miss_sum, miss_n = 0.0, 0
-        pool_peak, pool_sum = 0.0, 0.0
-        replaces = copies = ecns = 0
-
-        # Message latency tracking.  The num_qps concurrent QPs stripe their
-        # messages across the wire, so one "generation" = num_qps messages
-        # that start and finish together; per-message latency is the
-        # generation's transit time (round-robin interleave approximation).
-        msg = float(c.num_qps * c.msg_bytes)
-        starts: List[float] = []           # t of first byte into RNIC
-        dones: List[float] = []            # t of last byte drained
-        n_started = 0
-        n_drained_msgs = 0
-
-        hold_b = self._hold_us_baseline()
-        hold_j = self._hold_us_jet()
-
-        for t in range(ticks):
-            now_us = t * dt
-            cpu_bw = (c.cpu_membw_schedule(now_us * 1e-6)
-                      if c.cpu_membw_schedule else c.cpu_membw_gbps)
-
-            # ---- sender -> RNIC ------------------------------------------ #
-            offered = min(rate.advance(dt), c.line_rate_gbps *
-                          c.incast_senders)
-            if c.offered_gbps is not None:
-                offered = min(offered, c.offered_gbps)
-            arriving = 0.0 if pfc_paused else offered * bytes_per_gbps_tick
-            space = c.rnic_buffer_bytes - rnic_q
-            accepted = min(arriving, max(0.0, space))
-            dropped += arriving - accepted
-            rnic_q += accepted
-            # message start timestamps
-            new_started = int((total_arrived + accepted) // msg) \
-                - int(total_arrived // msg)
-            if total_arrived == 0 and accepted > 0 and n_started == 0:
-                new_started += 1
-            for _ in range(new_started):
-                starts.append(now_us)
-                n_started += 1
-            total_arrived += accepted
-
-            # ---- drain RNIC -> host -------------------------------------- #
-            if c.mode == "ddio":
-                # posted per-QP receive buffers + unconsumed post-NIC bytes
-                working_set = c.num_qps * c.msg_bytes + resident
-                over = working_set - c.ddio_bytes
-                miss = min(1.0, max(0.0, over / (c.miss_knee * c.ddio_bytes)))
-                miss_sum += miss
-                miss_n += 1
-                avail_dram = max(0.0, c.membw_total_gbps - cpu_bw)
-                drain_bw = c.pcie_gbps
-                if miss > 1e-9:
-                    # each drained byte costs ~2*miss bytes of DRAM traffic
-                    drain_bw = min(drain_bw, avail_dram / (2.0 * miss))
-                drained = min(rnic_q, drain_bw * bytes_per_gbps_tick)
-                nic_dram_bytes += drained * 2.0 * miss
-                hold = hold_b
-                strag_share = 0.0
-            else:  # jet
-                pool_used = resident
-                pool_free = max(0.0, pool_cap - pool_used)
-                drain_bw = min(c.pcie_gbps, c.line_rate_gbps * 4.0)
-                drained = min(rnic_q, drain_bw * bytes_per_gbps_tick,
-                              pool_free)
-                hold = hold_j
-                strag_share = c.straggler_frac
-
-            rnic_q -= drained
-            # schedule release
-            if drained > 0.0:
-                base_part = drained * (1.0 - strag_share)
-                strag_part = drained * strag_share
-                bt = min(horizon - 1, t + max(1, int(hold / dt)))
-                st = min(horizon - 1,
-                         t + max(1, int(hold * c.straggler_mult / dt)))
-                rel_base[bt] += base_part
-                rel_strag[st] += strag_part
-                resident += drained
-                strag_resident += strag_part
-            # message drain-completion timestamps
-            new_done = int((total_drained + drained) // msg) \
-                - int(total_drained // msg)
-            for _ in range(new_done):
-                dones.append(now_us)
-                n_drained_msgs += c.num_qps
-            total_drained += drained
-
-            # ---- post-NIC consumption ------------------------------------ #
-            for arr, is_strag in ((rel_base, False), (rel_strag, True)):
-                r = arr[t]
-                if r <= 0.0:
-                    continue
-                if escape_debt > 0.0:
-                    void = min(r, escape_debt)
-                    escape_debt -= void
-                    r -= void
-                    # a released straggler that had been REPLACE-escaped
-                    # retires its DRAM borrow (re-arming the replace rung)
-                    repay = min(void, replace_debt)
-                    replace_debt -= repay
-                    replace_mem = max(0.0, replace_mem - repay)
-                resident = max(0.0, resident - r)
-                if is_strag:
-                    strag_resident = max(0.0, strag_resident - r)
-
-            # ---- Jet escape ladder (paper Algorithm 1) -------------------- #
-            if c.mode == "jet":
-                avail_frac = max(0.0, pool_cap - resident) / pool_cap
-                if avail_frac < c.cache_safe:
-                    if replace_mem < c.mem_esc_bytes:
-                        x = min(strag_resident,
-                                c.mem_esc_bytes - replace_mem)
-                        if x > 0.0:
-                            resident -= x
-                            strag_resident -= x
-                            escape_debt += x
-                            replace_debt += x
-                            replace_mem += x
-                            replaces += 1
-                            # background re-touch traffic, low frequency
-                            escape_dram_bytes += x * 0.1
-                    else:
-                        x = strag_resident
-                        if x > 0.0:
-                            resident -= x
-                            strag_resident = 0.0
-                            escape_debt += x
-                            escape_dram_bytes += x  # the copy itself
-                            copies += 1
-                    avail_frac = max(0.0, pool_cap - resident) / pool_cap
-                    if avail_frac < c.cache_danger:
-                        ecn_escape_accum_us += dt
-                        if ecn_escape_accum_us >= c.cnp_interval_us:
-                            ecn_escape_accum_us = 0.0
-                            rate.on_cnp()
-                            cnp_count += 1
-                            ecns += 1
-                pool_sum += resident
-                pool_peak = max(pool_peak, resident)
-
-            # ---- congestion signalling ------------------------------------ #
-            q_frac = rnic_q / c.rnic_buffer_bytes
-            if c.pfc_enabled:
-                if pfc_paused:
-                    if q_frac < c.pfc_xon:
-                        pfc_paused = False
-                elif q_frac > c.pfc_xoff:
-                    pfc_paused = True
-                if pfc_paused:
-                    pfc_pause_us += dt
-            # RNIC-watermark CNPs (ConnectX-6 DX feature, §2.1)
-            cnp_accum_us += dt
-            if (c.rnic_ecn_cnp and q_frac > c.ecn_threshold
-                    and cnp_accum_us >= c.cnp_interval_us):
-                cnp_accum_us = 0.0
-                rate.on_cnp()
-                cnp_count += 1
-
-        # ---- aggregate metrics ------------------------------------------- #
-        sim_us = ticks * dt
-        goodput = total_drained * 8.0 / (sim_us * 1e-6) / 1e9
-        post = (hold_j if c.mode == "jet" else hold_b)
-        lats = [d - s + post for s, d in zip(starts, dones)]
+        ticks = max(1, self.t)
+        sim_us = ticks * self.dt
+        goodput = self.total_drained * 8.0 / (sim_us * 1e-6) / 1e9
+        post = (self.hold_j if c.mode == "jet" else self.hold_b)
+        lats = [d - s + post for s, d in zip(self.starts, self.dones)]
         lats = lats[len(lats) // 10:]      # drop warm-up decile
         if not lats:
             lats = [float("nan")]
@@ -362,19 +394,64 @@ class ReceiverSim:
             avg_latency_us=float(np.mean(arr)),
             p99_latency_us=float(np.percentile(arr, 99)),
             p999_latency_us=float(np.percentile(arr, 99.9)),
-            pfc_pause_us=pfc_pause_us,
-            cnp_count=cnp_count,
-            ddio_miss_rate=(miss_sum / miss_n) if miss_n else 0.0,
-            nic_dram_gbps=nic_dram_bytes * 8.0 / (sim_us * 1e-6) / 1e9,
-            pool_peak_bytes=int(pool_peak),
-            pool_avg_bytes=pool_sum / max(1, ticks),
-            escape_replaces=replaces,
-            escape_copies=copies,
-            escape_ecn=ecns,
-            escape_dram_gbps=escape_dram_bytes * 8.0 / (sim_us * 1e-6) / 1e9,
-            dropped_bytes=int(dropped),
-            completed_messages=n_drained_msgs,
+            pfc_pause_us=self.pfc_pause_us,
+            cnp_count=self.cnp_count,
+            ddio_miss_rate=(self.miss_sum / self.miss_n)
+            if self.miss_n else 0.0,
+            nic_dram_gbps=self.nic_dram_bytes * 8.0 / (sim_us * 1e-6) / 1e9,
+            pool_peak_bytes=int(self.pool_peak),
+            pool_avg_bytes=self.pool_sum / ticks,
+            escape_replaces=self.replaces,
+            escape_copies=self.copies,
+            escape_ecn=self.ecns,
+            escape_dram_gbps=self.escape_dram_bytes * 8.0
+            / (sim_us * 1e-6) / 1e9,
+            dropped_bytes=int(self.dropped),
+            completed_messages=self.n_drained_msgs,
         )
+
+
+# --------------------------------------------------------------------------- #
+# Simulator
+# --------------------------------------------------------------------------- #
+class ReceiverSim:
+    """Single-host driver: one DCQCN sender feeding one ReceiverHost.
+
+    Preserves the original ``run()`` API and its exact numerics: the
+    sender is gated by the receiver's PFC state and receives the
+    receiver's CNPs within the same tick.
+    """
+
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+
+    # message-granular post-NIC hold time (baseline, non-pipelined)
+    def _hold_us_baseline(self) -> float:
+        return hold_us_baseline(self.cfg)
+
+    # slice-granular hold (Jet recycle pipeline)
+    def _hold_us_jet(self) -> float:
+        return hold_us_jet(self.cfg)
+
+    def run(self) -> SimResult:
+        c = self.cfg
+        dt = c.dt_us                       # us
+        ticks = int(c.sim_time_s * 1e6 / dt)
+        bytes_per_gbps_tick = 1e9 / 8.0 * dt * 1e-6   # bytes per (Gbps*tick)
+
+        rate = DcqcnRate(c.dcqcn)
+        host = ReceiverHost(c, sim_ticks=ticks)
+        for _ in range(ticks):
+            offered = min(rate.advance(dt), c.line_rate_gbps *
+                          c.incast_senders)
+            if c.offered_gbps is not None:
+                offered = min(offered, c.offered_gbps)
+            arriving = (0.0 if host.pfc_paused
+                        else offered * bytes_per_gbps_tick)
+            fb = host.step(arriving)
+            for _ in range(fb.cnps):
+                rate.on_cnp()
+        return host.finalize()
 
 
 def run_sim(cfg: SimConfig) -> SimResult:

@@ -1,0 +1,26 @@
+"""Multi-host RDCA fabric: Clos topologies, switches, hosts, driver, sweep.
+
+- topology:  leaf–spine Clos graphs + presets (jet_testbed, incast_fabric)
+- switch:    output-queued switch (per-port ECN marking, PFC propagation)
+- hosts:     step-able ReceiverHost (the refactored run_sim tick body) and
+             DCQCN SenderHost
+- fabric:    multi-host discrete-event driver -> per-host SimResults +
+             fabric metrics (victim goodput, pause fan-out, incast FCT)
+- scenarios: incast-N / all-to-all HPC / storage OLTP-OLAP-backup bundles
+- sweep:     vectorized parameter-sweep engine (jax.vmap + lax.scan over
+             stacked per-host fluid state; numpy reference backend)
+"""
+from .fabric import FabricConfig, FabricResult, Flow, run_fabric
+from .hosts import HostFeedback, ReceiverHost, SenderHost
+from .scenarios import Scenario, all_to_all, incast, single_pair, storage_mix
+from .switch import OutputPort, Switch, SwitchConfig
+from .sweep import SweepParams, grid_configs, run_sweep
+from .topology import Link, Topology, clos, incast_fabric, jet_testbed
+
+__all__ = [
+    "FabricConfig", "FabricResult", "Flow", "HostFeedback", "Link",
+    "OutputPort", "ReceiverHost", "Scenario", "SenderHost", "Switch",
+    "SwitchConfig", "SweepParams", "Topology", "all_to_all", "clos",
+    "grid_configs", "incast", "incast_fabric", "jet_testbed", "run_fabric",
+    "run_sweep", "single_pair", "storage_mix",
+]

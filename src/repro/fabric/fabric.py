@@ -1,0 +1,261 @@
+"""Multi-host discrete-event driver: senders -> Clos switches -> receivers.
+
+Per 1 us fluid tick (same timebase as the single-host simulator):
+
+1. every flow's DCQCN machine offers bytes into its host NIC queue;
+2. queues forward in tier order (host->leaf, leaf->spine, spine->leaf,
+   leaf->host), so an uncongested byte traverses the fabric in one tick —
+   the cut-through limit, which keeps a 1-sender/1-receiver fabric
+   numerically equivalent to ``repro.core.run_sim``;
+3. each receiver's :class:`ReceiverHost` advances one tick on the arrived
+   bytes; its CNPs (RNIC watermark / Jet escape ECN) and the ECN marks the
+   switches stamped on departing bytes are converted into per-flow CNPs
+   that throttle exactly the offending senders;
+4. switch ports refresh PFC xoff/xon state; paused ingress links stall all
+   flows riding them next tick (head-of-line blocking).
+
+Outputs one :class:`~repro.core.simulator.SimResult` per receiver plus
+fabric-level metrics: per-flow goodput, victim-flow goodput, pause-frame
+fan-out and incast completion time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+from ..core.simulator import SimConfig, SimResult, testbed_100g
+from .hosts import ReceiverHost, SenderHost
+from .switch import OutputPort, Switch, SwitchConfig
+from .topology import LinkKey, Topology
+
+
+@dataclasses.dataclass
+class Flow:
+    """One sender->receiver transfer riding the fabric."""
+    src: str
+    dst: str
+    offered_gbps: Optional[float] = None     # open-loop cap (None=saturate)
+    burst_bytes: Optional[float] = None      # closed flow: stop after burst
+    start_us: float = 0.0
+    tag: str = ""                            # e.g. "incast" | "victim"
+
+
+@dataclasses.dataclass
+class FabricConfig:
+    sim_time_s: float = 0.01
+    dt_us: float = 1.0
+    switch: SwitchConfig = dataclasses.field(default_factory=SwitchConfig)
+    # SimConfig factory per receiver host (mode, pool, DDIO, PFC, ...)
+    receiver_cfg: Callable[[str], SimConfig] = \
+        lambda host: testbed_100g("jet")
+
+
+@dataclasses.dataclass
+class FabricResult:
+    per_host: Dict[str, SimResult]
+    flow_goodput_gbps: Dict[int, float]
+    flow_delivered_bytes: Dict[int, float]
+    flow_completion_us: Dict[int, float]     # closed flows; inf if unfinished
+    flow_tags: Dict[int, str]
+    incast_completion_us: float              # max over tag=="incast" flows
+    victim_goodput_gbps: float               # mean over tag=="victim" flows
+    pause_link_us: Dict[LinkKey, float]
+    pause_fanout: int                        # distinct links ever paused
+    ecn_marked_bytes: float
+    switch_dropped_bytes: float
+
+    def tagged_goodput(self, tag: str) -> float:
+        vals = [g for fid, g in self.flow_goodput_gbps.items()
+                if self.flow_tags[fid] == tag]
+        return sum(vals) / len(vals) if vals else float("nan")
+
+
+def run_fabric(topo: Topology, flows: List[Flow],
+               fcfg: Optional[FabricConfig] = None) -> FabricResult:
+    fcfg = fcfg or FabricConfig()
+    topo.validate()
+    dt = fcfg.dt_us
+    ticks = int(fcfg.sim_time_s * 1e6 / dt)
+
+    # -- build components ---------------------------------------------------
+    senders: Dict[int, SenderHost] = {}
+    next_hop: Dict[Tuple[str, int], str] = {}      # (node, fid) -> next node
+    flow_path: Dict[int, List[str]] = {}
+    for fid, f in enumerate(flows):
+        nodes = topo.route(f.src, f.dst, fid)
+        flow_path[fid] = nodes
+        for a, b in zip(nodes, nodes[1:]):
+            next_hop[(a, fid)] = b
+        senders[fid] = SenderHost(
+            line_rate_gbps=topo.access_gbps(f.src),
+            offered_gbps=f.offered_gbps, burst_bytes=f.burst_bytes,
+            start_us=f.start_us)
+
+    recv_hosts = sorted({f.dst for f in flows})
+    receivers: Dict[str, ReceiverHost] = {
+        h: ReceiverHost(fcfg.receiver_cfg(h), sim_ticks=ticks)
+        for h in recv_hosts}
+
+    # host NIC egress queues (source-side backlog onto the access link);
+    # NICs never ECN-mark their own egress — only switches do
+    nic_cfg = dataclasses.replace(fcfg.switch, ecn_enabled=False)
+    nic_ports: Dict[str, OutputPort] = {}
+    for f in flows:
+        if f.src not in nic_ports:
+            nic_ports[f.src] = OutputPort(
+                topo.link(f.src, topo.host_leaf[f.src]), nic_cfg)
+    switches: Dict[str, Switch] = {}
+    for name in topo.leaves + topo.spines:
+        out = [l for l in topo.links.values() if l.src == name]
+        switches[name] = Switch(name, out, fcfg.switch)
+
+    # -- per-flow CNP pacing at the receiver NP (DCQCN) ----------------------
+    cnp_accum_us = {fid: math.inf for fid in senders}   # immediate first CNP
+    marked_backlog = {fid: 0.0 for fid in senders}
+    flows_by_dst: Dict[str, List[int]] = {}
+    for fid, f in enumerate(flows):
+        flows_by_dst.setdefault(f.dst, []).append(fid)
+    # heaviest recently-arriving flow per receiver: the CNP target while
+    # the access link is paused and nothing arrives (run_sim always
+    # delivers receiver CNPs to its sender; the fabric must too)
+    last_heavy: Dict[str, Optional[int]] = {}
+
+    delivered = {fid: 0.0 for fid in senders}
+    completion = {fid: math.inf for fid in senders}
+    pause_link_us: Dict[LinkKey, float] = {}
+    paused_links: Set[LinkKey] = set()
+
+    def forward(sw: Switch, port_dst_kind: str,
+                arrivals: Dict[str, Dict[int, List[float]]]) -> None:
+        """Drain this switch's ports whose destination kind matches, pushing
+        into the next switch or the receiver-arrival accumulator."""
+        for dst, port in sw.ports.items():
+            if port_dst_kind == "switch" and dst in receivers_or_hosts:
+                continue
+            if port_dst_kind == "host" and dst not in receivers_or_hosts:
+                continue
+            port.paused = (port.link.key in paused_links or
+                           (port_dst_kind == "host" and
+                            dst in receivers and
+                            receivers[dst].cfg.pfc_enabled and
+                            receivers[dst].pfc_paused))
+            for fid, b, m in port.drain(dt):
+                if port_dst_kind == "host":
+                    slot = arrivals.setdefault(dst, {})
+                    cur = slot.setdefault(fid, [0.0, 0.0])
+                    cur[0] += b
+                    cur[1] += m
+                else:
+                    nxt = next_hop[(dst, fid)]
+                    lost = switches[dst].enqueue(nxt, fid, b, m,
+                                                 port.link.key)
+                    # fluid go-back-N: dropped bytes are re-sent later
+                    senders[fid].injected -= lost
+
+    receivers_or_hosts = set(topo.hosts)
+
+    for t in range(ticks):
+        now_us = (t + 1) * dt
+        # ---- 1. senders inject into their NIC queue ----------------------- #
+        for fid, f in enumerate(flows):
+            s = senders[fid]
+            port = nic_ports[f.src]
+            b = s.offer(dt)
+            # source-side backpressure: never overflow the NIC queue
+            space = fcfg.switch.port_buffer_bytes - port.queued_bytes
+            if b > space:
+                s.injected -= b - max(0.0, space)
+                b = max(0.0, space)
+            port.enqueue(fid, b, 0.0, None)
+
+        # ---- 2. tier-ordered forwarding ----------------------------------- #
+        arrivals: Dict[str, Dict[int, List[float]]] = {}
+        for host, port in nic_ports.items():
+            leaf = topo.host_leaf[host]
+            port.paused = port.link.key in paused_links
+            for fid, b, m in port.drain(dt):
+                lost = switches[leaf].enqueue(next_hop[(leaf, fid)], fid,
+                                              b, m, port.link.key)
+                senders[fid].injected -= lost
+        for leaf in topo.leaves:                      # uplinks -> spines
+            forward(switches[leaf], "switch", arrivals)
+        for spine in topo.spines:                     # spines -> dst leaves
+            forward(switches[spine], "switch", arrivals)
+        for leaf in topo.leaves:                      # downlinks -> hosts
+            forward(switches[leaf], "host", arrivals)
+
+        # ---- 3. receivers advance; CNPs route back ------------------------ #
+        for host, rx in receivers.items():
+            arr = arrivals.get(host, {})
+            total = sum(b for b, _ in arr.values())
+            fb = rx.step(total)
+            if total > 0.0:
+                share = fb.accepted / total
+                for fid, (b, _) in arr.items():
+                    d = b * share
+                    delivered[fid] += d
+                    # RNIC tail-drops are retransmitted too (fluid RC)
+                    senders[fid].injected -= b - d
+                    f = flows[fid]
+                    if (f.burst_bytes is not None
+                            and math.isinf(completion[fid])
+                            and delivered[fid] >= f.burst_bytes - 1e-6):
+                        completion[fid] = now_us
+            # receiver-generated CNPs hit the heaviest arriving flow; with
+            # the access link paused (arr empty) they fall back to the
+            # most recent heavy flow so senders stay throttled during
+            # pauses, as in run_sim
+            if arr:
+                last_heavy[host] = max(arr, key=lambda i: arr[i][0])
+            heavy = last_heavy.get(host)
+            if fb.cnps and heavy is not None:
+                for _ in range(fb.cnps):
+                    senders[heavy].on_cnp()
+            # switch ECN marks -> per-flow CNPs, paced per DCQCN NP; the
+            # pacing clock runs for every flow of this receiver, so marks
+            # owed to a stalled/paused flow still convert on schedule
+            for fid, (_, m) in arr.items():
+                marked_backlog[fid] += m
+            interval = rx.cfg.cnp_interval_us
+            for fid in flows_by_dst.get(host, ()):
+                cnp_accum_us[fid] += dt
+                if marked_backlog[fid] > 0.0 and \
+                        cnp_accum_us[fid] >= interval:
+                    cnp_accum_us[fid] = 0.0
+                    marked_backlog[fid] = 0.0
+                    senders[fid].on_cnp()
+
+        # ---- 4. PFC pause propagation ------------------------------------- #
+        paused_links = set()
+        for sw in switches.values():
+            paused_links |= sw.update_pfc()
+        for lk in paused_links:
+            pause_link_us[lk] = pause_link_us.get(lk, 0.0) + dt
+
+    # -- aggregate ----------------------------------------------------------
+    sim_us = ticks * dt
+    per_host = {h: rx.finalize() for h, rx in receivers.items()}
+    goodput = {fid: delivered[fid] * 8.0 / (sim_us * 1e-6) / 1e9
+               for fid in delivered}
+    tags = {fid: f.tag for fid, f in enumerate(flows)}
+    incast = [completion[fid] for fid, f in enumerate(flows)
+              if f.tag == "incast" and f.burst_bytes is not None]
+    victims = [goodput[fid] for fid, f in enumerate(flows)
+               if f.tag == "victim"]
+    return FabricResult(
+        per_host=per_host,
+        flow_goodput_gbps=goodput,
+        flow_delivered_bytes=dict(delivered),
+        flow_completion_us=dict(completion),
+        flow_tags=tags,
+        incast_completion_us=max(incast) if incast else float("nan"),
+        victim_goodput_gbps=(sum(victims) / len(victims)
+                             if victims else float("nan")),
+        pause_link_us=pause_link_us,
+        pause_fanout=len(pause_link_us),
+        ecn_marked_bytes=sum(s.marked_bytes() for s in switches.values()),
+        switch_dropped_bytes=sum(s.dropped_bytes()
+                                 for s in switches.values())
+        + sum(p.dropped_bytes for p in nic_ports.values()),
+    )

@@ -1,0 +1,71 @@
+"""Host components for the multi-host fabric.
+
+:class:`ReceiverHost` — the receive-datapath tick body that also powers
+``run_sim`` — lives in :mod:`repro.core.simulator` (core stays the bottom
+layer; the fabric composes N of them) and is re-exported here alongside
+the fabric-only :class:`SenderHost`.
+
+:class:`SenderHost` wraps one DCQCN rate machine per flow, adding burst
+(closed-flow) bookkeeping for the fabric driver.  PFC pause gating is the
+driver's job: it pauses the host NIC egress queue (``run_fabric`` step 2),
+so backpressure reaches the flow through queue space, not a sender flag.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from ..core.dcqcn import DcqcnConfig, DcqcnRate
+from ..core.simulator import (HostFeedback, ReceiverHost,  # noqa: F401
+                              hold_us_baseline, hold_us_jet)
+
+__all__ = ["HostFeedback", "ReceiverHost", "SenderHost",
+           "hold_us_baseline", "hold_us_jet"]
+
+
+class SenderHost:
+    """One DCQCN-paced flow source (per-QP rate machine, paper §2.1).
+
+    ``offer(dt_us)`` advances the rate machine and returns the bytes the
+    flow wants to inject this tick.  Closed flows (``burst_bytes``) stop
+    offering once the burst has been injected; the fabric re-credits
+    ``injected`` for bytes lost downstream (fluid go-back-N), which
+    re-opens the tap.
+    """
+
+    def __init__(self, line_rate_gbps: float,
+                 dcqcn: Optional[DcqcnConfig] = None,
+                 offered_gbps: Optional[float] = None,
+                 burst_bytes: Optional[float] = None,
+                 start_us: float = 0.0):
+        self.line_rate_gbps = line_rate_gbps
+        self.rate = DcqcnRate(dcqcn or
+                              DcqcnConfig(line_rate_gbps=line_rate_gbps))
+        self.offered_gbps = offered_gbps
+        self.burst_bytes = burst_bytes
+        self.start_us = start_us
+        self.injected = 0.0
+        self.now_us = 0.0
+
+    @property
+    def exhausted(self) -> bool:
+        return (self.burst_bytes is not None
+                and self.injected >= self.burst_bytes)
+
+    def offer(self, dt_us: float) -> float:
+        """Bytes this flow injects into its NIC queue this tick."""
+        self.now_us += dt_us
+        if self.now_us <= self.start_us:
+            return 0.0
+        gbps = min(self.rate.advance(dt_us), self.line_rate_gbps)
+        if self.offered_gbps is not None:
+            gbps = min(gbps, self.offered_gbps)
+        if self.exhausted:
+            return 0.0
+        b = gbps * 1e9 / 8.0 * dt_us * 1e-6
+        if self.burst_bytes is not None:
+            b = min(b, self.burst_bytes - self.injected)
+        self.injected += b
+        return b
+
+    def on_cnp(self) -> None:
+        self.rate.on_cnp()

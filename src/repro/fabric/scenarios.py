@@ -1,0 +1,123 @@
+"""Scenario library: canonical multi-host workloads over the Clos fabric.
+
+Mirrors the paper's evaluation mix (§6): storage incast, HPC all-to-all,
+and the three storage traffic classes of fig 9 (OLTP / OLAP / backup),
+each returning a ready-to-run (topology, flows, fabric-config) bundle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from ..core.simulator import SimConfig, testbed_100g
+from .fabric import FabricConfig, Flow
+from .switch import SwitchConfig
+from .topology import Topology, clos, incast_fabric, jet_testbed
+
+
+@dataclasses.dataclass
+class Scenario:
+    name: str
+    topology: Topology
+    flows: List[Flow]
+    fabric: FabricConfig
+
+    def run(self):
+        from .fabric import run_fabric
+        return run_fabric(self.topology, self.flows, self.fabric)
+
+
+def _recv_factory(mode: str, pfc: bool,
+                  msg_bytes: Optional[int] = None,
+                  **kw) -> Callable[[str], SimConfig]:
+    def make(host: str) -> SimConfig:
+        extra = dict(kw)
+        if msg_bytes is not None:
+            extra["msg_bytes"] = msg_bytes
+        return testbed_100g(mode, pfc_enabled=pfc, **extra)
+    return make
+
+
+def incast(n_senders: int = 8, mode: str = "jet", burst_mb: float = 2.0,
+           pfc: bool = False, with_victim: bool = True,
+           sim_time_s: float = 0.02) -> Scenario:
+    """N senders on one leaf burst into one receiver on another leaf; an
+    optional open-loop victim flow shares a sender host + the fabric path
+    but targets a different receiver (measures HoL collateral)."""
+    topo = incast_fabric(n_senders)
+    flows = [Flow(src=f"h0_{i}", dst="h1_0",
+                  burst_bytes=burst_mb * 1e6, tag="incast")
+             for i in range(n_senders)]
+    if with_victim:
+        flows.append(Flow(src=f"h0_{n_senders - 1}", dst="h1_1",
+                          tag="victim"))
+    sw = SwitchConfig(pfc_enabled=pfc)
+    return Scenario(
+        name=f"incast{n_senders}_{mode}{'_pfc' if pfc else ''}",
+        topology=topo, flows=flows,
+        fabric=FabricConfig(sim_time_s=sim_time_s, switch=sw,
+                            receiver_cfg=_recv_factory(mode, pfc)))
+
+
+def all_to_all(n_hosts: int = 8, mode: str = "jet",
+               msg_kb: int = 256, pfc: bool = False,
+               sim_time_s: float = 0.01) -> Scenario:
+    """HPC all-to-all: every host streams to every other host (the MPI
+    personalized-exchange shape of the paper's fig 13 substrate)."""
+    per_leaf = max(2, (n_hosts + 1) // 2)   # ceil: never truncate odd N
+    topo = clos(n_leaves=2, hosts_per_leaf=per_leaf, n_spines=2)
+    hosts = topo.hosts[:n_hosts]
+    assert len(hosts) == n_hosts
+    flows = [Flow(src=a, dst=b, tag="a2a")
+             for a in hosts for b in hosts if a != b]
+    sw = SwitchConfig(pfc_enabled=pfc)
+    return Scenario(
+        name=f"a2a{n_hosts}_{mode}", topology=topo, flows=flows,
+        fabric=FabricConfig(sim_time_s=sim_time_s, switch=sw,
+                            receiver_cfg=_recv_factory(
+                                mode, pfc, msg_bytes=msg_kb << 10)))
+
+
+# fig 9 storage classes: message size + per-flow open-loop load; num_qps
+# shrinks with message size so latency "generations" (num_qps * msg bytes)
+# stay observable within a few ms of simulated time
+_STORAGE: Dict[str, dict] = {
+    "oltp":   dict(msg_kb=8,    flow_gbps=8.0,  n_clients=8, num_qps=32),
+    "olap":   dict(msg_kb=1024, flow_gbps=40.0, n_clients=4, num_qps=8),
+    "backup": dict(msg_kb=4096, flow_gbps=90.0, n_clients=2, num_qps=2),
+}
+
+
+def storage_mix(kind: str = "oltp", mode: str = "jet",
+                pfc: bool = False, sim_time_s: float = 0.02) -> Scenario:
+    """Storage traffic fanning into one receiver host (paper fig 9):
+    OLTP = many small-message clients, OLAP = 1 MB scans, backup = few
+    near-line-rate streams."""
+    if kind not in _STORAGE:
+        raise ValueError(f"unknown storage mix {kind!r}; "
+                         f"pick one of {sorted(_STORAGE)}")
+    p = _STORAGE[kind]
+    topo = incast_fabric(p["n_clients"])
+    flows = [Flow(src=f"h0_{i}", dst="h1_0", offered_gbps=p["flow_gbps"],
+                  tag=kind)
+             for i in range(p["n_clients"])]
+    sw = SwitchConfig(pfc_enabled=pfc)
+    return Scenario(
+        name=f"storage_{kind}_{mode}", topology=topo, flows=flows,
+        fabric=FabricConfig(sim_time_s=sim_time_s, switch=sw,
+                            receiver_cfg=_recv_factory(
+                                mode, pfc, msg_bytes=p["msg_kb"] << 10,
+                                num_qps=p["num_qps"])))
+
+
+def single_pair(mode: str = "jet", sim_time_s: float = 0.01,
+                **recv_kw) -> Scenario:
+    """One sender, one receiver under one switch — the fabric rendition of
+    the paper's two-host testbed (equivalence anchor for run_sim)."""
+    topo = jet_testbed(2)
+    return Scenario(
+        name=f"pair_{mode}", topology=topo,
+        flows=[Flow(src="h0_0", dst="h0_1")],
+        fabric=FabricConfig(sim_time_s=sim_time_s,
+                            receiver_cfg=_recv_factory(mode, False,
+                                                       **recv_kw)))

@@ -1,0 +1,166 @@
+"""Output-queued switch model with per-port ECN marking and PFC pauses.
+
+Fluid model, one FIFO per output port, per-flow byte accounting so that
+
+* ECN marks survive multi-hop forwarding and reach the right receiver
+  (which turns them into per-flow CNPs, DCQCN-style);
+* PFC pause targets exactly the ingress links feeding a congested output
+  port — pausing a link stalls *everything* riding it, which is the
+  head-of-line blocking / congestion-spreading pathology the hyperscale
+  RDMA literature documents (Hoefler et al.) and the paper motivates
+  against (§2.1).
+
+Queues drain proportionally across flows (fluid approximation of FIFO).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from .topology import Link, LinkKey
+
+
+@dataclasses.dataclass
+class SwitchConfig:
+    port_buffer_bytes: int = 4 << 20
+    ecn_enabled: bool = True
+    ecn_kmin_frac: float = 0.10       # mark departures once queue > kmin
+    pfc_enabled: bool = False
+    pfc_xoff_frac: float = 0.60       # assert pause above this occupancy
+    pfc_xon_frac: float = 0.30        # release below this occupancy
+
+
+@dataclasses.dataclass
+class _FlowQ:
+    bytes: float = 0.0
+    marked: float = 0.0               # ECN-marked subset of ``bytes``
+
+
+class OutputPort:
+    """One output FIFO: per-flow bytes, ECN/PFC watermarks, drop + pause
+    accounting."""
+
+    def __init__(self, link: Link, cfg: SwitchConfig):
+        self.link = link
+        self.cfg = cfg
+        self.flows: Dict[int, _FlowQ] = {}
+        # which ingress link each queued flow arrived on (pause targeting)
+        self.flow_ingress: Dict[int, Optional[LinkKey]] = {}
+        self.paused = False           # downstream asserted PFC on this link
+        self.pause_asserted = False   # this port's xoff toward upstream
+        self.dropped_bytes = 0.0
+        self.marked_bytes = 0.0
+        self.pause_us = 0.0
+        self.peak_bytes = 0.0
+        # running total: queued_bytes is read per (flow, tick) by the
+        # fabric hot loop, so summing the dict there would be O(flows^2)
+        self._total_bytes = 0.0
+
+    @property
+    def queued_bytes(self) -> float:
+        return self._total_bytes
+
+    def enqueue(self, fid: int, nbytes: float, marked: float,
+                in_link: Optional[LinkKey]) -> float:
+        """Queue up to the buffer limit; returns the bytes dropped (tail
+        drop — the fabric re-credits them to the sender, i.e. fluid
+        go-back-N retransmission)."""
+        if nbytes <= 0.0:
+            return 0.0
+        q = self.queued_bytes
+        space = self.cfg.port_buffer_bytes - q
+        take = min(nbytes, max(0.0, space))
+        dropped = nbytes - take
+        self.dropped_bytes += dropped
+        if take <= 0.0:
+            return dropped
+        marked = marked * (take / nbytes)
+        # DCTCP-style: mark on enqueue when the queue is past the knee
+        if self.cfg.ecn_enabled and \
+                q > self.cfg.ecn_kmin_frac * self.cfg.port_buffer_bytes:
+            new_marks = take - marked
+            self.marked_bytes += new_marks
+            marked = take
+        fq = self.flows.setdefault(fid, _FlowQ())
+        fq.bytes += take
+        fq.marked += marked
+        self._total_bytes += take
+        self.flow_ingress[fid] = in_link
+        self.peak_bytes = max(self.peak_bytes, q + take)
+        return dropped
+
+    def drain(self, dt_us: float) -> List[Tuple[int, float, float]]:
+        """Forward up to rate*dt bytes; returns [(fid, bytes, marked)]."""
+        if self.paused:
+            self.pause_us += dt_us
+            return []
+        budget = self.link.gbps * 1e9 / 8.0 * dt_us * 1e-6
+        total = self.queued_bytes
+        if total <= 0.0:
+            return []
+        frac = min(1.0, budget / total)
+        out: List[Tuple[int, float, float]] = []
+        for fid, fq in list(self.flows.items()):
+            b = fq.bytes * frac
+            m = fq.marked * frac
+            fq.bytes -= b
+            fq.marked -= m
+            self._total_bytes -= b
+            if fq.bytes < 1e-9:
+                self._total_bytes -= fq.bytes
+                del self.flows[fid]
+            if b > 0.0:
+                out.append((fid, b, m))
+        self._total_bytes = max(0.0, self._total_bytes)
+        return out
+
+    def update_pfc(self) -> None:
+        if not self.cfg.pfc_enabled:
+            return
+        q_frac = self.queued_bytes / self.cfg.port_buffer_bytes
+        if self.pause_asserted:
+            if q_frac < self.cfg.pfc_xon_frac:
+                self.pause_asserted = False
+        elif q_frac > self.cfg.pfc_xoff_frac:
+            self.pause_asserted = True
+
+    def pause_targets(self) -> Set[LinkKey]:
+        """Ingress links this congested port wants paused (only links of
+        flows actually queued here — PFC's per-ingress granularity)."""
+        if not self.pause_asserted:
+            return set()
+        return {self.flow_ingress[fid] for fid in self.flows
+                if self.flow_ingress.get(fid) is not None}
+
+
+class Switch:
+    """A named switch owning one OutputPort per outgoing link."""
+
+    def __init__(self, name: str, out_links: List[Link], cfg: SwitchConfig):
+        self.name = name
+        self.cfg = cfg
+        self.ports: Dict[str, OutputPort] = {
+            l.dst: OutputPort(l, cfg) for l in out_links}
+
+    def enqueue(self, out_dst: str, fid: int, nbytes: float, marked: float,
+                in_link: Optional[LinkKey]) -> float:
+        """Returns bytes tail-dropped at the output port."""
+        return self.ports[out_dst].enqueue(fid, nbytes, marked, in_link)
+
+    def update_pfc(self) -> Set[LinkKey]:
+        """Refresh per-port xoff/xon state; returns ingress links to pause."""
+        targets: Set[LinkKey] = set()
+        for p in self.ports.values():
+            p.update_pfc()
+            targets |= p.pause_targets()
+        return targets
+
+    # -- stats ----------------------------------------------------------------
+    def dropped_bytes(self) -> float:
+        return sum(p.dropped_bytes for p in self.ports.values())
+
+    def marked_bytes(self) -> float:
+        return sum(p.marked_bytes for p in self.ports.values())
+
+    def queued_bytes(self) -> float:
+        return sum(p.queued_bytes for p in self.ports.values())

@@ -262,6 +262,9 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
             compiled = lowered.compile()
             t2 = time.time()
             cost = compiled.cost_analysis() or {}
+            if isinstance(cost, (list, tuple)):
+                # jax <= 0.4.x returns a one-element list of dicts
+                cost = cost[0] if cost else {}
             mem = compiled.memory_analysis()
             hlo = compiled.as_text()
             coll = collective_bytes(hlo)           # raw (loop-unaware)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ArchConfig
+from ..parallel.compat import shard_map
 from ..parallel.sharding import ParallelCtx
 from .layers import mlp_apply, mlp_init
 
@@ -286,7 +287,7 @@ def moe_ep(params: dict, x: jnp.ndarray, cfg: ArchConfig,
             mesh = cur
     except Exception:  # noqa: BLE001 — fall back to the concrete mesh
         pass
-    y, lb, overflow = jax.shard_map(
+    y, lb, overflow = shard_map(
         body, mesh=mesh,
         in_specs=(P(None, None), wspec_in, wspec_in, wspec_out, xspec),
         out_specs=(xspec, P(), P()),

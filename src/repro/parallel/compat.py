@@ -1,0 +1,57 @@
+"""Version-portable ``shard_map``.
+
+``jax.shard_map`` only exists from jax 0.6; earlier releases ship it as
+``jax.experimental.shard_map.shard_map`` with a slightly different keyword
+surface (``check_rep`` instead of ``check_vma``, and an ``auto`` set that is
+the complement of the modern ``axis_names``).  Every call site in this repo
+goes through this wrapper so the codebase runs on both API generations.
+"""
+from __future__ import annotations
+
+from typing import Optional, Set
+
+import jax
+
+try:  # legacy location (jax < 0.6)
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+except ImportError:  # pragma: no cover — modern jax removed the alias
+    _legacy_shard_map = None
+
+_HAS_NATIVE = hasattr(jax, "shard_map")
+
+# Partial-manual shard_map (axis_names ⊂ mesh axes) is unusable on legacy
+# jax: a lax.scan whose body carries a with_sharding_constraint on an auto
+# axis hits `Check failed: sharding.IsManualSubgroup()` inside XLA's SPMD
+# partitioner (fatal process abort, XLA < 2025).  Callers that scan over
+# layers must gate that code path on this flag and fall back to a fully
+# automatic (pjit) formulation.
+PARTIAL_MANUAL_SAFE = _HAS_NATIVE
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None,
+              axis_names: Optional[Set[str]] = None):
+    """``jax.shard_map`` with automatic fallback to the experimental API.
+
+    ``axis_names`` restricts which mesh axes are manual (the rest stay
+    auto-partitioned); on the legacy API this is expressed as the
+    complementary ``auto`` frozenset.
+    """
+    if _HAS_NATIVE:
+        kw = {}
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    if _legacy_shard_map is None:  # pragma: no cover
+        raise RuntimeError("no shard_map implementation available in this "
+                           "jax installation")
+    kw = {}
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)

@@ -13,6 +13,7 @@ from jax.sharding import PartitionSpec as P
 from ..configs.base import ArchConfig
 from ..models import api as model_api
 from ..optim import adamw
+from ..parallel.compat import PARTIAL_MANUAL_SAFE, shard_map
 from ..parallel.sharding import ParallelCtx
 
 # (tp_dim, fsdp_dim) by leaf name, negative indices from the end
@@ -140,8 +141,19 @@ def make_train_step(cfg: ArchConfig, ctx: ParallelCtx,
             out["err"] = state["err"]
         return out, {**metrics, **stats}
 
-    use_pod = (opt_cfg.compressed_pod_grads and ctx.have_mesh
-               and "pod" in ctx.mesh.axis_names)
+    # the manual-'pod' region scans over layers with auto-axis sharding
+    # constraints inside, which legacy jax cannot partition (see compat) —
+    # there the cross-pod sync falls back to exact (uncompressed) pjit.
+    want_pod = (opt_cfg.compressed_pod_grads and ctx.have_mesh
+                and "pod" in ctx.mesh.axis_names)
+    use_pod = want_pod and PARTIAL_MANUAL_SAFE
+    if want_pod and not use_pod:
+        import warnings
+        warnings.warn(
+            "compressed_pod_grads requested but partial-manual shard_map "
+            "is unusable on this jax version; falling back to exact "
+            "(uncompressed) cross-pod gradient sync", RuntimeWarning,
+            stacklevel=2)
     if not use_pod:
         return plain_step
 
@@ -183,7 +195,7 @@ def make_train_step(cfg: ArchConfig, ctx: ParallelCtx,
         bspec = jax.tree.map(
             lambda x: P(*([None] * bdim + ["pod"] +
                           [None] * (x.ndim - bdim - 1))), batch)
-        return jax.shard_map(
+        return shard_map(
             pod_body, mesh=ctx.mesh,
             in_specs=(jax.tree.map(lambda _: P(), state), bspec),
             out_specs=(jax.tree.map(lambda _: P(), state),

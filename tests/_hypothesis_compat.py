@@ -1,0 +1,77 @@
+"""Fallback shim so property tests collect without ``hypothesis``.
+
+When hypothesis is installed (the recommended setup — see requirements.txt
+test extras) this module re-exports the real ``given``/``settings``/``st``.
+Otherwise it provides a miniature deterministic stand-in: ``@given`` draws a
+fixed number of pseudo-random examples (seeded RNG, so failures reproduce)
+from a tiny strategy algebra covering exactly what this repo's tests use —
+``st.integers``, ``st.booleans``, ``st.lists``, ``st.tuples``.
+
+Usage in test modules:
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(
+                lambda rng: tuple(s.example(rng) for s in strats))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _St()
+
+    def given(*gstrats, **gkwargs):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for _ in range(_FALLBACK_EXAMPLES):
+                    ex_args = tuple(s.example(rng) for s in gstrats)
+                    ex_kw = {k: s.example(rng) for k, s in gkwargs.items()}
+                    fn(*args, *ex_args, **kwargs, **ex_kw)
+            # hide the example parameters from pytest's fixture resolution
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            wrapper.hypothesis_fallback = True
+            return wrapper
+        return deco
+
+    def settings(*_a, **_k):      # accepts and ignores all hypothesis knobs
+        def deco(fn):
+            return fn
+        return deco

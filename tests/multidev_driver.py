@@ -18,6 +18,7 @@ from repro.models import api
 from repro.models.moe import moe_dense_ref, moe_ep, moe_init
 from repro.optim import adamw
 from repro.parallel import collectives as coll
+from repro.parallel.compat import shard_map
 from repro.parallel.compression import compressed_psum, dequantize_int8, \
     quantize_int8
 from repro.parallel.sharding import single_device_ctx
@@ -126,7 +127,7 @@ def _():
     def body(x_blk, w_blk):
         return coll.ring_allgather_matmul(x_blk, w_blk, "model", m,
                                           frags=2)
-    got = jax.jit(jax.shard_map(
+    got = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(P(), P("model", None)),
         out_specs=P(), check_vma=False))(x, w)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -141,7 +142,7 @@ def _():
 
     def body(y_blk):
         return coll.ring_reduce_scatter(y_blk[0], "model", m)
-    got = jax.jit(jax.shard_map(body, mesh=mesh,
+    got = jax.jit(shard_map(body, mesh=mesh,
                                 in_specs=(P("model", None, None),),
                                 out_specs=P("model"),
                                 check_vma=False))(y)
@@ -162,7 +163,7 @@ def _():
 
     def body(x_blk):
         return coll.windowed_allgather(x_blk, "model", m, window=4)
-    got = jax.jit(jax.shard_map(body, mesh=mesh,
+    got = jax.jit(shard_map(body, mesh=mesh,
                                 in_specs=(P("model", None),),
                                 out_specs=P(None, None) if False else P(),
                                 check_vma=False))(x)
@@ -188,7 +189,7 @@ def _():
             q_full, k_blk, v_blk,
             jnp.full((q_full.shape[0],), k_blk.shape[1], jnp.int32))
         return coll.srq_combine(o, lse, "model")
-    got = jax.jit(jax.shard_map(
+    got = jax.jit(shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(None, "model", None, None),
                   P(None, "model", None, None)),
@@ -226,7 +227,7 @@ def _():
             y = pp.gpipe(stage_fn, xm, "pod", s)
             return pp.broadcast_from_last(y, "pod", s)
         from jax.sharding import PartitionSpec as P
-        return jax.shard_map(body, mesh=mesh,
+        return shard_map(body, mesh=mesh,
                              in_specs=(P("pod"), P()), out_specs=P(),
                              check_vma=False)(w_stages, x_micro)
 
@@ -251,7 +252,7 @@ def _():
     def body(g_blk, err):
         mean, new_err = compressed_psum(g_blk[0], err[0], "pod")
         return mean, new_err[None]
-    mean, err = jax.jit(jax.shard_map(
+    mean, err = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(P("pod", None), P("pod", None)),
         out_specs=(P(), P("pod", None)), check_vma=False))(
         g, jnp.zeros_like(g))

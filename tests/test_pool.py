@@ -1,7 +1,7 @@
 """Property tests for the cache-resident buffer pool (paper §4.1/§4.2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.pool import DevicePool, SlabPool
 

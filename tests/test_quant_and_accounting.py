@@ -4,7 +4,7 @@ accounting."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.launch import hlo_analysis
 from repro.parallel.compression import (dequantize_int8_rowwise,

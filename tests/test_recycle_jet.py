@@ -1,6 +1,7 @@
 """Recycle-controller model (paper §4.2) + Jet service facade (§3)."""
 import pytest
 
+from repro.core.escape import Action, EscapeConfig
 from repro.core.jet import JetConfig, JetService, QoS
 from repro.core.recycle import (RecycleModel, little_law_bytes,
                                 paper_default, paper_unoptimized,
@@ -79,3 +80,59 @@ def test_jet_small_message_classification():
     x = jet.request(1, 1024, now=0.0)
     t = jet.pump(0.0)
     assert t[0].small                                # SEND/RECV + SRQ path
+
+
+# --------------------------------------------------------------------------- #
+# admission edge cases
+# --------------------------------------------------------------------------- #
+def test_low_qos_fallback_counts_and_leaves_pool_untouched():
+    """§5: oversized LOW transfers all fall back to DRAM (counted per
+    transfer); >= NORMAL QoS waits in queue instead of falling back."""
+    jet = JetService(JetConfig(pool_bytes=256 << 10))
+    jet.register(1, QoS.LOW)
+    jet.register(2, QoS.NORMAL)
+    for _ in range(3):
+        jet.request(1, 300 << 10, now=0.0)      # footprint > whole pool
+    jet.request(2, 300 << 10, now=0.0)
+    admitted = jet.pump(0.0)
+    assert admitted == []
+    assert jet.memory_fallbacks == 3
+    assert jet.stats()["memory_fallbacks"] == 3
+    assert jet.pool.available_bytes == 256 << 10    # nothing allocated
+    assert jet.stats()["live_transfers"] == 0       # NORMAL still queued
+
+
+def test_max_concurrent_transfers_backpressure():
+    """Admission stops at max_concurrent_transfers even with pool space;
+    each completion re-opens exactly one admission slot (FIFO)."""
+    jet = JetService(JetConfig(pool_bytes=4 << 20,
+                               max_concurrent_transfers=2))
+    jet.register(1, QoS.NORMAL)
+    ids = [jet.request(1, 64 << 10, now=0.0) for _ in range(5)]
+    admitted = jet.pump(0.0)
+    assert [t.xfer_id for t in admitted] == ids[:2]
+    assert jet.stats()["live_transfers"] == 2
+    jet.complete(ids[0], 1.0)
+    assert [t.xfer_id for t in jet.pump(1.0)] == [ids[2]]
+    assert jet.stats()["live_transfers"] == 2
+
+
+def test_complete_after_escape_copy_eviction():
+    """An escape COPY evicts a straggler transfer's slots and tick_escape
+    drops its bookkeeping; the app's later complete() must be a graceful
+    no-op and the pool must end fully recycled."""
+    cfg = JetConfig(pool_bytes=256 << 10,
+                    escape=EscapeConfig(cache_safe=0.99, cache_danger=0.0,
+                                        mem_esc_bytes=0, credit=0.1,
+                                        straggler_age=1e-6))
+    jet = JetService(cfg)
+    jet.register(1, QoS.NORMAL)
+    xid = jet.request(1, 200 << 10, now=0.0)
+    assert jet.pump(0.0)                         # admitted, pool now tight
+    acts = jet.tick_escape(now=10.0)             # replace budget is 0 -> COPY
+    assert any(a is Action.COPY for a, _ in acts)
+    assert jet.stats()["live_transfers"] == 0    # bookkeeping dropped
+    jet.complete(xid, now=11.0)                  # must not raise
+    assert jet.pool.available_bytes == 256 << 10
+    # double-complete is also inert
+    jet.complete(xid, now=12.0)

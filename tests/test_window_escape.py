@@ -1,6 +1,6 @@
 """Property tests: READ windows (paper §4.1.2) + escape ladder (§4.3)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.escape import Action, EscapeConfig, EscapeController
 from repro.core.pool import SlabPool
