@@ -1,6 +1,6 @@
-"""Fabric benchmarks: Clos incast/HoL behaviour + vectorized sweep engine.
+"""Fabric benchmarks: Clos incast/HoL behaviour + both vectorized engines.
 
-Three parts:
+Four parts:
 
 1. **Incast scaling** — N storage senders burst into one Jet/DDIO receiver
    across a 2-leaf Clos; reports incast completion time, victim-flow
@@ -9,14 +9,28 @@ Three parts:
 2. **Equivalence anchor** — a 1-sender/1-receiver fabric must reproduce
    ``run_sim(testbed_100g(...))`` goodput (acceptance: within 5%; actual:
    exact, the fabric is cut-through at 1 tick).
-3. **Sweep engine** — a >=32-point grid advanced by the jax vmap+scan
-   engine vs the batched-numpy reference vs sequential ``run_sim`` calls;
-   reports max relative deviation (acceptance: <=1%) and speedups (cold =
-   including XLA compile; warm = steady-state, the operating point when a
-   grid shape is re-swept).
+3. **Datapath sweep engine** — a >=32-point receiver-knob grid advanced by
+   the jax vmap+scan engine vs the batched-numpy reference vs sequential
+   ``run_sim``; also autotunes the scan ``unroll`` over {1, 4, 8} (cold
+   compile + warm run recorded for each, winner persisted for future
+   processes) and records before (the old hard-coded ``unroll=8``) vs
+   after (autotuned + donated carry) compile and run times.
+4. **Fabric sweep engine** — a >=32-point *fabric* grid (mode x PFC x
+   burst over the incast-8 scenario) advanced by
+   ``repro.fabric.vector.run_fabric_sweep`` vs the scalar ``run_fabric``
+   loop vs the batched-numpy reference; acceptance: <=1e-3 max relative
+   deviation on per-flow goodput / incast completion and >=5x warm
+   speedup over the scalar loop.
+
+Everything is also written machine-readable to
+``experiments/bench/BENCH_fabric.json`` so the perf trajectory is
+tracked across PRs.  ``--quick`` shrinks sim time and grids for CI.
 """
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
 from typing import Dict, List
 
@@ -24,12 +38,22 @@ import numpy as np
 
 from repro.core import simulator as S
 from repro.fabric import scenarios as SC
+from repro.fabric._scan import UNROLL_CANDIDATES, save_autotune
+from repro.fabric.scenarios import fabric_grid
 from repro.fabric.sweep import grid_configs, run_sweep
+from repro.fabric.vector import run_fabric_sweep
 
-from .common import emit
+from .common import OUT_DIR, emit
 
 NAME = "fabric"
 PAPER_REF = "§2.1/§6 testbed at fleet scale"
+JSON_PATH = os.path.join(OUT_DIR, "BENCH_fabric.json")
+
+QUICK = False
+
+
+def _sim_time(full: float) -> float:
+    return 0.004 if QUICK else full
 
 
 def run_incast() -> List[Dict]:
@@ -38,7 +62,7 @@ def run_incast() -> List[Dict]:
         for n in (2, 4, 8):
             for pfc in (False, True):
                 sc = SC.incast(n_senders=n, mode=mode, pfc=pfc,
-                               burst_mb=1.0, sim_time_s=0.02)
+                               burst_mb=1.0, sim_time_s=_sim_time(0.02))
                 r = sc.run()
                 rx = r.per_host["h1_0"]
                 rows.append({
@@ -57,8 +81,8 @@ def run_incast() -> List[Dict]:
 def run_equivalence() -> List[Dict]:
     rows: List[Dict] = []
     for mode in ("ddio", "jet"):
-        ref = S.run_sim(S.testbed_100g(mode, sim_time_s=0.01))
-        got = SC.single_pair(mode, sim_time_s=0.01).run() \
+        ref = S.run_sim(S.testbed_100g(mode, sim_time_s=_sim_time(0.01)))
+        got = SC.single_pair(mode, sim_time_s=_sim_time(0.01)).run() \
             .per_host["h0_1"]
         rows.append({
             "mode": mode,
@@ -72,17 +96,27 @@ def run_equivalence() -> List[Dict]:
 
 def run_sweep_bench() -> List[Dict]:
     cfgs, _ = grid_configs(
-        S.testbed_100g, mode="ddio", sim_time_s=0.01,
+        S.testbed_100g, mode="ddio", sim_time_s=_sim_time(0.01),
         msg_bytes=[64 << 10, 128 << 10, 256 << 10, 512 << 10,
                    768 << 10, 1 << 20],
         cpu_membw_gbps=[1200.0, 1400.0, 1500.0, 1600.0, 1760.0, 1900.0],
         ddio_bytes=[4 << 20, 6 << 20])
 
+    # -- unroll autotune over {1, 4, 8}: cold (compile) + warm per factor -- #
+    times = {}
+    for u in UNROLL_CANDIDATES:
+        t0 = time.time()
+        run_sweep(cfgs, backend="jax", unroll=u)
+        cold = time.time() - t0
+        t0 = time.time()
+        run_sweep(cfgs, backend="jax", unroll=u)
+        warm = time.time() - t0
+        times[u] = (cold, warm)
+    best = min(times, key=lambda u: times[u][1])
+    save_autotune(best)
+
     t0 = time.time()
-    jx_cold = run_sweep(cfgs, backend="jax")
-    t_cold = time.time() - t0
-    t0 = time.time()
-    jx = run_sweep(cfgs, backend="jax")
+    jx = run_sweep(cfgs, backend="jax")       # autotuned, program cached
     t_warm = time.time() - t0
     t0 = time.time()
     ref = run_sweep(cfgs, backend="numpy")
@@ -94,18 +128,106 @@ def run_sweep_bench() -> List[Dict]:
     g_jx, g_np = jx["goodput_gbps"], ref["goodput_gbps"]
     dev_np = float(np.max(np.abs(g_jx - g_np) / np.maximum(g_np, 1e-9)))
     dev_seq = float(np.max(np.abs(g_np - seq) / np.maximum(seq, 1e-9)))
-    del jx_cold
     return [{
         "grid_points": len(cfgs),
         "seq_run_sim_s": t_seq,
         "numpy_batched_s": t_np,
-        "jax_cold_s": t_cold,       # includes one-time XLA compile
-        "jax_warm_s": t_warm,       # steady state (compiled program cached)
-        "speedup_cold": t_seq / t_cold,
+        # before: the old hard-coded unroll=8 (no donation existed then
+        # either, but compile time dominates the cold number)
+        "before_cold_s": times[8][0],
+        "before_warm_s": times[8][1],
+        # after: autotuned unroll + donated scan carry
+        "after_cold_s": times[best][0],
+        "after_warm_s": t_warm,
+        "best_unroll": best,
+        "unroll_times": {str(u): {"cold_s": c, "warm_s": w}
+                         for u, (c, w) in times.items()},
+        "speedup_cold": t_seq / times[best][0],
         "speedup_warm": t_seq / t_warm,
         "max_rel_dev_vs_numpy": dev_np,
         "max_rel_dev_numpy_vs_run_sim": dev_seq,
     }]
+
+
+def run_fabric_sweep_bench() -> List[Dict]:
+    bursts = ([0.5, 1.0, 2.0, 4.0] if QUICK else
+              [0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 2.5, 3.0,
+               3.5, 4.0, 5.0, 6.0])
+    scens, _ = fabric_grid(
+        lambda mode, pfc, burst_mb: SC.incast(
+            n_senders=8, mode=mode, pfc=pfc, burst_mb=burst_mb,
+            sim_time_s=_sim_time(0.02)),
+        mode=["ddio", "jet"], pfc=[False, True], burst_mb=bursts)
+
+    t0 = time.time()
+    scalar = [sc.run() for sc in scens]
+    t_scalar = time.time() - t0
+    t0 = time.time()
+    jx = run_fabric_sweep(scens, backend="jax")
+    t_cold = time.time() - t0
+    t0 = time.time()
+    jx = run_fabric_sweep(scens, backend="jax")
+    t_warm = time.time() - t0
+    t0 = time.time()
+    ref = run_fabric_sweep(scens, backend="numpy")
+    t_np = time.time() - t0
+
+    F = len(scens[0].flows)
+    gp_sc = np.array([[r.flow_goodput_gbps[f] for f in range(F)]
+                      for r in scalar])
+    cp_sc = np.array([[r.flow_completion_us[f] for f in range(F)]
+                      for r in scalar])
+
+    def rel(a, b):
+        """Max relative deviation; inf if the engines disagree about
+        which entries are finite (e.g. one thinks a flow completed and
+        the other does not) — a masked mean must never hide that."""
+        if not (np.isfinite(a) == np.isfinite(b)).all():
+            return float("inf")
+        m = np.isfinite(b)
+        if not m.any():
+            return 0.0
+        return float(np.max(np.abs(a[m] - b[m])
+                            / np.maximum(np.abs(b[m]), 1e-9)))
+
+    inc_sc = np.array([r.incast_completion_us for r in scalar])
+    inc_jx = jx["incast_completion_us"]
+    fin = np.isfinite(inc_jx)
+    return [{
+        "grid_points": len(scens),
+        "flows": F,
+        "scalar_run_fabric_s": t_scalar,
+        "numpy_batched_s": t_np,
+        "jax_cold_s": t_cold,
+        "jax_warm_s": t_warm,
+        "speedup_cold": t_scalar / t_cold,
+        "speedup_warm": t_scalar / t_warm,
+        "dev_goodput_vs_scalar": rel(jx["flow_goodput_gbps"], gp_sc),
+        "dev_completion_vs_scalar": rel(jx["flow_completion_us"], cp_sc),
+        "dev_incast_fct_vs_scalar": rel(jx["incast_completion_us"],
+                                        inc_sc),
+        "dev_goodput_vs_numpy": rel(jx["flow_goodput_gbps"],
+                                    ref["flow_goodput_gbps"]),
+        "mean_incast_fct_us": (float(inc_jx[fin].mean())
+                               if fin.any() else None),
+        "unfinished_incast_points": int((~fin).sum()),
+        "mean_victim_gbps": float(jx["victim_goodput_gbps"].mean()),
+        "max_pause_fanout": int(jx["pause_fanout"].max()),
+    }]
+
+
+def _jsonable(obj):
+    """Strict-JSON payload: non-finite floats become None (json.dump's
+    Infinity/NaN literals break jq / JSON.parse on the CI artifact)."""
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (float, np.floating)):
+        return float(obj) if np.isfinite(obj) else None
+    if isinstance(obj, np.integer):
+        return int(obj)
+    return obj
 
 
 def run() -> List[Dict]:
@@ -118,25 +240,34 @@ def main() -> None:
     eq = run_equivalence()
     emit(NAME + "_equivalence", eq)
     sw = run_sweep_bench()
-    emit(NAME + "_sweep", sw)
+    emit(NAME + "_sweep", sw, quiet=True)
+    fs = run_fabric_sweep_bench()
+    emit(NAME + "_vector", fs)
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(JSON_PATH, "w") as f:
+        json.dump(_jsonable({"quick": QUICK, "incast": rows,
+                             "equivalence": eq, "sweep": sw[0],
+                             "fabric_sweep": fs[0]}), f, indent=2)
 
     worst_eq = max(r["rel_err"] for r in eq)
-    hol = [r for r in rows if r["pfc"] and r["senders"] == 8
-           and r["mode"] == "ddio"]
-    free = [r for r in rows if not r["pfc"] and r["senders"] == 8
-            and r["mode"] == "ddio"]
-    s = sw[0]
+    s, v = sw[0], fs[0]
     print(f"# single-pair fabric == run_sim within {worst_eq:.2%} "
           f"(acceptance 5%)")
-    if hol and free:
-        print(f"# incast-8 PFC HoL: victim {hol[0]['victim_gbps']:.1f} Gbps "
-              f"(pause fan-out {hol[0]['pause_fanout']}) vs "
-              f"{free[0]['victim_gbps']:.1f} Gbps PFC-free")
-    print(f"# sweep {s['grid_points']} pts: vectorized matches numpy ref "
-          f"within {s['max_rel_dev_vs_numpy']:.3%} (acceptance 1%); "
-          f"x{s['speedup_warm']:.1f} warm / x{s['speedup_cold']:.1f} cold "
-          f"vs sequential run_sim (acceptance >=5x warm)")
+    print(f"# datapath sweep {s['grid_points']} pts: best unroll "
+          f"{s['best_unroll']}; cold {s['before_cold_s']:.1f}s -> "
+          f"{s['after_cold_s']:.1f}s, warm {s['before_warm_s']:.2f}s -> "
+          f"{s['after_warm_s']:.2f}s; x{s['speedup_warm']:.1f} warm vs "
+          f"sequential run_sim; dev vs numpy "
+          f"{s['max_rel_dev_vs_numpy']:.3%}")
+    print(f"# fabric sweep {v['grid_points']} pts x {v['flows']} flows: "
+          f"x{v['speedup_warm']:.1f} warm / x{v['speedup_cold']:.1f} cold "
+          f"vs scalar run_fabric (acceptance >=5x warm); goodput dev "
+          f"{v['dev_goodput_vs_scalar']:.2e}, incast-FCT dev "
+          f"{v['dev_incast_fct_vs_scalar']:.2e} (acceptance <=1e-3)")
+    print(f"# machine-readable: {os.path.abspath(JSON_PATH)}")
 
 
 if __name__ == "__main__":
+    QUICK = "--quick" in sys.argv[1:]
     main()

@@ -1,26 +1,58 @@
-"""Multi-host RDCA fabric: Clos topologies, switches, hosts, driver, sweep.
+"""Multi-host RDCA fabric: Clos topologies, switches, hosts, driver, sweeps.
 
 - topology:  leaf–spine Clos graphs + presets (jet_testbed, incast_fabric)
 - switch:    output-queued switch (per-port ECN marking, PFC propagation)
 - hosts:     step-able ReceiverHost (the refactored run_sim tick body) and
              DCQCN SenderHost
-- fabric:    multi-host discrete-event driver -> per-host SimResults +
-             fabric metrics (victim goodput, pause fan-out, incast FCT)
+- fabric:    scalar multi-host driver -> per-host SimResults + fabric
+             metrics (victim goodput, pause fan-out, incast FCT)
 - scenarios: incast-N / all-to-all HPC / storage OLTP-OLAP-backup bundles
-- sweep:     vectorized parameter-sweep engine (jax.vmap + lax.scan over
-             stacked per-host fluid state; numpy reference backend)
+             + fabric_grid for building scenario grids
+- sweep:     vectorized receiver-datapath grid (jax.vmap + lax.scan over
+             stacked single-host fluid state; numpy reference backend)
+- vector:    vectorized *fabric* grid — the whole multi-host tick body
+             (flows x ports x receivers) as one vmap+scan program
+- _scan:     shared lax.scan compile-cost machinery (unroll autotune,
+             donated carries)
+
+Choosing an engine
+------------------
+``run_fabric`` (scalar driver)
+    One scenario at a time, Python objects, float64.  The semantic
+    reference: returns full per-host :class:`~repro.core.simulator
+    .SimResult` (including message latency percentiles) and per-link
+    pause breakdowns.  Also the only engine for things that resist
+    stacking, e.g. ``cpu_membw_schedule`` callables.  Seconds per point.
+
+``run_sweep`` (datapath sweep)
+    Grids over *receiver* ``SimConfig`` knobs with the single-host
+    sender model (no switches, no cross-flow coupling).  Cheapest per
+    point; use it to map the receiver datapath (DDIO knee, pool sizing,
+    DCQCN constants) before involving a fabric.
+
+``run_fabric_sweep`` (fabric sweep)
+    Grids over whole scenarios — topology rates, switch config, per-flow
+    offered/burst/start, per-receiver knobs — with every flow, port and
+    receiver advanced together ([G, F] / [G, P, F] / [G, R] arrays).
+    Matches the scalar driver to float32 round-off (float64 exact via
+    ``backend="numpy"``) and turns minutes-per-grid into seconds.  Grid
+    points must share topology *structure* (same flows/routes/ticks).
 """
-from .fabric import FabricConfig, FabricResult, Flow, run_fabric
+from .fabric import (FabricConfig, FabricResult, Flow, burst_done_bytes,
+                     run_fabric)
 from .hosts import HostFeedback, ReceiverHost, SenderHost
-from .scenarios import Scenario, all_to_all, incast, single_pair, storage_mix
+from .scenarios import (Scenario, all_to_all, fabric_grid, incast,
+                        single_pair, storage_mix)
 from .switch import OutputPort, Switch, SwitchConfig
 from .sweep import SweepParams, grid_configs, run_sweep
 from .topology import Link, Topology, clos, incast_fabric, jet_testbed
+from .vector import FabricSweepParams, run_fabric_sweep
 
 __all__ = [
-    "FabricConfig", "FabricResult", "Flow", "HostFeedback", "Link",
-    "OutputPort", "ReceiverHost", "Scenario", "SenderHost", "Switch",
-    "SwitchConfig", "SweepParams", "Topology", "all_to_all", "clos",
+    "FabricConfig", "FabricResult", "FabricSweepParams", "Flow",
+    "HostFeedback", "Link", "OutputPort", "ReceiverHost", "Scenario",
+    "SenderHost", "Switch", "SwitchConfig", "SweepParams", "Topology",
+    "all_to_all", "burst_done_bytes", "clos", "fabric_grid",
     "grid_configs", "incast", "incast_fabric", "jet_testbed", "run_fabric",
-    "run_sweep", "single_pair", "storage_mix",
+    "run_fabric_sweep", "run_sweep", "single_pair", "storage_mix",
 ]

@@ -1,0 +1,70 @@
+"""Shared ``lax.scan`` compile-cost machinery for the sweep engines.
+
+Both vectorized engines (:mod:`repro.fabric.sweep` — the single-receiver
+datapath grid — and :mod:`repro.fabric.vector` — the whole-fabric grid)
+are one ``jax.vmap`` + ``lax.scan`` program whose cold-start cost is
+dominated by XLA compiling the scan body.  Two levers live here:
+
+* **unroll choice.**  ``lax.scan(..., unroll=u)`` duplicates the body
+  ``u`` times: compile time grows roughly linearly with ``u`` while the
+  per-iteration while-loop overhead shrinks.  Measured on the container's
+  CPU backend (jax 0.4.37) the crossover never arrives for these step
+  bodies — a 10k-tick / 36-point datapath sweep compiles in ~1.5 s at
+  ``unroll=1`` vs ~7.4 s at the old hard-coded ``unroll=8`` *and* runs
+  warm ~1.6x faster (0.30 s vs 0.50 s), because the body is already a few
+  hundred fused element-wise ops and the loop overhead is negligible
+  next to their dispatch.  ``pick_unroll`` encodes that as a cached
+  choice: an explicit override (argument or ``REPRO_SCAN_UNROLL``) wins,
+  then a persisted autotune result (``experiments/bench/scan_unroll.json``,
+  written by ``benchmarks/bench_fabric.py`` which times {1, 4, 8} on the
+  real program), then the measured default of 1.
+
+* **donated carries.**  The jitted programs take their initial scan
+  carry as an argument donated via ``donate_argnums``, so XLA reuses the
+  (grid x ring-horizon) state buffers instead of keeping both the
+  zero-init copy and the running carry alive.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+from typing import Optional
+
+UNROLL_CANDIDATES = (1, 4, 8)
+
+# autotune results persisted by benchmarks/bench_fabric.py
+_CACHE_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "bench", "scan_unroll.json")
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_autotune() -> Optional[int]:
+    try:
+        with open(_CACHE_PATH) as f:
+            u = int(json.load(f)["unroll"])
+        return u if u in UNROLL_CANDIDATES else None
+    except (OSError, ValueError, KeyError, TypeError):
+        return None
+
+
+def pick_unroll(override: Optional[int] = None) -> int:
+    """Scan unroll factor: override > ``REPRO_SCAN_UNROLL`` env > cached
+    autotune (bench-measured winner over {1, 4, 8}) > measured default 1."""
+    if override is not None:
+        return max(1, int(override))
+    env = os.environ.get("REPRO_SCAN_UNROLL")
+    if env:
+        return max(1, int(env))
+    cached = _cached_autotune()
+    return cached if cached is not None else 1
+
+
+def save_autotune(unroll: int) -> str:
+    """Persist a bench-measured unroll winner for future processes."""
+    path = os.path.abspath(_CACHE_PATH)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"unroll": int(unroll)}, f)
+    _cached_autotune.cache_clear()
+    return path

@@ -17,6 +17,17 @@ Per 1 us fluid tick (same timebase as the single-host simulator):
 Outputs one :class:`~repro.core.simulator.SimResult` per receiver plus
 fabric-level metrics: per-flow goodput, victim-flow goodput, pause-frame
 fan-out and incast completion time.
+
+Forwarding uses *batch-fluid* semantics: all bytes arriving at an output
+port within one tick stage are enqueued as a single batch (proportional
+buffer-space allocation, one ECN-knee decision against the pre-batch
+occupancy) rather than flow-by-flow in container iteration order.  A
+fluid-model tick has no intra-tick arrival order, so this is the faithful
+semantics — and it is what makes the tick body expressible as fixed
+array operations, which :mod:`repro.fabric.vector` exploits to advance
+whole scenario grids at once.  With a single flow per batch (e.g. the
+1-sender/1-receiver equivalence anchor) it reduces exactly to the
+sequential semantics.
 """
 from __future__ import annotations
 
@@ -41,6 +52,20 @@ class Flow:
     tag: str = ""                            # e.g. "incast" | "victim"
 
 
+def burst_done_bytes(burst_bytes: float) -> float:
+    """Delivered-bytes threshold at which a closed flow counts as complete.
+
+    Fluid go-back-N never delivers the *last* byte sharply: once drops or
+    RNIC backpressure kick in, the remaining bytes decay geometrically, so
+    "time of the final 1e-6 bytes" is log-sensitive to the threshold and
+    numerically meaningless.  A closed flow therefore completes at 99.99%
+    delivery — discrete wire traffic would have finished in one more MTU —
+    which both the scalar driver and the vectorized engine can place to
+    within a tick of each other.
+    """
+    return burst_bytes - max(1e-6, 1e-4 * burst_bytes)
+
+
 @dataclasses.dataclass
 class FabricConfig:
     sim_time_s: float = 0.01
@@ -59,16 +84,25 @@ class FabricResult:
     flow_completion_us: Dict[int, float]     # closed flows; inf if unfinished
     flow_tags: Dict[int, str]
     incast_completion_us: float              # max over tag=="incast" flows
-    victim_goodput_gbps: float               # mean over tag=="victim" flows
+    victim_goodput_gbps: float               # mean over tag=="victim" flows;
+    #                                          0.0 when has_victim is False
     pause_link_us: Dict[LinkKey, float]
     pause_fanout: int                        # distinct links ever paused
     ecn_marked_bytes: float
     switch_dropped_bytes: float
+    has_victim: bool = False                 # any tag=="victim" flow present
+
+    def has_tag(self, tag: str) -> bool:
+        return any(t == tag for t in self.flow_tags.values())
 
     def tagged_goodput(self, tag: str) -> float:
+        """Mean goodput over flows with ``tag``; 0.0 (not NaN) when no flow
+        carries the tag, so fleet summaries that average over scenarios
+        never silently absorb a NaN — check :meth:`has_tag` to tell "no
+        such flows" apart from "flows starved to zero"."""
         vals = [g for fid, g in self.flow_goodput_gbps.items()
                 if self.flow_tags[fid] == tag]
-        return sum(vals) / len(vals) if vals else float("nan")
+        return sum(vals) / len(vals) if vals else 0.0
 
 
 def run_fabric(topo: Topology, flows: List[Flow],
@@ -126,64 +160,83 @@ def run_fabric(topo: Topology, flows: List[Flow],
     pause_link_us: Dict[LinkKey, float] = {}
     paused_links: Set[LinkKey] = set()
 
-    def forward(sw: Switch, port_dst_kind: str,
-                arrivals: Dict[str, Dict[int, List[float]]]) -> None:
-        """Drain this switch's ports whose destination kind matches, pushing
-        into the next switch or the receiver-arrival accumulator."""
-        for dst, port in sw.ports.items():
-            if port_dst_kind == "switch" and dst in receivers_or_hosts:
-                continue
-            if port_dst_kind == "host" and dst not in receivers_or_hosts:
-                continue
+    hosts_set = set(topo.hosts)
+    Batches = Dict[Tuple[str, str], List[Tuple[int, float, float,
+                                               Optional[LinkKey]]]]
+
+    def flush(batches: Batches) -> None:
+        """Enqueue one stage's accumulated arrivals, one batch per
+        destination port; tail-dropped bytes are re-credited to their
+        senders (fluid go-back-N retransmission)."""
+        for (sw, dst), items in batches.items():
+            for fid, lost in switches[sw].ports[dst] \
+                    .enqueue_batch(items).items():
+                senders[fid].injected -= lost
+
+    def drain_stage(ports, arrivals, batches: Batches) -> None:
+        """Drain ``ports`` [(owner switch or None, port)]; forwarded bytes
+        land in next-hop ``batches``, host-bound bytes in ``arrivals``."""
+        for owner, port in ports:
+            dst = port.link.dst
+            to_host = dst in hosts_set
             port.paused = (port.link.key in paused_links or
-                           (port_dst_kind == "host" and
-                            dst in receivers and
+                           (to_host and dst in receivers and
                             receivers[dst].cfg.pfc_enabled and
                             receivers[dst].pfc_paused))
             for fid, b, m in port.drain(dt):
-                if port_dst_kind == "host":
-                    slot = arrivals.setdefault(dst, {})
-                    cur = slot.setdefault(fid, [0.0, 0.0])
+                if to_host:
+                    cur = arrivals.setdefault(dst, {}) \
+                        .setdefault(fid, [0.0, 0.0])
                     cur[0] += b
                     cur[1] += m
                 else:
-                    nxt = next_hop[(dst, fid)]
-                    lost = switches[dst].enqueue(nxt, fid, b, m,
-                                                 port.link.key)
-                    # fluid go-back-N: dropped bytes are re-sent later
-                    senders[fid].injected -= lost
+                    batches.setdefault((dst, next_hop[(dst, fid)]), []) \
+                        .append((fid, b, m, port.link.key))
 
-    receivers_or_hosts = set(topo.hosts)
+    # the four forwarding stages of one tick, in traversal order; a port
+    # drains once per tick, after every same-tick upstream stage has
+    # deposited into it (cut-through: an uncongested byte crosses the
+    # whole fabric in one tick)
+    stage_nic = [(None, p) for p in nic_ports.values()]
+    stage_up = [(leaf, p) for leaf in topo.leaves
+                for p in switches[leaf].ports.values()
+                if p.link.dst not in hosts_set]
+    stage_spine = [(sp, p) for sp in topo.spines
+                   for p in switches[sp].ports.values()]
+    stage_down = [(leaf, p) for leaf in topo.leaves
+                  for p in switches[leaf].ports.values()
+                  if p.link.dst in hosts_set]
 
     for t in range(ticks):
         now_us = (t + 1) * dt
         # ---- 1. senders inject into their NIC queue ----------------------- #
+        # one batch per NIC port: space is split proportionally over the
+        # port's flows (source-side backpressure never overflows the NIC
+        # queue, so un-injectable bytes are refunded, not dropped)
+        offers: Dict[str, List[Tuple[int, float]]] = {}
         for fid, f in enumerate(flows):
-            s = senders[fid]
-            port = nic_ports[f.src]
-            b = s.offer(dt)
-            # source-side backpressure: never overflow the NIC queue
-            space = fcfg.switch.port_buffer_bytes - port.queued_bytes
-            if b > space:
-                s.injected -= b - max(0.0, space)
-                b = max(0.0, space)
-            port.enqueue(fid, b, 0.0, None)
+            b = senders[fid].offer(dt)
+            if b > 0.0:
+                offers.setdefault(f.src, []).append((fid, b))
+        for host, items in offers.items():
+            port = nic_ports[host]
+            space = max(0.0, fcfg.switch.port_buffer_bytes
+                        - port.queued_bytes)
+            total = sum(b for _, b in items)
+            scale = 1.0 if total <= space else space / total
+            batch = []
+            for fid, b in items:
+                take = b if scale >= 1.0 else b * scale
+                senders[fid].injected -= b - take
+                batch.append((fid, take, 0.0, None))
+            port.enqueue_batch(batch)
 
         # ---- 2. tier-ordered forwarding ----------------------------------- #
         arrivals: Dict[str, Dict[int, List[float]]] = {}
-        for host, port in nic_ports.items():
-            leaf = topo.host_leaf[host]
-            port.paused = port.link.key in paused_links
-            for fid, b, m in port.drain(dt):
-                lost = switches[leaf].enqueue(next_hop[(leaf, fid)], fid,
-                                              b, m, port.link.key)
-                senders[fid].injected -= lost
-        for leaf in topo.leaves:                      # uplinks -> spines
-            forward(switches[leaf], "switch", arrivals)
-        for spine in topo.spines:                     # spines -> dst leaves
-            forward(switches[spine], "switch", arrivals)
-        for leaf in topo.leaves:                      # downlinks -> hosts
-            forward(switches[leaf], "host", arrivals)
+        for stage in (stage_nic, stage_up, stage_spine, stage_down):
+            batches: Batches = {}
+            drain_stage(stage, arrivals, batches)
+            flush(batches)
 
         # ---- 3. receivers advance; CNPs route back ------------------------ #
         for host, rx in receivers.items():
@@ -200,14 +253,18 @@ def run_fabric(topo: Topology, flows: List[Flow],
                     f = flows[fid]
                     if (f.burst_bytes is not None
                             and math.isinf(completion[fid])
-                            and delivered[fid] >= f.burst_bytes - 1e-6):
+                            and delivered[fid]
+                            >= burst_done_bytes(f.burst_bytes)):
                         completion[fid] = now_us
             # receiver-generated CNPs hit the heaviest arriving flow; with
             # the access link paused (arr empty) they fall back to the
             # most recent heavy flow so senders stay throttled during
             # pauses, as in run_sim
             if arr:
-                last_heavy[host] = max(arr, key=lambda i: arr[i][0])
+                # deterministic tie-break (lowest flow id), independent of
+                # arrival-dict insertion order — the vector engine's argmax
+                # resolves ties the same way
+                last_heavy[host] = max(sorted(arr), key=lambda i: arr[i][0])
             heavy = last_heavy.get(host)
             if fb.cnps and heavy is not None:
                 for _ in range(fb.cnps):
@@ -251,7 +308,8 @@ def run_fabric(topo: Topology, flows: List[Flow],
         flow_tags=tags,
         incast_completion_us=max(incast) if incast else float("nan"),
         victim_goodput_gbps=(sum(victims) / len(victims)
-                             if victims else float("nan")),
+                             if victims else 0.0),
+        has_victim=bool(victims),
         pause_link_us=pause_link_us,
         pause_fanout=len(pause_link_us),
         ecn_marked_bytes=sum(s.marked_bytes() for s in switches.values()),

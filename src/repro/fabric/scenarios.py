@@ -7,7 +7,8 @@ each returning a ready-to-run (topology, flows, fabric-config) bundle.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+import itertools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.simulator import SimConfig, testbed_100g
 from .fabric import FabricConfig, Flow
@@ -23,8 +24,28 @@ class Scenario:
     fabric: FabricConfig
 
     def run(self):
+        """Advance this one scenario with the scalar driver."""
         from .fabric import run_fabric
         return run_fabric(self.topology, self.flows, self.fabric)
+
+
+def fabric_grid(mk: Callable[..., Scenario],
+                **axes: Sequence) -> Tuple[List[Scenario], List[dict]]:
+    """Cartesian grid of scenarios for :func:`repro.fabric.vector
+    .run_fabric_sweep`: ``mk(**point)`` per combination of the ``axes``
+    lists (the fabric twin of :func:`repro.fabric.sweep.grid_configs`).
+    Returns ``(scenarios, point-dicts)``.  Axes must not change the
+    topology *structure* (flow set / routes / tick count) — sweep numeric
+    knobs (mode, pfc, burst_mb, ...) and keep shape axes (n_senders,
+    n_hosts) fixed per grid.
+    """
+    names = sorted(axes)
+    scens, points = [], []
+    for combo in itertools.product(*(axes[n] for n in names)):
+        pt = dict(zip(names, combo))
+        scens.append(mk(**pt))
+        points.append(pt)
+    return scens, points
 
 
 def _recv_factory(mode: str, pfc: bool,

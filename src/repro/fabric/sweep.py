@@ -33,6 +33,7 @@ import numpy as np
 
 from ..core.simulator import SimConfig
 from .hosts import hold_us_baseline, hold_us_jet
+from ._scan import pick_unroll
 
 _F = np.float32
 
@@ -359,9 +360,21 @@ def _run_numpy(sp: SweepParams) -> Dict[str, np.ndarray]:
 
 
 @functools.lru_cache(maxsize=8)
-def _jax_program(n_points: int, ticks: int, ring_len: int, dt_us: float):
+def _jax_program(n_points: int, ticks: int, ring_len: int, dt_us: float,
+                 unroll: int):
     """Compiled sweep program, cached on the trace-relevant shape tuple so
-    repeated sweeps over same-shaped grids skip compilation."""
+    repeated sweeps over same-shaped grids skip compilation.
+
+    The initial scan carry is an argument (built cheaply in numpy per
+    call) rather than a traced constant, so ``donate_argnums`` lets XLA
+    reuse its buffers — the [P, H] release rings dominate the state —
+    instead of holding the zero-init copy alive next to the running
+    carry.  The unroll factor comes from :func:`repro.fabric._scan
+    .pick_unroll`: measured on this stack, ``unroll=1`` beats the old
+    hard-coded 8 both cold (~5x less XLA compile) and warm (~1.6x — the
+    body is already hundreds of fused element-wise ops, so while-loop
+    overhead is negligible and unrolling only bloats the program).
+    """
     import jax
     import jax.numpy as jnp
 
@@ -373,41 +386,41 @@ def _jax_program(n_points: int, ticks: int, ring_len: int, dt_us: float):
     def ring_set(ring, idx, v):
         return ring.at[idx].set(v)
 
-    def one_point(pvals, d_b, d_s):
+    def one_point(s0, pvals, d_b, d_s):
         step = _make_step(jnp, ring_get, ring_set, pvals,
                           dt_us, H, d_b, d_s)
-        s0 = _init_state(jnp, (), H, pvals)
 
         def body(s, t):
             return step(s, t), None
 
-        # unrolling amortizes the per-iteration while-loop overhead, which
-        # dominates on CPU for a step made of many tiny element-wise ops
-        s, _ = jax.lax.scan(body, s0, jnp.arange(ticks), unroll=8)
+        s, _ = jax.lax.scan(body, s0, jnp.arange(ticks), unroll=unroll)
         return s
 
-    return jax.jit(jax.vmap(one_point))
+    return jax.jit(jax.vmap(one_point), donate_argnums=(0,))
 
 
-def _run_jax(sp: SweepParams) -> Dict[str, np.ndarray]:
+def _run_jax(sp: SweepParams, unroll="auto") -> Dict[str, np.ndarray]:
     import jax.numpy as jnp
 
-    fn = _jax_program(sp.n_points, sp.ticks, sp.ring_len, sp.dt_us)
+    u = pick_unroll(None if unroll == "auto" else unroll)
+    fn = _jax_program(sp.n_points, sp.ticks, sp.ring_len, sp.dt_us, u)
+    s0 = _init_state(np, (sp.n_points,), sp.ring_len, sp.vals)
     pv = {k: jnp.asarray(v) for k, v in sp.vals.items()}
-    final = fn(pv, jnp.asarray(sp.d_base), jnp.asarray(sp.d_strag))
+    final = fn({k: jnp.asarray(v) for k, v in s0.items()}, pv,
+               jnp.asarray(sp.d_base), jnp.asarray(sp.d_strag))
     final = {k: np.asarray(v) for k, v in final.items()}
     return _results(final, sp)
 
 
-def run_sweep(configs: Sequence[SimConfig],
-              backend: str = "jax") -> Dict[str, np.ndarray]:
+def run_sweep(configs: Sequence[SimConfig], backend: str = "jax",
+              unroll="auto") -> Dict[str, np.ndarray]:
     """Advance every config in ``configs`` through the full fluid recurrence
     at once; returns {metric: array[P]} aligned with the input order."""
     sp = SweepParams.from_configs(configs)
     if backend == "numpy":
         out = _run_numpy(sp)
     elif backend == "jax":
-        out = _run_jax(sp)
+        out = _run_jax(sp, unroll)
     else:
         raise ValueError(f"unknown backend {backend!r}")
     return out

@@ -89,6 +89,47 @@ class OutputPort:
         self.peak_bytes = max(self.peak_bytes, q + take)
         return dropped
 
+    def enqueue_batch(
+            self, items: List[Tuple[int, float, float, Optional[LinkKey]]],
+    ) -> Dict[int, float]:
+        """Queue one tick's simultaneous arrivals ``[(fid, bytes, marked,
+        in_link)]`` as a single fluid batch: buffer space is allocated
+        proportionally to offered bytes and the ECN knee is evaluated once
+        against the pre-batch occupancy, so the outcome is independent of
+        the order arrivals are listed in (a sequence of :meth:`enqueue`
+        calls would privilege earlier callers).  A single-item batch is
+        exactly ``enqueue``.  Returns ``{fid: dropped bytes}``."""
+        total = sum(b for _, b, _, _ in items if b > 0.0)
+        if total <= 0.0:
+            return {}
+        q = self.queued_bytes
+        space = max(0.0, self.cfg.port_buffer_bytes - q)
+        scale = 1.0 if total <= space else space / total
+        mark_now = (self.cfg.ecn_enabled and
+                    q > self.cfg.ecn_kmin_frac * self.cfg.port_buffer_bytes)
+        dropped: Dict[int, float] = {}
+        for fid, b, m, in_link in items:
+            if b <= 0.0:
+                continue
+            take = b if scale >= 1.0 else b * scale
+            lost = b - take
+            if lost > 0.0:
+                self.dropped_bytes += lost
+                dropped[fid] = dropped.get(fid, 0.0) + lost
+            if take <= 0.0:
+                continue
+            mk = m * (take / b)
+            if mark_now:
+                self.marked_bytes += take - mk
+                mk = take
+            fq = self.flows.setdefault(fid, _FlowQ())
+            fq.bytes += take
+            fq.marked += mk
+            self._total_bytes += take
+            self.flow_ingress[fid] = in_link
+        self.peak_bytes = max(self.peak_bytes, self.queued_bytes)
+        return dropped
+
     def drain(self, dt_us: float) -> List[Tuple[int, float, float]]:
         """Forward up to rate*dt bytes; returns [(fid, bytes, marked)]."""
         if self.paused:

@@ -1,0 +1,794 @@
+"""Vectorized fabric engine: whole-grid multi-host simulation.
+
+``run_fabric`` advances one scenario with Python dicts of ``SenderHost`` /
+``Switch`` / ``ReceiverHost`` objects — minutes per grid point for the
+fleet experiments the paper cares about (incast completion, victim-flow
+goodput, PFC pause fan-out, Lamda §5-6).  This module packs the *entire*
+tick body into stacked arrays and advances all grid points at once:
+
+* per-flow DCQCN/offer state as ``[F]`` arrays (``[G, F]`` across the
+  grid) — rate machines, injected/delivered byte counters, CNP pacing;
+* per-port queue state as ``[P, F]`` byte/mark matrices covering the NIC
+  egress queues and every switch output port on some flow's path;
+* per-receiver datapath state as ``[R]`` arrays plus ``[R, H]`` circular
+  release rings (the ``sweep.py`` ring trick);
+* static routing from :meth:`Topology.route` precomputed into flow->port
+  incidence one-hots, so each forwarding stage is a gather, a batch
+  enqueue and a scatter — no data-dependent control flow.
+
+One ``jax.vmap`` over the scenario grid x one ``jax.lax.scan`` over ticks
+= one XLA program; a batched-numpy backend runs the *same* step function
+(float64) as the verification reference, mirroring the single-source-of-
+truth design of :mod:`repro.fabric.sweep`.
+
+Semantics are exactly the batch-fluid tick of :func:`repro.fabric.run_fabric`
+(see its module docstring): four tier-ordered forwarding stages with
+cut-through within the tick, proportional buffer-space allocation and a
+single pre-batch ECN-knee decision per port per stage, receiver CNPs to
+the heaviest recently-arriving flow (lowest flow id on ties), per-flow
+DCQCN CNP pacing of switch ECN marks, and PFC pause propagation targeted
+at the ingress links of flows queued at over-watermark ports.  A
+1-sender/1-receiver grid therefore reproduces ``run_sim`` goodput, and
+small incast grids match the scalar driver per flow.
+
+Grid points must share the topology *structure* (same flows, same
+routes, same receiver set, same tick count); everything numeric may vary
+per point: receiver ``SimConfig`` knobs, ``SwitchConfig`` scalars, link
+rates, per-flow offered load / burst size / start time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from ..core.dcqcn import DcqcnConfig
+from .hosts import hold_us_baseline, hold_us_jet
+from ._scan import pick_unroll
+
+_STAGES = 4          # NIC egress, leaf uplink, spine, leaf downlink
+
+
+# --------------------------------------------------------------------------- #
+# Packing: scenarios -> static structure + stacked per-point parameters
+# --------------------------------------------------------------------------- #
+_RECV_SCALARS = [
+    ("jet", lambda c: 1.0 if c.mode == "jet" else 0.0),
+    ("pfc_en", lambda c: 1.0 if c.pfc_enabled else 0.0),
+    ("wm_cnp", lambda c: 1.0 if c.rnic_ecn_cnp else 0.0),
+    ("line1", lambda c: c.line_rate_gbps),
+    ("pcie", lambda c: c.pcie_gbps),
+    ("membw", lambda c: c.membw_total_gbps),
+    ("cpu_bw", lambda c: c.cpu_membw_gbps),
+    ("qp_bytes", lambda c: c.num_qps * c.msg_bytes),
+    ("ddio", lambda c: c.ddio_bytes),
+    ("knee", lambda c: c.miss_knee),
+    ("rnic_buf", lambda c: c.rnic_buffer_bytes),
+    ("xoff", lambda c: c.pfc_xoff),
+    ("xon", lambda c: c.pfc_xon),
+    ("ecn_th", lambda c: c.ecn_threshold),
+    ("cnp_iv", lambda c: c.cnp_interval_us),
+    ("pool", lambda c: c.jet_pool_bytes),
+    ("sfrac", lambda c: c.straggler_frac),
+    ("safe", lambda c: c.cache_safe),
+    ("danger", lambda c: c.cache_danger),
+    ("mem_esc", lambda c: c.mem_esc_bytes),
+]
+
+_DCQCN_SCALARS = [
+    ("dline", lambda d: d.line_rate_gbps),
+    ("minr", lambda d: d.min_rate_gbps),
+    ("g", lambda d: d.g),
+    ("a_tmr", lambda d: d.alpha_timer_us),
+    ("r_tmr", lambda d: d.rate_timer_us),
+    ("bctr", lambda d: d.byte_counter_mb * (1 << 20)),
+    ("ai", lambda d: d.ai_rate_gbps),
+    ("hai", lambda d: d.hai_rate_gbps),
+    ("fth", lambda d: float(d.f_threshold)),
+]
+
+_SWITCH_SCALARS = [
+    ("buf", lambda s: float(s.port_buffer_bytes)),
+    ("kmin", lambda s: s.ecn_kmin_frac),
+    ("sw_xoff", lambda s: s.pfc_xoff_frac),
+    ("sw_xon", lambda s: s.pfc_xon_frac),
+]
+
+
+@dataclasses.dataclass
+class FabricSweepParams:
+    """Static fabric structure + stacked per-point parameters.
+
+    Shapes: F flows, P ports, R receivers, G grid points, H ring horizon.
+    """
+    # -- static structure (shared by every grid point) ----------------------
+    port_keys: List[Tuple[str, str]]     # port id -> out-link key
+    recv_hosts: List[str]
+    flow_tags: List[str]
+    stage_mask: np.ndarray               # [S, P] bool: ports of each stage
+    occ: List[np.ndarray]                # S x [P, F]: flow's port per stage
+    dest: List[np.ndarray]               # 3 x [P, F]: routing after stage k
+    recv_onehot: np.ndarray              # [R, F]
+    recv_of: np.ndarray                  # [F] int32
+    prev_onehot: np.ndarray              # [P, F, P]: ingress port of (p, f)
+    owner_recv: np.ndarray               # [P] int32: stage-3 port's receiver
+    # -- per-point parameters ----------------------------------------------
+    pvals: Dict[str, np.ndarray]         # [G], [G, F], [G, R] or [G, P]
+    n_points: int
+    n_flows: int
+    n_ports: int
+    n_recv: int
+    ticks: int
+    dt_us: float
+    ring_len: int
+    structure_key: str
+
+    @classmethod
+    def from_scenarios(cls, scens: Sequence) -> "FabricSweepParams":
+        """Pack a grid of :class:`~repro.fabric.scenarios.Scenario`-likes
+        (anything with ``.topology``, ``.flows``, ``.fabric``)."""
+        if not scens:
+            raise ValueError("empty fabric sweep grid")
+        s0 = scens[0]
+        topo0, flows0 = s0.topology, s0.flows
+        dt = s0.fabric.dt_us
+        ticks = int(s0.fabric.sim_time_s * 1e6 / dt)
+        F = len(flows0)
+        routes = [topo0.route(f.src, f.dst, fid)
+                  for fid, f in enumerate(flows0)]
+        for s in scens:
+            s.topology.validate()
+            if s.fabric.dt_us != dt or \
+                    int(s.fabric.sim_time_s * 1e6 / s.fabric.dt_us) != ticks:
+                raise ValueError("grid points must share dt and sim_time")
+            if len(s.flows) != F or any(
+                    (a.src, a.dst, a.tag) != (b.src, b.dst, b.tag)
+                    for a, b in zip(s.flows, flows0)):
+                raise ValueError("grid points must share the flow set "
+                                 "(src/dst/tag); offered/burst/start may "
+                                 "vary")
+            if any(s.topology.route(f.src, f.dst, fid) != routes[fid]
+                   for fid, f in enumerate(s.flows)):
+                raise ValueError("grid points must share routes (same "
+                                 "topology structure)")
+
+        # ---- ports on some flow's path, tagged with their stage ---------- #
+        port_id: Dict[Tuple[str, str], int] = {}
+        port_stage: List[int] = []
+
+        def add(key, stage):
+            pid = port_id.setdefault(key, len(port_id))
+            if pid == len(port_stage):
+                port_stage.append(stage)
+            elif port_stage[pid] != stage:
+                raise ValueError(f"port {key} used in two stages")
+            return pid
+
+        stage_ports = np.full((_STAGES, F), -1, np.int32)
+        prev_port = np.full((_STAGES, F), -1, np.int32)
+        for fid, nodes in enumerate(routes):
+            if len(nodes) == 3:                       # intra-leaf
+                src, leaf, dst = nodes
+                p0 = add((src, leaf), 0)
+                p3 = add((leaf, dst), 3)
+                stage_ports[0, fid], stage_ports[3, fid] = p0, p3
+                prev_port[3, fid] = p0
+            else:                                     # via one spine
+                src, sl, spine, dl, dst = nodes
+                p0 = add((src, sl), 0)
+                p1 = add((sl, spine), 1)
+                p2 = add((spine, dl), 2)
+                p3 = add((dl, dst), 3)
+                stage_ports[:, fid] = (p0, p1, p2, p3)
+                prev_port[1, fid], prev_port[2, fid], prev_port[3, fid] = \
+                    p0, p1, p2
+        P = len(port_id)
+        port_keys = list(port_id)
+
+        recv_hosts = sorted({f.dst for f in flows0})
+        R = len(recv_hosts)
+        ridx = {h: i for i, h in enumerate(recv_hosts)}
+        recv_of = np.array([ridx[f.dst] for f in flows0], np.int32)
+
+        stage_mask = np.zeros((_STAGES, P), bool)
+        for p, st in enumerate(port_stage):
+            stage_mask[st, p] = True
+        cols = np.arange(F)
+
+        def onehot(idx):                              # [P, F] from [F] ids
+            oh = np.zeros((P, F))
+            valid = idx >= 0
+            oh[idx[valid], cols[valid]] = 1.0
+            return oh
+
+        occ = [onehot(stage_ports[k]) for k in range(_STAGES)]
+        # destination port after stages 0..2 (stage 3 routes to receivers)
+        d0 = np.where(stage_ports[1] >= 0, stage_ports[1], stage_ports[3])
+        dest = [onehot(d0), onehot(stage_ports[2]), onehot(stage_ports[3])]
+        recv_onehot = np.zeros((R, F))
+        recv_onehot[recv_of, cols] = 1.0
+        prev_onehot = np.zeros((P, F, P))
+        for k in range(1, _STAGES):
+            for fid in range(F):
+                p, pr = stage_ports[k, fid], prev_port[k, fid]
+                if p >= 0 and pr >= 0:
+                    prev_onehot[p, fid, pr] = 1.0
+        owner_recv = np.full(P, -1, np.int32)
+        for (a, b), pid in port_id.items():
+            if port_stage[pid] == 3:
+                owner_recv[pid] = ridx[b]
+
+        # ---- stacked per-point parameters -------------------------------- #
+        G = len(scens)
+        pv: Dict[str, List] = {k: [] for k in
+                               ["gbps", "ecn_en", "can_assert",
+                                "line", "cap", "burst", "start", "cnp_iv_f",
+                                "d_base", "d_strag"]}
+        for name, _ in _RECV_SCALARS + _DCQCN_SCALARS + _SWITCH_SCALARS:
+            pv[name] = []
+        for s in scens:
+            topo, sw = s.topology, s.fabric.switch
+            for name, fn in _SWITCH_SCALARS:
+                pv[name].append(fn(sw))
+            pv["gbps"].append([topo.links[k].gbps for k in port_keys])
+            is_switch = np.array(port_stage) > 0
+            pv["ecn_en"].append(is_switch * float(sw.ecn_enabled))
+            pv["can_assert"].append(is_switch * float(sw.pfc_enabled))
+            rcfgs = {h: s.fabric.receiver_cfg(h) for h in recv_hosts}
+            for h, c in rcfgs.items():
+                if c.cpu_membw_schedule is not None:
+                    raise ValueError("cpu_membw_schedule is not sweepable; "
+                                     "use run_fabric for scheduled "
+                                     "contention")
+            for name, fn in _RECV_SCALARS:
+                pv[name].append([fn(rcfgs[h]) for h in recv_hosts])
+            d_b, d_s = [], []
+            for h in recv_hosts:
+                c = rcfgs[h]
+                hold = hold_us_jet(c) if c.mode == "jet" \
+                    else hold_us_baseline(c)
+                d_b.append(max(1, int(hold / dt)))
+                d_s.append(max(1, int(hold * c.straggler_mult / dt)))
+            pv["d_base"].append(d_b)
+            pv["d_strag"].append(d_s)
+            line = [s.topology.access_gbps(f.src) for f in s.flows]
+            pv["line"].append(line)
+            pv["cap"].append([np.inf if f.offered_gbps is None
+                              else f.offered_gbps for f in s.flows])
+            pv["burst"].append([np.inf if f.burst_bytes is None
+                                else f.burst_bytes for f in s.flows])
+            pv["start"].append([f.start_us for f in s.flows])
+            pv["cnp_iv_f"].append([rcfgs[f.dst].cnp_interval_us
+                                   for f in s.flows])
+            dcq = [DcqcnConfig(line_rate_gbps=lr) for lr in line]
+            for name, fn in _DCQCN_SCALARS:
+                pv[name].append([fn(d) for d in dcq])
+        pvals = {k: np.asarray(v, np.int32 if k in ("d_base", "d_strag")
+                               else np.float64) for k, v in pv.items()}
+        H = int(max(pvals["d_base"].max(), pvals["d_strag"].max())) + 2
+
+        h = hashlib.sha1()
+        for arr in (stage_mask, *occ, *dest, recv_onehot, recv_of,
+                    prev_onehot, owner_recv):
+            h.update(np.ascontiguousarray(arr).tobytes())
+        h.update(repr((F, P, R, ticks, dt, H)).encode())
+        return cls(port_keys=port_keys, recv_hosts=recv_hosts,
+                   flow_tags=[f.tag for f in flows0],
+                   stage_mask=stage_mask, occ=occ, dest=dest,
+                   recv_onehot=recv_onehot, recv_of=recv_of,
+                   prev_onehot=prev_onehot, owner_recv=owner_recv,
+                   pvals=pvals, n_points=G, n_flows=F, n_ports=P, n_recv=R,
+                   ticks=ticks, dt_us=dt, ring_len=H,
+                   structure_key=h.hexdigest())
+
+
+# --------------------------------------------------------------------------- #
+# The shared per-tick step (numpy [G, ...] and jax vmapped [...])
+# --------------------------------------------------------------------------- #
+def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype):
+    """Build ``step(state, t) -> state`` in array namespace ``xp``.
+
+    ``st`` holds the static structure arrays (no grid axis), ``p`` the
+    per-point parameters ([G, ...] under numpy, [...] under vmap).  All
+    array ops broadcast over an optional leading grid axis, so the same
+    closure is the numpy reference and the vmapped jax program.
+
+    Queued bytes and their ECN-marked subset travel together as one
+    ``[2, P, F]`` array (axis -3: 0 = bytes, 1 = marks) and the two
+    release rings as one ``[2, R, H]`` array — on the CPU backend per-op
+    dispatch dominates at these shapes, so halving the op count nearly
+    halves the tick.  Per-point constants are hoisted out of the scan
+    body for the same reason.
+    """
+    f = dtype
+    bpt = f(1e9 / 8.0 * dt * 1e-6)       # bytes per (Gbps * tick)
+    fdt = f(dt)
+    zero, one, tiny = f(0.0), f(1.0), f(1e-30)
+    eps_q = f(1e-9)
+    arangeF = xp.arange(st["recv_of"].shape[0], dtype=xp.int32)
+    # loop-invariant per-point quantities, computed once outside the scan
+    budget = p["gbps"] * bpt
+    buf = p["buf"][..., None]
+    kmin_th = p["kmin"][..., None] * buf
+    ecn_on = p["ecn_en"] > 0.5
+    can_assert = p["can_assert"] > 0.5
+    sxoff = p["sw_xoff"][..., None]
+    sxon = p["sw_xon"][..., None]
+    jet = p["jet"] > 0.5
+    avail_dram = xp.maximum(zero, p["membw"] - p["cpu_bw"])
+    jet_cap = xp.minimum(p["pcie"], p["line1"] * 4.0) * bpt
+    strag_share = xp.where(jet, p["sfrac"], zero)
+    inv_knee = one / (p["knee"] * p["ddio"])
+    rx_pfc_en = p["pfc_en"] > 0.5
+    wm_en = p["wm_cnp"] > 0.5
+    linecap = xp.minimum(p["line"], p["cap"])
+
+    def cut(s, fire):
+        """DCQCN on_cnp for flows where ``fire`` holds."""
+        s = dict(s)
+        s["rt"] = xp.where(fire, s["rc"], s["rt"])
+        s["rc"] = xp.where(
+            fire, xp.maximum(p["minr"], s["rc"] * (1.0 - s["alpha"] / 2.0)),
+            s["rc"])
+        s["alpha"] = xp.where(
+            fire, xp.minimum(one, (1.0 - p["g"]) * s["alpha"] + p["g"]),
+            s["alpha"])
+        for k in ("t_us", "byts", "t_stage", "b_stage", "a_tus"):
+            s[k] = xp.where(fire, zero, s[k])
+        return s
+
+    def drain(s, k):
+        """Stage-k ports forward up to rate*dt, pro rata across flows."""
+        qm = s["qm"]
+        qtot = qm[..., 0, :, :].sum(-1)
+        can = st["stage"][k] & ~s["paused"] & (qtot > zero)
+        frac = xp.where(can,
+                        xp.minimum(one, budget /
+                                   xp.where(qtot > zero, qtot, one)),
+                        zero)
+        out = qm * frac[..., None, :, None]
+        qm = qm - out
+        # sub-1e-9 residues vanish with their marks (the scalar driver's
+        # dict-entry cleanup)
+        gone = can[..., None] & (qm[..., 0, :, :] < eps_q)
+        s["qm"] = xp.where(gone[..., None, :, :], zero, qm)
+        # flow-level view of this stage's output: [.., 2, F]
+        fbm = (st["occ"][k] * out).sum(-2)
+        return s, fbm
+
+    def enqueue(s, dest_oh, fbm):
+        """Batch-enqueue routed bytes: proportional space split, one ECN
+        knee decision per port against the pre-batch occupancy."""
+        A = dest_oh * fbm[..., None, :]           # [.., 2, P, F]
+        tot_in = A[..., 0, :, :].sum(-1)
+        qtot = s["qm"][..., 0, :, :].sum(-1)
+        space = xp.maximum(buf - qtot, zero)
+        scale = xp.where(tot_in > space,
+                         space / xp.maximum(tot_in, tiny), one)
+        take = A * scale[..., None, :, None]
+        lost = (A - take)[..., 0, :, :]
+        # fluid go-back-N: tail-dropped bytes re-open the sender's tap
+        s["inj_lo"] = s["inj_lo"] - lost.sum(-2)
+        s["sw_dropped"] = s["sw_dropped"] + lost.sum((-1, -2))
+        mark = ecn_on & (qtot > kmin_th)
+        dm = xp.where(mark[..., None],
+                      take[..., 0, :, :] - take[..., 1, :, :], zero)
+        s["ecn_marked"] = s["ecn_marked"] + dm.sum((-1, -2))
+        s["qm"] = s["qm"] + take + dm[..., None, :, :] * st["sel1"]
+        return s
+
+    fold_at = f(65536.0)
+
+    def fold(s, hi, lo):
+        """Drain a split accumulator's low part into its high part once it
+        outgrows 64 KiB.  Keeping per-tick increments on a small-magnitude
+        accumulator bounds float32 rounding drift to O(10) bytes over a
+        run — tight enough that closed-flow completion thresholds stay
+        meaningful — while costing three element-wise ops per tick."""
+        full = xp.abs(s[lo]) >= fold_at
+        s[hi] = s[hi] + xp.where(full, s[lo], zero)
+        s[lo] = xp.where(full, zero, s[lo])
+
+    def step(s, t):
+        s = dict(s)
+        now = (xp.asarray(t, dtype) + one) * fdt
+        fold(s, "injected", "inj_lo")
+        fold(s, "delivered", "deliv_lo")
+
+        # ---- 1. senders: DCQCN advance + offer ---------------------------- #
+        adv = now > p["start"]
+        adv_dt = xp.where(adv, fdt, zero)
+        a_tus = s["a_tus"] + adv_dt
+        a_fire = adv & (a_tus >= p["a_tmr"])
+        s["alpha"] = xp.where(a_fire, (1.0 - p["g"]) * s["alpha"],
+                              s["alpha"])
+        s["a_tus"] = xp.where(a_fire, zero, a_tus)
+        t_us = s["t_us"] + adv_dt
+        byts = xp.where(adv, s["byts"] + s["rc"] * bpt, s["byts"])
+        t_fire = adv & (t_us >= p["r_tmr"])
+        s["t_stage"] = s["t_stage"] + t_fire
+        s["t_us"] = xp.where(t_fire, zero, t_us)
+        b_fire = adv & (byts >= p["bctr"])
+        s["b_stage"] = s["b_stage"] + b_fire
+        s["byts"] = xp.where(b_fire, zero, byts)
+        fired = t_fire | b_fire
+        stage = xp.minimum(s["t_stage"], s["b_stage"])
+        s["rt"] = xp.where(fired & (stage == p["fth"]),
+                           xp.minimum(p["dline"], s["rt"] + p["ai"]),
+                           s["rt"])
+        s["rt"] = xp.where(fired & (stage > p["fth"]),
+                           xp.minimum(p["dline"], s["rt"] + p["hai"]),
+                           s["rt"])
+        s["rc"] = xp.where(fired,
+                           xp.minimum(p["dline"],
+                                      0.5 * (s["rc"] + s["rt"])),
+                           s["rc"])
+
+        gbps = xp.minimum(s["rc"], linecap)
+        room = xp.maximum(p["burst"] - (s["injected"] + s["inj_lo"]), zero)
+        offer = xp.where(adv, xp.minimum(gbps * bpt, room), zero)
+        # source-side backpressure: the NIC queue never overflows, bytes
+        # that don't fit simply stay un-injected
+        tot_p = (st["occ"][0] * offer[..., None, :]).sum(-1)
+        space = xp.maximum(buf - s["qm"][..., 0, :, :].sum(-1), zero)
+        scale_p = xp.where(tot_p > space,
+                           space / xp.maximum(tot_p, tiny), one)
+        take_f = offer * (st["occ"][0] * scale_p[..., None]).sum(-2)
+        s["inj_lo"] = s["inj_lo"] + take_f
+        s["qm"] = s["qm"] + \
+            (st["occ"][0] * take_f[..., None, :])[..., None, :, :] \
+            * st["sel0"]
+
+        # ---- 2. tier-ordered forwarding (cut-through within the tick) ---- #
+        s, fbm = drain(s, 0)
+        s = enqueue(s, st["dest"][0], fbm)
+        s, fbm = drain(s, 1)
+        s = enqueue(s, st["dest"][1], fbm)
+        s, fbm = drain(s, 2)
+        s = enqueue(s, st["dest"][2], fbm)
+        s, fbm = drain(s, 3)
+        arr_b = fbm[..., 0, :]
+        arr_m = fbm[..., 1, :]
+
+        # ---- 3. receivers advance one tick -------------------------------- #
+        arr_rb = st["recv_onehot"] * arr_b[..., None, :]
+        arr_tot = arr_rb.sum(-1)
+        space_r = xp.maximum(p["rnic_buf"] - s["rnic_q"], zero)
+        accepted = xp.minimum(arr_tot, space_r)
+        s["rnic_drop"] = s["rnic_drop"] + (arr_tot - accepted)
+        s["rnic_q"] = s["rnic_q"] + accepted
+
+        ws = p["qp_bytes"] + s["resident"]
+        miss = xp.clip((ws - p["ddio"]) * inv_knee, zero, one)
+        s["miss_sum"] = s["miss_sum"] + xp.where(jet, zero, miss)
+        ddio_bw = xp.where(miss > 1e-9,
+                           xp.minimum(p["pcie"],
+                                      avail_dram / (2.0 * miss + tiny)),
+                           p["pcie"])
+        ddio_drained = xp.minimum(s["rnic_q"], ddio_bw * bpt)
+        pool_free = xp.maximum(zero, p["pool"] - s["resident"])
+        jet_drained = xp.minimum(xp.minimum(s["rnic_q"], jet_cap),
+                                 pool_free)
+        drained = xp.where(jet, jet_drained, ddio_drained)
+        s["nic_dram"] = s["nic_dram"] + \
+            xp.where(jet, zero, ddio_drained * 2.0 * miss)
+        s["rnic_q"] = s["rnic_q"] - drained
+        strag_part = drained * strag_share
+        parts = xp.stack([drained * (1.0 - strag_share), strag_part], -2)
+        # ring layout [H, 2, R]: the write is a contiguous leading-axis
+        # slice update, which XLA aliases in place inside the scan carry
+        s["ring"] = ring_set(s["ring"], t % H, parts)
+        s["resident"] = s["resident"] + drained
+        s["strag_res"] = s["strag_res"] + strag_part
+        s["drained"] = s["drained"] + drained
+
+        idx = (t - p["d2"]) % H                   # [.., 2, R]
+        r2 = xp.take_along_axis(s["ring"], idx[..., None, :, :],
+                                -3)[..., 0, :, :]
+        r2 = xp.where(t >= p["d2"], r2, zero)
+        for j, is_strag in ((0, False), (1, True)):
+            r = r2[..., j, :]
+            void = xp.minimum(r, s["esc_debt"])
+            s["esc_debt"] = s["esc_debt"] - void
+            r = r - void
+            repay = xp.minimum(void, s["repl_debt"])
+            s["repl_debt"] = s["repl_debt"] - repay
+            s["repl_mem"] = xp.maximum(zero, s["repl_mem"] - repay)
+            s["resident"] = xp.maximum(zero, s["resident"] - r)
+            if is_strag:
+                s["strag_res"] = xp.maximum(zero, s["strag_res"] - r)
+
+        # Jet escape ladder (paper Algorithm 1)
+        avail = xp.maximum(zero, p["pool"] - s["resident"]) / p["pool"]
+        esc_on = jet & (avail < p["safe"])
+        can_rep = s["repl_mem"] < p["mem_esc"]
+        x_rep = xp.where(esc_on & can_rep,
+                         xp.maximum(zero,
+                                    xp.minimum(s["strag_res"],
+                                               p["mem_esc"]
+                                               - s["repl_mem"])),
+                         zero)
+        s["resident"] = s["resident"] - x_rep
+        s["strag_res"] = s["strag_res"] - x_rep
+        s["esc_debt"] = s["esc_debt"] + x_rep
+        s["repl_debt"] = s["repl_debt"] + x_rep
+        s["repl_mem"] = s["repl_mem"] + x_rep
+        s["esc_dram"] = s["esc_dram"] + 0.1 * x_rep
+        s["replaces"] = s["replaces"] + (x_rep > zero)
+        x_cop = xp.where(esc_on & ~can_rep, s["strag_res"], zero)
+        s["resident"] = s["resident"] - x_cop
+        s["strag_res"] = s["strag_res"] - x_cop
+        s["esc_debt"] = s["esc_debt"] + x_cop
+        s["esc_dram"] = s["esc_dram"] + x_cop
+        s["copies"] = s["copies"] + (x_cop > zero)
+        avail2 = xp.maximum(zero, p["pool"] - s["resident"]) / p["pool"]
+        in_danger = esc_on & (avail2 < p["danger"])
+        s["ecn_tus"] = xp.where(in_danger, s["ecn_tus"] + fdt, s["ecn_tus"])
+        esc_fire = in_danger & (s["ecn_tus"] >= p["cnp_iv"])
+        s["ecn_tus"] = xp.where(esc_fire, zero, s["ecn_tus"])
+        s["cnps"] = s["cnps"] + esc_fire
+        s["ecns"] = s["ecns"] + esc_fire
+        s["pool_sum"] = s["pool_sum"] + xp.where(jet, s["resident"], zero)
+        s["pool_peak"] = xp.maximum(s["pool_peak"],
+                                    xp.where(jet, s["resident"], zero))
+
+        # receiver congestion signalling
+        q_frac = s["rnic_q"] / p["rnic_buf"]
+        s["pfc"] = rx_pfc_en & xp.where(s["pfc"], q_frac >= p["xon"],
+                                        q_frac > p["xoff"])
+        s["pfc_us"] = s["pfc_us"] + xp.where(s["pfc"], fdt, zero)
+        cnp_tus = s["cnp_tus"] + fdt
+        wm_fire = wm_en & (q_frac > p["ecn_th"]) \
+            & (cnp_tus >= p["cnp_iv"])
+        s["cnp_tus"] = xp.where(wm_fire, zero, cnp_tus)
+        s["cnps"] = s["cnps"] + wm_fire
+
+        # ---- 4. feedback routes back to the senders ----------------------- #
+        share = xp.where(arr_tot > zero,
+                         accepted / xp.maximum(arr_tot, tiny), zero)
+        deliv = arr_b * share[..., st["recv_of"]]
+        s["deliv_lo"] = s["deliv_lo"] + deliv
+        # RNIC tail drops are retransmitted too (fluid RC)
+        s["inj_lo"] = s["inj_lo"] - (arr_b - deliv)
+        s["completion"] = xp.where(
+            xp.isinf(s["completion"])
+            & (s["delivered"] + s["deliv_lo"] >= p["burst_done"]),
+            now, s["completion"])
+
+        # receiver CNPs hit the heaviest recently-arriving flow (lowest
+        # flow id on ties); with nothing arriving the previous target
+        # stays throttled, as in run_fabric/run_sim
+        has_arr = arr_tot > zero
+        heavy_new = xp.argmax(arr_rb, -1).astype(xp.int32)
+        s["heavy"] = xp.where(has_arr, heavy_new, s["heavy"])
+        is_heavy = arangeF == s["heavy"][..., st["recv_of"]]
+        s = cut(s, is_heavy & esc_fire[..., st["recv_of"]])
+        s = cut(s, is_heavy & wm_fire[..., st["recv_of"]])
+        # switch ECN marks -> per-flow CNPs, paced per DCQCN NP
+        s["backlog"] = s["backlog"] + arr_m
+        pace_tus = s["pace_tus"] + fdt
+        pace_fire = (s["backlog"] > zero) & (pace_tus >= p["cnp_iv_f"])
+        s["pace_tus"] = xp.where(pace_fire, zero, pace_tus)
+        s["backlog"] = xp.where(pace_fire, zero, s["backlog"])
+        s = cut(s, pace_fire)
+
+        # ---- 5. PFC pause propagation ------------------------------------- #
+        q0 = s["qm"][..., 0, :, :]
+        qtot = q0.sum(-1)
+        frac_occ = qtot / buf
+        s["asserted"] = can_assert & \
+            xp.where(s["asserted"], frac_occ >= sxon, frac_occ > sxoff)
+        contrib = xp.where(s["asserted"][..., None] & (q0 > zero),
+                           one, zero)
+        # ingress-link scatter as a tiny matmul: [.., P*F] @ [P*F, P]
+        flat = contrib.reshape(contrib.shape[:-2] + (-1,))
+        link_paused = xp.matmul(flat, st["prev_mat"]) > zero
+        s["pause_us"] = s["pause_us"] + xp.where(link_paused, fdt, zero)
+        s["ever_paused"] = s["ever_paused"] | link_paused
+        rx_gate = s["pfc"][..., st["owner_clamp"]] & st["owner_valid"]
+        s["paused"] = link_paused | rx_gate
+        return s
+
+    return step
+
+
+def _init_state(xp, lead, fsp: FabricSweepParams, p, dtype):
+    """Zero/steady-state carry; ``lead`` is () under vmap, (G,) for numpy."""
+    F, P, R, H = (fsp.n_flows, fsp.n_ports, fsp.n_recv, fsp.ring_len)
+    z = lambda *sh: xp.zeros(lead + sh, dtype)       # noqa: E731
+    s = {
+        # flows
+        "rc": p["dline"] + z(F), "rt": p["dline"] + z(F),
+        "alpha": xp.ones(lead + (F,), dtype),
+        "t_us": z(F), "byts": z(F), "t_stage": z(F), "b_stage": z(F),
+        "a_tus": z(F), "injected": z(F), "delivered": z(F),
+        "inj_lo": z(F), "deliv_lo": z(F),
+        "completion": xp.full(lead + (F,), np.inf, dtype),
+        "backlog": z(F),
+        # immediate first paced CNP, as in the scalar driver
+        "pace_tus": xp.full(lead + (F,), np.inf, dtype),
+        # ports (axis -3: 0 = queued bytes, 1 = ECN-marked subset)
+        "qm": z(2, P, F),
+        "asserted": xp.zeros(lead + (P,), bool),
+        "paused": xp.zeros(lead + (P,), bool),
+        "pause_us": z(P),
+        "ever_paused": xp.zeros(lead + (P,), bool),
+        # receivers
+        "rnic_q": z(R), "resident": z(R), "strag_res": z(R),
+        "esc_debt": z(R), "repl_debt": z(R), "repl_mem": z(R),
+        "rnic_drop": z(R), "drained": z(R), "nic_dram": z(R),
+        "esc_dram": z(R), "miss_sum": z(R), "pool_sum": z(R),
+        "pool_peak": z(R), "cnps": z(R), "ecns": z(R), "replaces": z(R),
+        "copies": z(R), "pfc_us": z(R), "ecn_tus": z(R),
+        "cnp_tus": p["cnp_iv"] + z(R),   # allow an immediate first CNP
+        "pfc": xp.zeros(lead + (R,), bool),
+        "ring": z(H, 2, R),     # slot-major; axis -2: base / straggler
+        "heavy": xp.full(lead + (R,), -1, xp.int32),
+        # fleet counters
+        "ecn_marked": z(), "sw_dropped": z(),
+    }
+    return s
+
+
+def _static(fsp: FabricSweepParams, xp, dtype):
+    P, F = fsp.n_ports, fsp.n_flows
+    owner = fsp.owner_recv
+    sel = np.zeros((2, 2, 1, 1))
+    sel[0, 0], sel[1, 1] = 1.0, 1.0
+    return {
+        "stage": xp.asarray(fsp.stage_mask),
+        "occ": [xp.asarray(a, dtype) for a in fsp.occ],
+        "dest": [xp.asarray(a, dtype) for a in fsp.dest],
+        "recv_onehot": xp.asarray(fsp.recv_onehot, dtype),
+        "recv_of": xp.asarray(fsp.recv_of),
+        "prev_mat": xp.asarray(fsp.prev_onehot.reshape(P * F, P), dtype),
+        "owner_clamp": xp.asarray(np.maximum(owner, 0)),
+        "owner_valid": xp.asarray(owner >= 0),
+        "sel0": xp.asarray(sel[0], dtype),
+        "sel1": xp.asarray(sel[1], dtype),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Results
+# --------------------------------------------------------------------------- #
+def _results(s, fsp: FabricSweepParams) -> Dict[str, np.ndarray]:
+    sim_us = fsp.ticks * fsp.dt_us
+    per_gbps = 8.0 / (sim_us * 1e-6) / 1e9
+    deliv = np.asarray(s["delivered"], np.float64) \
+        + np.asarray(s["deliv_lo"], np.float64)
+    goodput = deliv * per_gbps
+    comp = np.asarray(s["completion"], np.float64)
+    tags = np.array(fsp.flow_tags)
+    inc_mask = (tags == "incast")[None, :] \
+        & np.isfinite(fsp.pvals["burst"])
+    inc_comp = np.where(
+        inc_mask.any(-1),
+        np.where(inc_mask, comp, -np.inf).max(-1), np.nan)
+    vic = tags == "victim"
+    G = fsp.n_points
+    victim = goodput[:, vic].mean(-1) if vic.any() else np.zeros(G)
+    return {
+        "flow_goodput_gbps": goodput,
+        "flow_delivered_bytes": deliv,
+        "flow_completion_us": comp,
+        "incast_completion_us": inc_comp,
+        "victim_goodput_gbps": victim,
+        "has_victim": np.full(G, bool(vic.any())),
+        "pause_fanout": np.asarray(s["ever_paused"]).sum(-1),
+        "pause_total_us": np.asarray(s["pause_us"], np.float64).sum(-1),
+        "ecn_marked_bytes": np.asarray(s["ecn_marked"], np.float64),
+        "switch_dropped_bytes": np.asarray(s["sw_dropped"], np.float64),
+        "recv_goodput_gbps": np.asarray(s["drained"], np.float64)
+        * per_gbps,
+        "recv_cnp_count": np.asarray(s["cnps"], np.float64),
+        "recv_pfc_pause_us": np.asarray(s["pfc_us"], np.float64),
+        "recv_rnic_dropped_bytes": np.asarray(s["rnic_drop"], np.float64),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Backends
+# --------------------------------------------------------------------------- #
+def _np_params(fsp: FabricSweepParams, dtype) -> Dict[str, np.ndarray]:
+    p = {k: (v if v.dtype == np.int32 else v.astype(dtype))
+         for k, v in fsp.pvals.items()}
+    # closed-flow completion threshold, shared with the scalar driver
+    # (fabric.burst_done_bytes); the split injected/delivered accumulators
+    # keep float32 drift to O(1) byte, well inside the threshold
+    burst = fsp.pvals["burst"]
+    p["burst_done"] = np.where(
+        np.isfinite(burst),
+        burst - np.maximum(1e-6, 1e-4 * np.where(np.isfinite(burst),
+                                                 burst, 0.0)),
+        np.inf).astype(dtype)
+    p["d2"] = np.stack([p.pop("d_base"), p.pop("d_strag")], -2)
+    return p
+
+
+def _run_numpy(fsp: FabricSweepParams, dtype=np.float64):
+    p = _np_params(fsp, dtype)
+    st = _static(fsp, np, dtype)
+
+    def ring_set(ring, idx, v):
+        ring[..., idx, :, :] = v
+        return ring
+
+    step = _make_step(np, ring_set, st, p, fsp.dt_us, fsp.ring_len, dtype)
+    s = _init_state(np, (fsp.n_points,), fsp, p, dtype)
+    for t in range(fsp.ticks):
+        s = step(s, t)
+    return _results(s, fsp)
+
+
+_PROGRAMS: Dict[tuple, Callable] = {}
+_PROGRAMS_MAX = 8          # bound compiled-executable memory, as sweep.py
+
+
+def _jax_program(fsp: FabricSweepParams, unroll: int):
+    key = (fsp.structure_key, fsp.n_points, fsp.ticks, fsp.ring_len,
+           fsp.dt_us, unroll)
+    fn = _PROGRAMS.get(key)
+    if fn is not None:
+        return fn
+    import jax
+    import jax.numpy as jnp
+
+    dtype = jnp.float32
+    st = _static(fsp, jnp, dtype)
+    ticks, H = fsp.ticks, fsp.ring_len
+
+    def ring_set(ring, idx, v):
+        return ring.at[..., idx, :, :].set(v)
+
+    def one_point(s0, p):
+        step = _make_step(jnp, ring_set, st, p, fsp.dt_us, H, dtype)
+
+        def body(s, t):
+            return step(s, t), None
+
+        s, _ = jax.lax.scan(body, s0, jnp.arange(ticks, dtype=jnp.int32),
+                            unroll=unroll)
+        return s
+
+    # the zero-init carry is rebuilt per call, so its (grid x ring) buffers
+    # are donated to the scan instead of staying alive next to it
+    fn = jax.jit(jax.vmap(one_point), donate_argnums=(0,))
+    while len(_PROGRAMS) >= _PROGRAMS_MAX:
+        _PROGRAMS.pop(next(iter(_PROGRAMS)))
+    _PROGRAMS[key] = fn
+    return fn
+
+
+def _run_jax(fsp: FabricSweepParams, unroll):
+    import jax.numpy as jnp
+
+    u = pick_unroll(None if unroll == "auto" else unroll)
+    fn = _jax_program(fsp, u)
+    p_np = _np_params(fsp, np.float32)
+    s0 = _init_state(np, (fsp.n_points,), fsp, p_np, np.float32)
+    p = {k: jnp.asarray(v) for k, v in p_np.items()}
+    final = fn({k: jnp.asarray(v) for k, v in s0.items()}, p)
+    return _results({k: np.asarray(v) for k, v in final.items()}, fsp)
+
+
+def run_fabric_sweep(scenarios: Sequence, backend: str = "jax",
+                     unroll="auto") -> Dict[str, np.ndarray]:
+    """Advance a grid of fabric scenarios through the full multi-host
+    recurrence at once; returns ``{metric: array}`` aligned with the input
+    order (arrays are ``[G]``, ``[G, F]`` or ``[G, R]`` — flow order is the
+    scenario flow list, receiver order is ``sorted({flow.dst})``).
+
+    All scenarios must share topology structure, routes and the flow set;
+    receiver/switch/flow *parameters* may vary freely (see
+    :class:`FabricSweepParams`).  ``backend="numpy"`` runs the same step
+    function batched under float64 — the verification reference.
+    """
+    fsp = FabricSweepParams.from_scenarios(scenarios)
+    if backend == "numpy":
+        return _run_numpy(fsp)
+    if backend == "jax":
+        return _run_jax(fsp, unroll)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -170,6 +170,16 @@ def test_sweep_rejects_mixed_timebases():
         run_sweep(cfgs)
 
 
+def test_sweep_unroll_is_a_pure_perf_knob(sweep_grid):
+    """The scan unroll factor (autotuned by default, see fabric._scan)
+    must never change results — same program, different loop shape."""
+    sample = list(sweep_grid[::12])
+    a = run_sweep(sample, backend="jax")          # unroll="auto"
+    b = run_sweep(sample, backend="jax", unroll=4)
+    for key in ("goodput_gbps", "cnp_count", "dropped_bytes"):
+        np.testing.assert_allclose(a[key], b[key], rtol=1e-6)
+
+
 # --------------------------------------------------------------------------- #
 # incast / PFC phenomenology
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,261 @@
+"""Vectorized fabric engine: equivalence with the scalar driver.
+
+The contract under test (ISSUE 2 acceptance):
+
+* a 1-sender/1-receiver vectorized fabric matches ``run_sim`` goodput;
+* the float64 numpy backend reproduces scalar ``run_fabric`` essentially
+  exactly (same batch-fluid semantics, same arithmetic);
+* the float32 jax backend matches scalar per-flow goodput and incast
+  completion to <=1e-3 relative on the incast-8 and storage-mix
+  scenarios;
+* property tests: vectorized-vs-scalar agreement on random small
+  topologies/flow sets, and ECN-mark monotonicity in the knee threshold
+  on :class:`OutputPort`.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import simulator as S
+from repro.fabric import scenarios as SC
+from repro.fabric import topology
+from repro.fabric.fabric import Flow, FabricConfig, run_fabric
+from repro.fabric.scenarios import fabric_grid
+from repro.fabric.switch import OutputPort, SwitchConfig
+from repro.fabric.vector import FabricSweepParams, run_fabric_sweep
+
+SIM_S = 0.015
+
+
+def _scalar_arrays(scens):
+    """Stack scalar run_fabric results grid-style for comparison."""
+    res = [sc.run() for sc in scens]
+    F = len(scens[0].flows)
+    return res, {
+        "flow_goodput_gbps": np.array(
+            [[r.flow_goodput_gbps[f] for f in range(F)] for r in res]),
+        "flow_completion_us": np.array(
+            [[r.flow_completion_us[f] for f in range(F)] for r in res]),
+        "incast_completion_us": np.array(
+            [r.incast_completion_us for r in res]),
+        "victim_goodput_gbps": np.array(
+            [r.victim_goodput_gbps for r in res]),
+        "pause_fanout": np.array([r.pause_fanout for r in res]),
+        "ecn_marked_bytes": np.array([r.ecn_marked_bytes for r in res]),
+        "switch_dropped_bytes": np.array(
+            [r.switch_dropped_bytes for r in res]),
+    }
+
+
+def _maxrel(a, b):
+    m = np.isfinite(a) & np.isfinite(b)
+    assert (np.isfinite(a) == np.isfinite(b)).all(), \
+        "finite/inf pattern mismatch"
+    if not m.any():
+        return 0.0
+    return float(np.max(np.abs(a[m] - b[m])
+                        / np.maximum(np.abs(b[m]), 1e-9)))
+
+
+@pytest.fixture(scope="module")
+def incast8():
+    scens, _ = fabric_grid(
+        lambda mode, pfc: SC.incast(n_senders=8, mode=mode, pfc=pfc,
+                                    burst_mb=1.0, sim_time_s=SIM_S),
+        mode=["ddio", "jet"], pfc=[False, True])
+    _, ref = _scalar_arrays(scens)
+    return scens, ref
+
+
+@pytest.fixture(scope="module")
+def storage():
+    """One grid per storage kind (client counts differ, so the kinds
+    cannot share a topology structure): kind -> (scenarios, scalar ref)."""
+    grids = {}
+    for kind in ("oltp", "olap", "backup"):
+        scens, _ = fabric_grid(
+            lambda mode, kind=kind: SC.storage_mix(kind, mode=mode,
+                                                   sim_time_s=0.01),
+            mode=["ddio", "jet"])
+        _, ref = _scalar_arrays(scens)
+        grids[kind] = (scens, ref)
+    return grids
+
+
+# --------------------------------------------------------------------------- #
+# equivalence anchors
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("mode", ["ddio", "jet"])
+def test_single_pair_matches_run_sim(mode):
+    ref = S.run_sim(S.testbed_100g(mode, sim_time_s=0.005))
+    sc = SC.single_pair(mode, sim_time_s=0.005)
+    for backend, tol in (("numpy", 1e-9), ("jax", 1e-3)):
+        out = run_fabric_sweep([sc], backend=backend)
+        got = out["recv_goodput_gbps"][0, 0]
+        assert got == pytest.approx(ref.goodput_gbps, rel=tol), backend
+
+
+def test_numpy_backend_exact_vs_scalar(incast8):
+    scens, ref = incast8
+    out = run_fabric_sweep(scens, backend="numpy")
+    # same batch-fluid semantics in float64: essentially bit-equal
+    assert _maxrel(out["flow_goodput_gbps"],
+                   ref["flow_goodput_gbps"]) < 1e-9
+    assert _maxrel(out["flow_completion_us"],
+                   ref["flow_completion_us"]) == 0.0
+    np.testing.assert_array_equal(out["pause_fanout"],
+                                  ref["pause_fanout"])
+    assert _maxrel(out["ecn_marked_bytes"],
+                   ref["ecn_marked_bytes"]) < 1e-9
+    assert _maxrel(out["switch_dropped_bytes"],
+                   ref["switch_dropped_bytes"]) < 1e-9
+
+
+def test_jax_backend_matches_scalar_incast8(incast8):
+    scens, ref = incast8
+    out = run_fabric_sweep(scens, backend="jax")
+    # ISSUE 2 acceptance: <=1e-3 relative on per-flow goodput and
+    # incast completion
+    assert _maxrel(out["flow_goodput_gbps"],
+                   ref["flow_goodput_gbps"]) <= 1e-3
+    assert _maxrel(out["flow_completion_us"],
+                   ref["flow_completion_us"]) <= 1e-3
+    assert _maxrel(out["incast_completion_us"],
+                   ref["incast_completion_us"]) <= 1e-3
+    assert _maxrel(out["victim_goodput_gbps"],
+                   ref["victim_goodput_gbps"]) <= 1e-3
+    np.testing.assert_array_equal(out["pause_fanout"],
+                                  ref["pause_fanout"])
+    # PFC points pause the fabric, lossy points drop — both reproduced
+    assert out["pause_fanout"].max() >= 2
+    assert out["switch_dropped_bytes"].max() > 0
+
+
+def test_jax_backend_matches_scalar_storage(storage):
+    for kind, (scens, ref) in storage.items():
+        out = run_fabric_sweep(scens, backend="jax")
+        assert _maxrel(out["flow_goodput_gbps"],
+                       ref["flow_goodput_gbps"]) <= 1e-3, kind
+        # open-loop storage flows never complete: inf in both engines
+        assert not np.isfinite(out["flow_completion_us"]).any()
+        assert not np.isfinite(ref["flow_completion_us"]).any()
+
+
+def test_victim_goodput_no_nan(incast8):
+    scens, ref = incast8
+    out = run_fabric_sweep(scens, backend="numpy")
+    assert out["has_victim"].all()
+    # no victim flow -> 0.0 with the flag cleared, never NaN
+    plain = SC.incast(n_senders=2, with_victim=False, sim_time_s=0.002)
+    r = plain.run()
+    assert not r.has_victim
+    assert r.victim_goodput_gbps == 0.0
+    assert r.tagged_goodput("victim") == 0.0
+    assert not r.has_tag("victim")
+    assert r.has_tag("incast")
+    v = run_fabric_sweep([plain], backend="numpy")
+    assert not v["has_victim"].any()
+    assert v["victim_goodput_gbps"][0] == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# packing validation
+# --------------------------------------------------------------------------- #
+def test_grid_must_share_structure():
+    a = SC.incast(n_senders=2, sim_time_s=0.002)
+    b = SC.incast(n_senders=4, sim_time_s=0.002)
+    with pytest.raises(ValueError):
+        FabricSweepParams.from_scenarios([a, b])
+    c = SC.incast(n_senders=2, sim_time_s=0.004)
+    with pytest.raises(ValueError):
+        FabricSweepParams.from_scenarios([a, c])
+    with pytest.raises(ValueError):
+        run_fabric_sweep([])
+    with pytest.raises(ValueError):
+        run_fabric_sweep([a], backend="torch")
+
+
+def test_grid_rejects_membw_schedule():
+    sc = SC.single_pair("ddio", sim_time_s=0.002,
+                        cpu_membw_schedule=lambda t: 1000.0)
+    with pytest.raises(ValueError):
+        run_fabric_sweep([sc], backend="numpy")
+
+
+# --------------------------------------------------------------------------- #
+# property: vectorized == scalar on random small fabrics
+# --------------------------------------------------------------------------- #
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 2), st.integers(2, 3), st.integers(1, 2),
+       st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
+                          st.integers(0, 3), st.booleans()),
+                min_size=1, max_size=4),
+       st.booleans())
+def test_vector_matches_scalar_on_random_fabrics(n_leaves, per_leaf,
+                                                 n_spines, flow_specs,
+                                                 pfc):
+    topo = topology.clos(n_leaves=n_leaves, hosts_per_leaf=per_leaf,
+                         n_spines=n_spines if n_leaves > 1 else n_spines,
+                         host_gbps=100.0, uplink_gbps=200.0)
+    hosts = topo.hosts
+    flows = []
+    for si, di, load, closed in flow_specs:
+        src = hosts[si % len(hosts)]
+        dst = hosts[di % len(hosts)]
+        if src == dst:
+            dst = hosts[(di + 1) % len(hosts)]
+            if src == dst:
+                continue
+        flows.append(Flow(
+            src=src, dst=dst,
+            offered_gbps=None if load == 0 else 20.0 * load,
+            burst_bytes=200e3 if closed else None,
+            tag="t"))
+    if not flows:
+        return
+    fcfg = FabricConfig(sim_time_s=0.0006,
+                        switch=SwitchConfig(pfc_enabled=pfc,
+                                            port_buffer_bytes=1 << 19))
+    ref = run_fabric(topo, flows, fcfg)
+    sc = SC.Scenario(name="rand", topology=topo, flows=flows, fabric=fcfg)
+    out = run_fabric_sweep([sc], backend="numpy")
+    F = len(flows)
+    gp_ref = np.array([ref.flow_goodput_gbps[f] for f in range(F)])
+    assert np.allclose(out["flow_goodput_gbps"][0], gp_ref,
+                       rtol=1e-9, atol=1e-9)
+    cp_ref = np.array([ref.flow_completion_us[f] for f in range(F)])
+    got = out["flow_completion_us"][0]
+    assert (np.isfinite(got) == np.isfinite(cp_ref)).all()
+    fin = np.isfinite(cp_ref)
+    assert np.allclose(got[fin], cp_ref[fin])
+    assert out["pause_fanout"][0] == ref.pause_fanout
+    assert out["ecn_marked_bytes"][0] == pytest.approx(
+        ref.ecn_marked_bytes, rel=1e-9, abs=1e-6)
+    assert out["switch_dropped_bytes"][0] == pytest.approx(
+        ref.switch_dropped_bytes, rel=1e-9, abs=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# property: ECN marks are monotone in the knee threshold
+# --------------------------------------------------------------------------- #
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 9), st.integers(1, 9),
+       st.lists(st.tuples(st.integers(0, 3), st.integers(1, 300),
+                          st.booleans()),
+                min_size=1, max_size=20))
+def test_port_ecn_marks_monotone_in_knee(k1, k2, events):
+    """Lowering the ECN knee can only mark more bytes, never fewer, for
+    the same enqueue/drain pattern."""
+    lo, hi = sorted((k1, k2))
+    marked = []
+    for k in (lo, hi):
+        port = OutputPort(
+            topology.Link("a", "b", 80.0),
+            SwitchConfig(port_buffer_bytes=1 << 20,
+                         ecn_kmin_frac=k / 10.0))
+        for fid, kb, drain in events:
+            port.enqueue(fid, kb << 10, 0.0, None)
+            if drain:
+                port.drain(10.0)
+        marked.append(port.marked_bytes)
+    assert marked[0] >= marked[1] - 1e-9
