@@ -1,0 +1,86 @@
+"""CI bench-regression gate: compare the machine-readable
+``experiments/bench/BENCH_fabric.json`` (as produced by
+``python -m benchmarks.bench_fabric --quick``) against the checked-in
+reference values in ``benchmarks/bench_floors.json`` and fail on
+a >20% regression.
+
+Two kinds of guarded fields:
+
+* ``floor``  — bigger is better (warm speedups): fail when the measured
+  value drops more than 20% below the reference;
+* ``ceiling`` — smaller is better (vector-vs-scalar deviations): fail
+  when the measured value exceeds the reference by more than 20% (a
+  ``null`` — the JSON encoding of inf/NaN, i.e. the engines disagreed —
+  always fails).
+
+Reference values are deliberately conservative (well below the numbers
+a warmed-up run produces locally) so the gate only trips on genuine
+regressions, not runner-to-runner jitter; refresh them when a PR
+intentionally moves the perf or accuracy envelope.
+
+  PYTHONPATH=src python -m benchmarks.check_bench_regression \
+      [bench.json] [floors.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from .common import OUT_DIR
+
+REGRESSION = 0.20
+
+BENCH_PATH = os.path.join(OUT_DIR, "BENCH_fabric.json")
+FLOORS_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "bench_floors.json")
+
+
+def check(bench: dict, floors: dict) -> list:
+    failures = []
+    for section, rules in floors.items():
+        row = bench.get(section)
+        if row is None:
+            failures.append(f"{section}: missing from bench output")
+            continue
+        for field, spec in rules.items():
+            val = row.get(field)
+            kind, ref = spec["kind"], spec["value"]
+            if kind == "floor":
+                limit = ref * (1.0 - REGRESSION)
+                ok = val is not None and val >= limit
+                cmp = f">= {limit:.4g} (ref {ref:.4g} - 20%)"
+            elif kind == "ceiling":
+                limit = ref * (1.0 + REGRESSION)
+                ok = val is not None and val <= limit
+                cmp = f"<= {limit:.4g} (ref {ref:.4g} + 20%)"
+            else:
+                failures.append(f"{section}.{field}: bad kind {kind!r}")
+                continue
+            status = "ok  " if ok else "FAIL"
+            print(f"{status} {section}.{field} = {val} (need {cmp})")
+            if not ok:
+                failures.append(f"{section}.{field} = {val}, need {cmp}")
+    return failures
+
+
+def main(argv) -> int:
+    bench_path = argv[1] if len(argv) > 1 else BENCH_PATH
+    floors_path = argv[2] if len(argv) > 2 else FLOORS_PATH
+    with open(bench_path) as f:
+        bench = json.load(f)
+    with open(floors_path) as f:
+        floors = json.load(f)
+    failures = check(bench, floors)
+    if failures:
+        print(f"\nbench regression gate FAILED "
+              f"({len(failures)} field(s)):")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("\nbench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,146 @@
+"""Fabric-driven serving: switch backpressure throttles decode-lane
+admission (the closed host/network loop of paper §3-§4).
+
+Two co-simulated timescales share one host:
+
+  * **fabric time** (1 us ticks): eight DCQCN senders burst KV/prompt
+    traffic through a congested leaf downlink (an :class:`OutputPort`
+    with ECN + PFC) into the serving host's receive datapath — the same
+    :class:`~repro.core.datapath.HostDatapath`-backed ``ReceiverHost``
+    that powers ``run_sim`` and the fabric driver;
+  * **engine time** (1 ms ticks): a batched decode engine whose
+    admission control is ``JetService`` — the event-driven wrapper of
+    the same datapath policy module.
+
+Every engine tick, the receiver's congestion state (PFC pause asserted,
+or the cache pool past its danger watermark) is routed into
+``engine.set_network_pressure``: while the fabric squeezes the host,
+no new decode lanes are admitted; when the incast burst completes and
+the pool drains, admission resumes and the backlog clears.
+
+  PYTHONPATH=src python examples/serving_on_fabric.py [--requests 16]
+
+The second half sweeps a mixed Jet+DDIO fleet (``mixed_fleet_grid``)
+with the vectorized fabric engine: shrinking the serving receiver's
+pool raises escape-ladder ECN pressure, which throttles its senders'
+DCQCN rates and stretches fleet incast FCT — the same loop, fleet-wide.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ARCHS, tiny_config  # noqa: E402
+from repro.core.jet import JetConfig, QoS  # noqa: E402
+from repro.core.simulator import testbed_100g  # noqa: E402
+from repro.fabric.hosts import ReceiverHost, SenderHost  # noqa: E402
+from repro.fabric.scenarios import mixed_fleet_grid  # noqa: E402
+from repro.fabric.switch import OutputPort, SwitchConfig  # noqa: E402
+from repro.fabric.topology import Link  # noqa: E402
+from repro.fabric.vector import run_fabric_sweep  # noqa: E402
+from repro.models import api  # noqa: E402
+from repro.parallel.sharding import single_device_ctx  # noqa: E402
+from repro.serving.engine import (EngineConfig, Request,  # noqa: E402
+                                  ServingEngine)
+
+FABRIC_US_PER_ENGINE_TICK = 200     # 200 us of fabric per 1 ms engine tick
+N_SENDERS = 8
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+
+    # ---- the serving host's receive datapath behind a congested port -- #
+    rcfg = testbed_100g("jet", pfc_enabled=True, jet_pool_bytes=1 << 20,
+                        rnic_ecn_cnp=False)
+    ticks_total = args.steps * FABRIC_US_PER_ENGINE_TICK
+    rx = ReceiverHost(rcfg, sim_ticks=ticks_total)
+    port = OutputPort(Link("leaf0", "serve0", rcfg.line_rate_gbps),
+                      SwitchConfig(pfc_enabled=True))
+    # incast burst: ~80% of the run's line-rate capacity, split evenly
+    burst = rcfg.line_rate_gbps * 1e9 / 8.0 * ticks_total * 1e-6 \
+        / N_SENDERS * 0.8
+    senders = [SenderHost(line_rate_gbps=rcfg.line_rate_gbps,
+                          burst_bytes=burst)
+               for _ in range(N_SENDERS)]
+
+    # ---- the decode engine on the same host --------------------------- #
+    cfg = tiny_config(ARCHS["h2o-danube-1.8b"])
+    ctx = single_device_ctx()
+    params = api.init_params(cfg, jax.random.key(0))
+    engine = ServingEngine(
+        cfg, EngineConfig(max_lanes=args.lanes, max_len=64), params, ctx,
+        jet_cfg=JetConfig(pool_bytes=1 << 20))
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        engine.submit(Request(
+            req_id=i,
+            prompt=rng.integers(2, cfg.vocab_size, size=8).astype(np.int32),
+            max_new_tokens=6,
+            qos=QoS.HIGH if i % 4 == 0 else QoS.NORMAL))
+
+    print(f"{'step':>4} {'pool_free%':>10} {'pfc':>4} {'gate':>5} "
+          f"{'waiting':>8} {'active':>7} {'done':>5}")
+    dt = rcfg.dt_us
+    for step in range(args.steps):
+        # -- fabric sub-ticks: senders -> switch port -> receiver ------- #
+        for _ in range(FABRIC_US_PER_ENGINE_TICK):
+            port.paused = rx.pfc_paused
+            batch = [(fid, b, 0.0, None)
+                     for fid, s in enumerate(senders)
+                     if (b := s.offer(dt)) > 0.0]
+            if batch:
+                port.enqueue_batch(batch)
+            arriving = sum(b for _, b, _ in port.drain(dt))
+            fb = rx.step(arriving)
+            if fb.cnps:
+                # receiver CNPs throttle the heaviest sender
+                heavy = max(range(N_SENDERS),
+                            key=lambda i: senders[i].injected)
+                for _ in range(fb.cnps):
+                    senders[heavy].on_cnp()
+        # -- backpressure gate: fabric congestion -> decode admission --- #
+        avail = max(0.0, rx.dp.pool_cap - rx.dp.resident) / rx.dp.pool_cap
+        squeezed = rx.pfc_paused or avail < rcfg.cache_safe
+        engine.set_network_pressure(squeezed)
+        engine.step()
+        if step % 5 == 0 or (not engine.waiting and not engine.active):
+            print(f"{step:>4} {avail * 100:>10.1f} "
+                  f"{'on' if rx.pfc_paused else '-':>4} "
+                  f"{'shut' if squeezed else 'open':>5} "
+                  f"{len(engine.waiting):>8} {len(engine.active):>7} "
+                  f"{len(engine.done):>5}")
+        if not engine.waiting and not engine.active:
+            break
+    st = engine.jet.stats()
+    print(f"served {len(engine.done)}/{args.requests}; jet stats: "
+          f"fallbacks={st['memory_fallbacks']} queued={st['queued']} "
+          f"escape={st['escape']}")
+
+    # ---- fleet view: the same loop, vectorized over a mixed fleet ----- #
+    print("\n--- mixed Jet+DDIO fleet sweep (pool size x burst):")
+    scens, pts = mixed_fleet_grid(pool_mb=(2.0, 1.0, 0.5),
+                                  burst_mb=(1.0, 2.0), sim_time_s=0.015)
+    out = run_fabric_sweep(scens)
+    print(f"  {'pool_mb':>8} {'burst_mb':>9} {'fct_us':>9} "
+          f"{'jet_rx_gbps':>12} {'esc_ecn':>8} {'victim':>7}")
+    for i, pt in enumerate(pts):
+        fct = out["incast_completion_us"][i]
+        print(f"  {pt['pool_mb']:>8.1f} {pt['burst_mb']:>9.1f} "
+              f"{fct if np.isfinite(fct) else float('nan'):>9.0f} "
+              f"{out['recv_goodput_gbps'][i][0]:>12.2f} "
+              f"{out['recv_escape_ecn'][i][0]:>8.0f} "
+              f"{out['victim_goodput_gbps'][i]:>7.1f}")
+    print("  (smaller pool -> more escape ECN -> throttled senders -> "
+        "longer incast FCT)")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,9 +5,33 @@
 - recycle:   swift cache recycle model (pipeline, threads, offload)
 - escape:    cache-pressure-aware escape ladder (replace / copy / ECN)
 - dcqcn:     DCQCN sender rate machine (congestion-control substrate)
+- datapath:  the shared host receive datapath — ONE admission/QoS/
+             recycle/escape state machine for every layer that models a
+             receiving host
 - jet:       the Jet service facade (registration, QoS admission)
 - simulator: receive-datapath discrete-event simulator (paper figures)
+
+HostDatapath layering (who wraps what)
+--------------------------------------
+``datapath.HostDatapath`` (tick-driven fluid machine) and
+``datapath.AdmissionQueues`` (event-driven QoS pump) are the single
+source of truth for the §3-§4 host-side workflow:
+
+* ``simulator.ReceiverHost`` wraps ``HostDatapath`` and adds the
+  network face (PFC pause, RNIC-watermark CNPs, message latency) —
+  this is what ``run_sim`` and the ``repro.fabric`` scalar driver
+  advance;
+* ``repro.fabric.sweep`` / ``repro.fabric.vector`` advance the same
+  step semantics in stacked-array form (``[G, R]`` receivers with the
+  QoS classes as a ``[G, Q, R]`` block) — the scalar machine here is
+  their float64 verification reference;
+* ``jet.JetService`` wraps ``AdmissionQueues`` around the concrete
+  pool/window/recycle/escape objects — this is what the serving engine
+  drives, and its ``set_backpressure`` gate is how fabric congestion
+  reaches decode-lane admission (``examples/serving_on_fabric.py``).
 """
+from .datapath import (Admit, AdmissionQueues, DatapathFeedback,
+                       HostDatapath, N_QOS, expected_footprint)
 from .dcqcn import DcqcnConfig, DcqcnRate
 from .escape import Action, EscapeConfig, EscapeController, EscapeStats
 from .jet import JetConfig, JetService, QoS, SMALL_MSG_BYTES
@@ -19,10 +43,13 @@ from .simulator import (ReceiverSim, SimConfig, SimResult, run_sim,
 from .window import ReadWindow, fragment
 
 __all__ = [
-    "Action", "DcqcnConfig", "DcqcnRate", "DevicePool", "EscapeConfig",
-    "EscapeController", "EscapeStats", "JetConfig", "JetService", "QoS",
+    "Action", "Admit", "AdmissionQueues", "DatapathFeedback",
+    "DcqcnConfig", "DcqcnRate", "DevicePool", "EscapeConfig",
+    "EscapeController", "EscapeStats", "HostDatapath", "JetConfig",
+    "JetService", "N_QOS", "QoS",
     "ReadWindow", "ReceiverSim", "RecycleModel", "SimConfig", "SimResult",
-    "SlabPool", "SMALL_MSG_BYTES", "fragment", "little_law_bytes",
+    "SlabPool", "SMALL_MSG_BYTES", "expected_footprint", "fragment",
+    "little_law_bytes",
     "paper_default", "paper_unoptimized", "run_sim", "slice_message",
     "testbed_100g", "testbed_25g",
 ]

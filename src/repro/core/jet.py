@@ -3,29 +3,28 @@ the receive workflow glue between the RNIC ("network"), the cache-resident
 buffer pool, the recycle controller and the escape controller.
 
 This is the host-side service object used by the serving engine
-(`repro.serving.engine`).  The in-graph realization of the same ideas lives in
-`repro.kernels` (staged consumption) and `repro.parallel.collectives`
-(windowed chunked collectives).
+(`repro.serving.engine`).  The admission machinery itself — the QoS
+classes, the priority pump order, the expected-footprint rule and the §5
+low-QoS DRAM fallback — lives in :mod:`repro.core.datapath`
+(``AdmissionQueues``), which is the same policy module the fluid
+simulator and the fabric engines advance in stacked-array form; this
+facade binds it to the concrete pool/window/recycle/escape objects.
+The in-graph realization of the same ideas lives in `repro.kernels`
+(staged consumption) and `repro.parallel.collectives` (windowed chunked
+collectives).
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
-import enum
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
+from .datapath import Admit, AdmissionQueues, QoS, expected_footprint
 from .escape import Action, EscapeConfig, EscapeController
 from .pool import SlabPool
 from .recycle import RecycleModel, paper_default
 from .window import ReadWindow
 
 SMALL_MSG_BYTES = 4 << 10  # paper §4.1.1: <4 KB -> SEND/RECV via SRQ
-
-
-class QoS(enum.IntEnum):
-    HIGH = 0
-    NORMAL = 1
-    LOW = 2
 
 
 @dataclasses.dataclass
@@ -62,12 +61,16 @@ class JetService:
         self.recycle = recycle or paper_default()
         self.escape = EscapeController(cfg.escape)
         self._apps: Dict[int, QoS] = {}
-        self._queues: Dict[QoS, Deque[Transfer]] = {
-            q: collections.deque() for q in QoS}
+        self._queues = AdmissionQueues()
         self._live: Dict[int, Transfer] = {}
         self._next_id = 0
         self.rejected_small = 0
         self.memory_fallbacks = 0   # low-QoS apps pushed to DRAM buffers (§5)
+        # Network backpressure gate (PFC pause / fabric congestion): while
+        # asserted, no new transfers are admitted to the pool — arrivals
+        # are stalled on the wire, so reserving cache slots for them would
+        # only deepen the pressure that caused the pause.
+        self.network_paused = False
 
     # -- step 1: registration -------------------------------------------------
     def register(self, app_id: int, qos: QoS = QoS.NORMAL) -> None:
@@ -81,46 +84,50 @@ class JetService:
         t = Transfer(self._next_id, app_id, nbytes, self._apps[app_id],
                      small=nbytes < SMALL_MSG_BYTES)
         self._next_id += 1
-        self._queues[t.qos].append(t)
+        self._queues.push(t, t.qos)
         return t.xfer_id
 
     def _expected_footprint(self, nbytes: int) -> int:
-        """Admission rule (§3.2 step 2): expected throughput x timespan,
-        capped by the transfer size itself."""
-        rate_gbps = 8.0 * nbytes / max(self.cfg.expected_timespan_us, 1e-9) \
-            / 1e3
-        little = rate_gbps * 1e9 / 8.0 * self.cfg.expected_timespan_us * 1e-6
-        return min(nbytes, int(little))
+        """Admission rule (§3.2 step 2), shared with the fluid datapath."""
+        return expected_footprint(nbytes, self.cfg.expected_timespan_us)
+
+    # -- network feedback ------------------------------------------------------
+    def set_backpressure(self, paused: bool) -> None:
+        """Assert/clear the network backpressure gate (e.g. the receiver's
+        PFC pause state, or fabric-level pool-danger signalling)."""
+        self.network_paused = bool(paused)
 
     # -- step 3: admission + allocation ----------------------------------------
+    def queue_depth(self, qos: Optional[QoS] = None) -> int:
+        return (len(self._queues) if qos is None
+                else self._queues.depth(qos))
+
     def pump(self, now: float) -> List[Transfer]:
-        """Admit queued transfers in QoS-priority, FIFO-within-class order."""
-        admitted: List[Transfer] = []
-        for qos in QoS:
-            q = self._queues[qos]
-            while q:
-                t = q[0]
-                if len(self._live) >= self.cfg.max_concurrent_transfers:
-                    return admitted
-                need = (self.pool.slots_needed(t.nbytes)
-                        * self.pool.slot_bytes)
-                if self._expected_footprint(t.nbytes) > \
-                        self.pool.available_bytes or \
-                        need > self.pool.available_bytes:
-                    if qos == QoS.LOW:
-                        # §5: low-QoS falls back to DRAM buffers
-                        q.popleft()
-                        self.memory_fallbacks += 1
-                        continue
-                    break
-                slots = self.pool.alloc(t.app_id, t.nbytes, now)
-                if slots is None:
-                    break
-                q.popleft()
-                t.slots = slots
-                self._live[t.xfer_id] = t
-                admitted.append(t)
-        return admitted
+        """Admit queued transfers in QoS-priority, FIFO-within-class order
+        (the shared :class:`~repro.core.datapath.AdmissionQueues` pump)."""
+        if self.network_paused:
+            return []
+
+        def try_admit(t: Transfer) -> Admit:
+            if len(self._live) >= self.cfg.max_concurrent_transfers:
+                return Admit.STOP
+            need = self.pool.slots_needed(t.nbytes) * self.pool.slot_bytes
+            if self._expected_footprint(t.nbytes) > \
+                    self.pool.available_bytes or \
+                    need > self.pool.available_bytes:
+                return Admit.DEFER
+            slots = self.pool.alloc(t.app_id, t.nbytes, now)
+            if slots is None:
+                return Admit.DEFER
+            t.slots = slots
+            self._live[t.xfer_id] = t
+            return Admit.OK
+
+        def fallback(t: Transfer) -> None:
+            # §5: low-QoS transfers fall back to DRAM buffers
+            self.memory_fallbacks += 1
+
+        return self._queues.pump(try_admit, fallback)
 
     # -- steps 4-6: arrival notification + release ------------------------------
     def complete(self, xfer_id: int, now: float) -> None:
@@ -155,6 +162,10 @@ class JetService:
     def stats(self) -> dict:
         return dict(pool_available=self.pool.available_bytes,
                     live_transfers=len(self._live),
+                    queued=len(self._queues),
+                    queued_by_qos={q.name: self._queues.depth(q)
+                                   for q in QoS},
                     window_cap=self.window.cap_bytes,
                     escape=dataclasses.asdict(self.escape.stats),
+                    network_paused=self.network_paused,
                     memory_fallbacks=self.memory_fallbacks)

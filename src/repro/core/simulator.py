@@ -28,6 +28,8 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from .datapath import (ClassBytes, HostDatapath,  # noqa: F401
+                       hold_us_baseline, hold_us_jet)
 from .dcqcn import DcqcnConfig, DcqcnRate
 from .recycle import RecycleModel, paper_default
 
@@ -127,6 +129,7 @@ class SimResult:
     escape_dram_gbps: float
     dropped_bytes: int
     completed_messages: int
+    mem_fallback_bytes: float = 0.0    # LOW-QoS bytes spilled to DRAM (§5)
 
     def as_row(self) -> dict:
         return dataclasses.asdict(self)
@@ -135,24 +138,6 @@ class SimResult:
 # --------------------------------------------------------------------------- #
 # The step-able receiver host (the tick body behind run_sim and the fabric)
 # --------------------------------------------------------------------------- #
-def hold_us_baseline(c: SimConfig) -> float:
-    """Message-granular post-NIC hold time (baseline, non-pipelined)."""
-    return (c.consumer_latency_us +
-            c.msg_bytes * 8.0 / (c.app_gbps * 1e9) * 1e6)
-
-
-def hold_us_jet(c: SimConfig) -> float:
-    """Slice-granular hold (Jet recycle pipeline): consumer latency
-    dominates, the pipeline transit adds ~3 slice-times (paper §4.2.2)."""
-    r = c.recycle
-    per_byte_ns = r.get_ns_per_byte + r.process_ns_per_byte()
-    transit = 3.0 * r.slice_bytes * per_byte_ns * 1e-3
-    if not r.pipelined:
-        # unpipelined Jet holds whole messages (ablation mode)
-        return hold_us_baseline(c) + transit
-    return c.consumer_latency_us + transit
-
-
 @dataclasses.dataclass
 class HostFeedback:
     """Per-tick receiver feedback routed back to the sender/fabric."""
@@ -160,17 +145,24 @@ class HostFeedback:
     dropped: float = 0.0      # bytes lost at the RNIC (lossy mode)
     cnps: int = 0             # congestion notifications for the sender(s)
     pfc_paused: bool = False  # receiver asserts pause on its access link
+    accepted_qos: Optional[List[float]] = None  # per-class split (QoS order)
 
 
 class ReceiverHost:
     """The paper's receiver datapath advanced one fluid tick at a time.
 
-    This is ``ReceiverSim.run()``'s former monolithic loop as a step-able
-    component: the caller supplies the bytes arriving on the access link
-    each tick (already gated by any PFC pause it honours) and routes the
-    returned CNPs to the congestion-controlled sender(s).  ``run_sim``
-    drives exactly one of these; ``repro.fabric`` composes N of them
-    behind a Clos fabric.
+    A thin network-facing wrapper around :class:`~repro.core.datapath
+    .HostDatapath` (the shared admission/QoS/recycle/escape state
+    machine): this class owns what the *link* sees — PFC pause state,
+    RNIC-watermark CNP pacing, drop accounting, per-message latency
+    bookkeeping — and delegates everything behind the RNIC to the
+    datapath.  The caller supplies the bytes arriving on the access link
+    each tick (already gated by any PFC pause it honours), either as a
+    plain float (all NORMAL QoS — bit-identical to the pre-datapath
+    scalar buffer) or as a per-class ``[HIGH, NORMAL, LOW]`` sequence,
+    and routes the returned CNPs to the congestion-controlled sender(s).
+    ``run_sim`` drives exactly one of these; ``repro.fabric`` composes N
+    of them behind a Clos fabric.
     """
 
     def __init__(self, cfg: SimConfig, sim_ticks: Optional[int] = None):
@@ -178,34 +170,16 @@ class ReceiverHost:
         self.dt = c.dt_us
         ticks = (sim_ticks if sim_ticks is not None
                  else int(c.sim_time_s * 1e6 / self.dt))
-        # release buckets (bytes becoming consumable at tick t);
-        # 1 s slack past the end for straggler releases
-        self.horizon = ticks + int(1e6 / self.dt)
-        self.rel_base = np.zeros(self.horizon, dtype=np.float64)
-        self.rel_strag = np.zeros(self.horizon, dtype=np.float64)
-
-        self.rnic_q = 0.0
-        self.resident = 0.0               # post-NIC bytes not yet consumed
-        self.strag_resident = 0.0
-        self.escape_debt = 0.0            # escaped bytes whose release is void
-        self.replace_debt = 0.0           # portion of debt borrowed by REPLACE
-        self.pool_cap = float(c.jet_pool_bytes)
-        self.replace_mem = 0.0
+        self.dp = HostDatapath(c, ticks, dt_us=self.dt)
 
         self.pfc_paused = False
         self.pfc_pause_us = 0.0
         self.cnp_count = 0.0
         self.cnp_accum_us = c.cnp_interval_us  # allow an immediate first CNP
-        self.ecn_escape_accum_us = 0.0
 
         self.total_arrived = 0.0          # accepted into RNIC buffer
         self.total_drained = 0.0          # delivered to host datapath
         self.dropped = 0.0
-        self.nic_dram_bytes = 0.0
-        self.escape_dram_bytes = 0.0
-        self.miss_sum, self.miss_n = 0.0, 0
-        self.pool_peak, self.pool_sum = 0.0, 0.0
-        self.replaces = self.copies = self.ecns = 0
 
         # Message latency tracking.  The num_qps concurrent QPs stripe
         # their messages across the wire, so one "generation" = num_qps
@@ -221,30 +195,38 @@ class ReceiverHost:
         self.hold_j = hold_us_jet(c)
         self.t = 0
 
-    def step(self, arriving: float) -> HostFeedback:
-        """Advance one tick with ``arriving`` bytes offered on the link."""
+    # network-facing views of the shared datapath state
+    @property
+    def rnic_q(self) -> float:
+        return self.dp.rnic_q
+
+    @property
+    def resident(self) -> float:
+        return self.dp.resident
+
+    def step(self, arriving: ClassBytes) -> HostFeedback:
+        """Advance one tick with ``arriving`` bytes offered on the link
+        (a float = all NORMAL class, or a per-QoS-class sequence)."""
         c = self.cfg
         dt = self.dt
         t = self.t
-        if t >= self.horizon:
+        if t >= self.dp.horizon:
             # past this point the release arrays would silently stop
             # cycling bytes and the pool would deadlock — fail loudly
             raise RuntimeError(
-                f"ReceiverHost stepped past its horizon ({self.horizon} "
+                f"ReceiverHost stepped past its horizon ({self.dp.horizon} "
                 f"ticks); construct it with sim_ticks covering the run")
         now_us = t * dt
-        bytes_per_gbps_tick = 1e9 / 8.0 * dt * 1e-6
         fb = HostFeedback()
         cpu_bw = (c.cpu_membw_schedule(now_us * 1e-6)
                   if c.cpu_membw_schedule else c.cpu_membw_gbps)
 
-        # ---- link -> RNIC ------------------------------------------------ #
-        space = c.rnic_buffer_bytes - self.rnic_q
-        accepted = min(arriving, max(0.0, space))
-        self.dropped += arriving - accepted
-        fb.dropped = arriving - accepted
+        # ---- link -> RNIC (QoS-classed admission) ------------------------- #
+        accepted, per_class, total_in = self.dp.admit_link(arriving)
+        self.dropped += total_in - accepted
+        fb.dropped = total_in - accepted
         fb.accepted = accepted
-        self.rnic_q += accepted
+        fb.accepted_qos = per_class
         # message start timestamps
         new_started = int((self.total_arrived + accepted) // self.msg) \
             - int(self.total_arrived // self.msg)
@@ -255,43 +237,9 @@ class ReceiverHost:
             self.n_started += 1
         self.total_arrived += accepted
 
-        # ---- drain RNIC -> host ------------------------------------------ #
-        if c.mode == "ddio":
-            # posted per-QP receive buffers + unconsumed post-NIC bytes
-            working_set = c.num_qps * c.msg_bytes + self.resident
-            over = working_set - c.ddio_bytes
-            miss = min(1.0, max(0.0, over / (c.miss_knee * c.ddio_bytes)))
-            self.miss_sum += miss
-            self.miss_n += 1
-            avail_dram = max(0.0, c.membw_total_gbps - cpu_bw)
-            drain_bw = c.pcie_gbps
-            if miss > 1e-9:
-                # each drained byte costs ~2*miss bytes of DRAM traffic
-                drain_bw = min(drain_bw, avail_dram / (2.0 * miss))
-            drained = min(self.rnic_q, drain_bw * bytes_per_gbps_tick)
-            self.nic_dram_bytes += drained * 2.0 * miss
-            hold = self.hold_b
-            strag_share = 0.0
-        else:  # jet
-            pool_free = max(0.0, self.pool_cap - self.resident)
-            drain_bw = min(c.pcie_gbps, c.line_rate_gbps * 4.0)
-            drained = min(self.rnic_q, drain_bw * bytes_per_gbps_tick,
-                          pool_free)
-            hold = self.hold_j
-            strag_share = c.straggler_frac
-
-        self.rnic_q -= drained
-        # schedule release
-        if drained > 0.0:
-            base_part = drained * (1.0 - strag_share)
-            strag_part = drained * strag_share
-            bt = min(self.horizon - 1, t + max(1, int(hold / dt)))
-            st = min(self.horizon - 1,
-                     t + max(1, int(hold * c.straggler_mult / dt)))
-            self.rel_base[bt] += base_part
-            self.rel_strag[st] += strag_part
-            self.resident += drained
-            self.strag_resident += strag_part
+        # ---- the shared datapath tick: drain / release / escape ----------- #
+        dfb = self.dp.step(t, cpu_bw)
+        drained = dfb.drained
         # message drain-completion timestamps
         new_done = int((self.total_drained + drained) // self.msg) \
             - int(self.total_drained // self.msg)
@@ -299,64 +247,13 @@ class ReceiverHost:
             self.dones.append(now_us)
             self.n_drained_msgs += c.num_qps
         self.total_drained += drained
-
-        # ---- post-NIC consumption ---------------------------------------- #
-        for arr, is_strag in ((self.rel_base, False), (self.rel_strag, True)):
-            r = arr[t]
-            if r <= 0.0:
-                continue
-            if self.escape_debt > 0.0:
-                void = min(r, self.escape_debt)
-                self.escape_debt -= void
-                r -= void
-                # a released straggler that had been REPLACE-escaped
-                # retires its DRAM borrow (re-arming the replace rung)
-                repay = min(void, self.replace_debt)
-                self.replace_debt -= repay
-                self.replace_mem = max(0.0, self.replace_mem - repay)
-            self.resident = max(0.0, self.resident - r)
-            if is_strag:
-                self.strag_resident = max(0.0, self.strag_resident - r)
-
-        # ---- Jet escape ladder (paper Algorithm 1) ------------------------ #
-        if c.mode == "jet":
-            avail_frac = max(0.0, self.pool_cap - self.resident) \
-                / self.pool_cap
-            if avail_frac < c.cache_safe:
-                if self.replace_mem < c.mem_esc_bytes:
-                    x = min(self.strag_resident,
-                            c.mem_esc_bytes - self.replace_mem)
-                    if x > 0.0:
-                        self.resident -= x
-                        self.strag_resident -= x
-                        self.escape_debt += x
-                        self.replace_debt += x
-                        self.replace_mem += x
-                        self.replaces += 1
-                        # background re-touch traffic, low frequency
-                        self.escape_dram_bytes += x * 0.1
-                else:
-                    x = self.strag_resident
-                    if x > 0.0:
-                        self.resident -= x
-                        self.strag_resident = 0.0
-                        self.escape_debt += x
-                        self.escape_dram_bytes += x  # the copy itself
-                        self.copies += 1
-                avail_frac = max(0.0, self.pool_cap - self.resident) \
-                    / self.pool_cap
-                if avail_frac < c.cache_danger:
-                    self.ecn_escape_accum_us += dt
-                    if self.ecn_escape_accum_us >= c.cnp_interval_us:
-                        self.ecn_escape_accum_us = 0.0
-                        self.cnp_count += 1
-                        self.ecns += 1
-                        fb.cnps += 1
-            self.pool_sum += self.resident
-            self.pool_peak = max(self.pool_peak, self.resident)
+        # escape-ladder ECN (rung 3) surfaces as CNPs toward the sender
+        if dfb.ecn_fires:
+            self.cnp_count += dfb.ecn_fires
+            fb.cnps += dfb.ecn_fires
 
         # ---- congestion signalling ---------------------------------------- #
-        q_frac = self.rnic_q / c.rnic_buffer_bytes
+        q_frac = self.dp.rnic_q / c.rnic_buffer_bytes
         if c.pfc_enabled:
             if self.pfc_paused:
                 if q_frac < c.pfc_xon:
@@ -380,6 +277,7 @@ class ReceiverHost:
     def finalize(self) -> SimResult:
         """Aggregate the per-tick state into the paper-facing SimResult."""
         c = self.cfg
+        dp = self.dp
         ticks = max(1, self.t)
         sim_us = ticks * self.dt
         goodput = self.total_drained * 8.0 / (sim_us * 1e-6) / 1e9
@@ -396,18 +294,19 @@ class ReceiverHost:
             p999_latency_us=float(np.percentile(arr, 99.9)),
             pfc_pause_us=self.pfc_pause_us,
             cnp_count=self.cnp_count,
-            ddio_miss_rate=(self.miss_sum / self.miss_n)
-            if self.miss_n else 0.0,
-            nic_dram_gbps=self.nic_dram_bytes * 8.0 / (sim_us * 1e-6) / 1e9,
-            pool_peak_bytes=int(self.pool_peak),
-            pool_avg_bytes=self.pool_sum / ticks,
-            escape_replaces=self.replaces,
-            escape_copies=self.copies,
-            escape_ecn=self.ecns,
-            escape_dram_gbps=self.escape_dram_bytes * 8.0
+            ddio_miss_rate=(dp.miss_sum / dp.miss_n)
+            if dp.miss_n else 0.0,
+            nic_dram_gbps=dp.nic_dram_bytes * 8.0 / (sim_us * 1e-6) / 1e9,
+            pool_peak_bytes=int(dp.pool_peak),
+            pool_avg_bytes=dp.pool_sum / ticks,
+            escape_replaces=dp.replaces,
+            escape_copies=dp.copies,
+            escape_ecn=dp.ecns,
+            escape_dram_gbps=dp.escape_dram_bytes * 8.0
             / (sim_us * 1e-6) / 1e9,
             dropped_bytes=int(self.dropped),
             completed_messages=self.n_drained_msgs,
+            mem_fallback_bytes=dp.mem_fallback_bytes,
         )
 
 

@@ -2,18 +2,32 @@
 
 - topology:  leaf–spine Clos graphs + presets (jet_testbed, incast_fabric)
 - switch:    output-queued switch (per-port ECN marking, PFC propagation)
-- hosts:     step-able ReceiverHost (the refactored run_sim tick body) and
+- hosts:     step-able ReceiverHost (wrapping the shared
+             `repro.core.datapath.HostDatapath` — the same QoS admission/
+             escape/recycle machine behind run_sim and JetService) and
              DCQCN SenderHost
 - fabric:    scalar multi-host driver -> per-host SimResults + fabric
-             metrics (victim goodput, pause fan-out, incast FCT)
-- scenarios: incast-N / all-to-all HPC / storage OLTP-OLAP-backup bundles
-             + fabric_grid for building scenario grids
+             metrics (victim goodput, pause fan-out, incast FCT); flows
+             carry a QoS class into receiver admission, escape-ladder
+             ECN comes back as CNPs, `cnp_delay_us` models NP->RP
+             propagation
+- scenarios: incast-N / all-to-all HPC / storage OLTP-OLAP-backup /
+             mixed Jet+DDIO fleet bundles + fabric_grid /
+             mixed_fleet_grid for building scenario grids
 - sweep:     vectorized receiver-datapath grid (jax.vmap + lax.scan over
              stacked single-host fluid state; numpy reference backend)
 - vector:    vectorized *fabric* grid — the whole multi-host tick body
-             (flows x ports x receivers) as one vmap+scan program
+             (flows x ports x receivers, with the HostDatapath QoS
+             classes as a stacked [G, Q, R] block and a CNP-delay ring)
+             as one vmap+scan program
 - _scan:     shared lax.scan compile-cost machinery (unroll autotune,
              donated carries)
+
+Which engine advances which datapath backend: the scalar driver steps
+real ``HostDatapath`` objects (float64 Python, via ``ReceiverHost``);
+``run_sweep`` and ``run_fabric_sweep`` advance the equivalent stacked-
+array recurrence (batched-numpy float64 reference / jax float32
+vmap+scan), verified against the scalar machine in the test suite.
 
 Choosing an engine
 ------------------
@@ -42,7 +56,8 @@ from .fabric import (FabricConfig, FabricResult, Flow, burst_done_bytes,
                      run_fabric)
 from .hosts import HostFeedback, ReceiverHost, SenderHost
 from .scenarios import (Scenario, all_to_all, fabric_grid, incast,
-                        single_pair, storage_mix)
+                        mixed_fleet, mixed_fleet_grid, single_pair,
+                        storage_mix)
 from .switch import OutputPort, Switch, SwitchConfig
 from .sweep import SweepParams, grid_configs, run_sweep
 from .topology import Link, Topology, clos, incast_fabric, jet_testbed
@@ -53,6 +68,7 @@ __all__ = [
     "HostFeedback", "Link", "OutputPort", "ReceiverHost", "Scenario",
     "SenderHost", "Switch", "SwitchConfig", "SweepParams", "Topology",
     "all_to_all", "burst_done_bytes", "clos", "fabric_grid",
-    "grid_configs", "incast", "incast_fabric", "jet_testbed", "run_fabric",
+    "grid_configs", "incast", "incast_fabric", "jet_testbed",
+    "mixed_fleet", "mixed_fleet_grid", "run_fabric",
     "run_fabric_sweep", "run_sweep", "single_pair", "storage_mix",
 ]

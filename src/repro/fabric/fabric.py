@@ -31,10 +31,12 @@ sequential semantics.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, Set, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 
+from ..core.datapath import N_QOS, QoS
 from ..core.simulator import SimConfig, SimResult, testbed_100g
 from .hosts import ReceiverHost, SenderHost
 from .switch import OutputPort, Switch, SwitchConfig
@@ -50,6 +52,7 @@ class Flow:
     burst_bytes: Optional[float] = None      # closed flow: stop after burst
     start_us: float = 0.0
     tag: str = ""                            # e.g. "incast" | "victim"
+    qos: QoS = QoS.NORMAL                    # receiver admission class (§3.2)
 
 
 def burst_done_bytes(burst_bytes: float) -> float:
@@ -74,6 +77,11 @@ class FabricConfig:
     # SimConfig factory per receiver host (mode, pool, DDIO, PFC, ...)
     receiver_cfg: Callable[[str], SimConfig] = \
         lambda host: testbed_100g("jet")
+    # CNP propagation delay NP -> RP (us): a congestion notification
+    # generated at the receiver (escape-ladder ECN, RNIC watermark, paced
+    # switch marks) cuts its sender's DCQCN rate this many microseconds
+    # later.  0.0 = same-tick delivery (the pre-delay behaviour).
+    cnp_delay_us: float = 0.0
 
 
 @dataclasses.dataclass
@@ -147,6 +155,11 @@ def run_fabric(topo: Topology, flows: List[Flow],
     # -- per-flow CNP pacing at the receiver NP (DCQCN) ----------------------
     cnp_accum_us = {fid: math.inf for fid in senders}   # immediate first CNP
     marked_backlog = {fid: 0.0 for fid in senders}
+    # CNP propagation: a notification generated at tick t cuts its sender
+    # at t + cnp_delay ticks (FIFO — the delay is constant, so the deque
+    # stays sorted by due tick); 0 delay preserves same-tick delivery
+    cnp_delay_ticks = max(0, int(round(fcfg.cnp_delay_us / dt)))
+    pending_cnps: Deque[Tuple[int, int]] = collections.deque()
     flows_by_dst: Dict[str, List[int]] = {}
     for fid, f in enumerate(flows):
         flows_by_dst.setdefault(f.dst, []).append(fid)
@@ -241,12 +254,20 @@ def run_fabric(topo: Topology, flows: List[Flow],
         # ---- 3. receivers advance; CNPs route back ------------------------ #
         for host, rx in receivers.items():
             arr = arrivals.get(host, {})
-            total = sum(b for b, _ in arr.values())
-            fb = rx.step(total)
+            # arrivals enter the datapath's QoS admission classes: RNIC
+            # buffer space is granted in priority order, so a LOW-class
+            # bulk flow can no longer crowd out a HIGH-class one
+            per_class = [0.0] * N_QOS
+            for fid, (b, _) in arr.items():
+                per_class[flows[fid].qos] += b
+            total = sum(per_class)
+            fb = rx.step(per_class)
             if total > 0.0:
-                share = fb.accepted / total
+                acc = fb.accepted_qos or [0.0] * N_QOS
+                share = [acc[q] / per_class[q] if per_class[q] > 0.0
+                         else 0.0 for q in range(N_QOS)]
                 for fid, (b, _) in arr.items():
-                    d = b * share
+                    d = b * share[flows[fid].qos]
                     delivered[fid] += d
                     # RNIC tail-drops are retransmitted too (fluid RC)
                     senders[fid].injected -= b - d
@@ -256,10 +277,10 @@ def run_fabric(topo: Topology, flows: List[Flow],
                             and delivered[fid]
                             >= burst_done_bytes(f.burst_bytes)):
                         completion[fid] = now_us
-            # receiver-generated CNPs hit the heaviest arriving flow; with
-            # the access link paused (arr empty) they fall back to the
-            # most recent heavy flow so senders stay throttled during
-            # pauses, as in run_sim
+            # receiver-generated CNPs (escape-ladder ECN + RNIC watermark)
+            # hit the heaviest arriving flow; with the access link paused
+            # (arr empty) they fall back to the most recent heavy flow so
+            # senders stay throttled during pauses, as in run_sim
             if arr:
                 # deterministic tie-break (lowest flow id), independent of
                 # arrival-dict insertion order — the vector engine's argmax
@@ -268,7 +289,7 @@ def run_fabric(topo: Topology, flows: List[Flow],
             heavy = last_heavy.get(host)
             if fb.cnps and heavy is not None:
                 for _ in range(fb.cnps):
-                    senders[heavy].on_cnp()
+                    pending_cnps.append((t + cnp_delay_ticks, heavy))
             # switch ECN marks -> per-flow CNPs, paced per DCQCN NP; the
             # pacing clock runs for every flow of this receiver, so marks
             # owed to a stalled/paused flow still convert on schedule
@@ -281,7 +302,13 @@ def run_fabric(topo: Topology, flows: List[Flow],
                         cnp_accum_us[fid] >= interval:
                     cnp_accum_us[fid] = 0.0
                     marked_backlog[fid] = 0.0
-                    senders[fid].on_cnp()
+                    pending_cnps.append((t + cnp_delay_ticks, fid))
+        # deliver CNPs whose propagation delay has elapsed (same tick
+        # when cnp_delay_us == 0 — the sender's rate machine is only read
+        # at the next tick's offer, so end-of-tick delivery is exact)
+        while pending_cnps and pending_cnps[0][0] <= t:
+            _, fid = pending_cnps.popleft()
+            senders[fid].on_cnp()
 
         # ---- 4. PFC pause propagation ------------------------------------- #
         paused_links = set()

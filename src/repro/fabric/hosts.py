@@ -1,9 +1,12 @@
 """Host components for the multi-host fabric.
 
-:class:`ReceiverHost` — the receive-datapath tick body that also powers
+:class:`ReceiverHost` — the network-facing wrapper around the shared
+:class:`repro.core.datapath.HostDatapath` state machine that also powers
 ``run_sim`` — lives in :mod:`repro.core.simulator` (core stays the bottom
 layer; the fabric composes N of them) and is re-exported here alongside
-the fabric-only :class:`SenderHost`.
+the fabric-only :class:`SenderHost`.  Fabric arrivals enter its QoS
+admission classes (``Flow.qos``) and its escape-ladder ECN comes back as
+CNPs that the driver routes to the offending DCQCN senders.
 
 :class:`SenderHost` wraps one DCQCN rate machine per flow, adding burst
 (closed-flow) bookkeeping for the fabric driver.  PFC pause gating is the

@@ -131,6 +131,57 @@ def storage_mix(kind: str = "oltp", mode: str = "jet",
                                 num_qps=p["num_qps"])))
 
 
+def mixed_fleet(n_senders: int = 8, pool_mb: float = 12.0,
+                burst_mb: float = 1.0, pfc: bool = False,
+                rnic_ecn_cnp: bool = False,
+                sim_time_s: float = 0.02) -> Scenario:
+    """Mixed Jet+DDIO fleet on one fabric (ROADMAP "scenario breadth"):
+    N senders burst into a *Jet* receiver (``h1_0``, pool size
+    ``pool_mb``) while a victim flow streams open-loop into a *DDIO*
+    receiver (``h1_1``) sharing the source leaf and fabric path.
+
+    With ``rnic_ecn_cnp=False`` (the default here) the only
+    receiver-side brake on the incast is the escape ladder's ECN ->
+    CNP path, so sweeping ``pool_mb`` down makes the host-side
+    admission/escape -> network-side DCQCN feedback loop directly
+    observable in fleet metrics (incast FCT, victim goodput)."""
+    topo = incast_fabric(n_senders)
+    flows = [Flow(src=f"h0_{i}", dst="h1_0",
+                  burst_bytes=burst_mb * 1e6, tag="incast")
+             for i in range(n_senders)]
+    flows.append(Flow(src=f"h0_{n_senders - 1}", dst="h1_1",
+                      tag="victim"))
+    pool_b = int(pool_mb * (1 << 20))
+
+    def recv(host: str) -> SimConfig:
+        if host == "h1_0":
+            return testbed_100g("jet", pfc_enabled=pfc,
+                                jet_pool_bytes=pool_b,
+                                rnic_ecn_cnp=rnic_ecn_cnp)
+        return testbed_100g("ddio", pfc_enabled=pfc)
+
+    sw = SwitchConfig(pfc_enabled=pfc)
+    return Scenario(
+        name=f"mixed{n_senders}_pool{pool_mb:g}{'_pfc' if pfc else ''}",
+        topology=topo, flows=flows,
+        fabric=FabricConfig(sim_time_s=sim_time_s, switch=sw,
+                            receiver_cfg=recv))
+
+
+def mixed_fleet_grid(pool_mb: Sequence[float] = (12.0, 4.0, 1.0),
+                     burst_mb: Sequence[float] = (1.0, 2.0),
+                     **kw) -> Tuple[List[Scenario], List[dict]]:
+    """Grid of :func:`mixed_fleet` scenarios over Jet pool size x burst
+    size, for :func:`repro.fabric.vector.run_fabric_sweep` — the
+    closed-loop sweep: shrinking the receiver pool raises escape-ladder
+    ECN pressure, which throttles that receiver's DCQCN senders and
+    shifts fleet incast FCT / victim goodput."""
+    return fabric_grid(
+        lambda pool_mb, burst_mb: mixed_fleet(
+            pool_mb=pool_mb, burst_mb=burst_mb, **kw),
+        pool_mb=list(pool_mb), burst_mb=list(burst_mb))
+
+
 def single_pair(mode: str = "jet", sim_time_s: float = 0.01,
                 **recv_kw) -> Scenario:
     """One sender, one receiver under one switch — the fabric rendition of

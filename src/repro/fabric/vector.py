@@ -7,10 +7,14 @@ goodput, PFC pause fan-out, Lamda §5-6).  This module packs the *entire*
 tick body into stacked arrays and advances all grid points at once:
 
 * per-flow DCQCN/offer state as ``[F]`` arrays (``[G, F]`` across the
-  grid) — rate machines, injected/delivered byte counters, CNP pacing;
+  grid) — rate machines, injected/delivered byte counters, CNP pacing,
+  plus a circular delay ring for CNP propagation (``cnp_delay_us``);
 * per-port queue state as ``[P, F]`` byte/mark matrices covering the NIC
   egress queues and every switch output port on some flow's path;
-* per-receiver datapath state as ``[R]`` arrays plus ``[R, H]`` circular
+* per-receiver datapath state as ``[R]`` arrays — including the
+  :class:`~repro.core.datapath.HostDatapath` QoS admission classes as a
+  stacked ``[G, Q, R]`` block (``Q = 3`` service classes, priority-order
+  space/drain grants, §5 low-QoS DRAM spill) — plus ``[R, H]`` circular
   release rings (the ``sweep.py`` ring trick);
 * static routing from :meth:`Topology.route` precomputed into flow->port
   incidence one-hots, so each forwarding stage is a gather, a batch
@@ -44,6 +48,7 @@ from typing import Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from ..core.datapath import N_QOS
 from ..core.dcqcn import DcqcnConfig
 from .hosts import hold_us_baseline, hold_us_jet
 from ._scan import pick_unroll
@@ -112,6 +117,7 @@ class FabricSweepParams:
     dest: List[np.ndarray]               # 3 x [P, F]: routing after stage k
     recv_onehot: np.ndarray              # [R, F]
     recv_of: np.ndarray                  # [F] int32
+    qos_of: np.ndarray                   # [F] int32: flow's admission class
     prev_onehot: np.ndarray              # [P, F, P]: ingress port of (p, f)
     owner_recv: np.ndarray               # [P] int32: stage-3 port's receiver
     # -- per-point parameters ----------------------------------------------
@@ -123,6 +129,7 @@ class FabricSweepParams:
     ticks: int
     dt_us: float
     ring_len: int
+    cnp_ring: int                        # CNP propagation ring length
     structure_key: str
 
     @classmethod
@@ -144,11 +151,12 @@ class FabricSweepParams:
                     int(s.fabric.sim_time_s * 1e6 / s.fabric.dt_us) != ticks:
                 raise ValueError("grid points must share dt and sim_time")
             if len(s.flows) != F or any(
-                    (a.src, a.dst, a.tag) != (b.src, b.dst, b.tag)
+                    (a.src, a.dst, a.tag, a.qos)
+                    != (b.src, b.dst, b.tag, b.qos)
                     for a, b in zip(s.flows, flows0)):
                 raise ValueError("grid points must share the flow set "
-                                 "(src/dst/tag); offered/burst/start may "
-                                 "vary")
+                                 "(src/dst/tag/qos); offered/burst/start "
+                                 "may vary")
             if any(s.topology.route(f.src, f.dst, fid) != routes[fid]
                    for fid, f in enumerate(s.flows)):
                 raise ValueError("grid points must share routes (same "
@@ -191,6 +199,7 @@ class FabricSweepParams:
         R = len(recv_hosts)
         ridx = {h: i for i, h in enumerate(recv_hosts)}
         recv_of = np.array([ridx[f.dst] for f in flows0], np.int32)
+        qos_of = np.array([int(f.qos) for f in flows0], np.int32)
 
         stage_mask = np.zeros((_STAGES, P), bool)
         for p, st in enumerate(port_stage):
@@ -225,7 +234,7 @@ class FabricSweepParams:
         pv: Dict[str, List] = {k: [] for k in
                                ["gbps", "ecn_en", "can_assert",
                                 "line", "cap", "burst", "start", "cnp_iv_f",
-                                "d_base", "d_strag"]}
+                                "d_base", "d_strag", "cnp_dly"]}
         for name, _ in _RECV_SCALARS + _DCQCN_SCALARS + _SWITCH_SCALARS:
             pv[name] = []
         for s in scens:
@@ -253,6 +262,8 @@ class FabricSweepParams:
                 d_s.append(max(1, int(hold * c.straggler_mult / dt)))
             pv["d_base"].append(d_b)
             pv["d_strag"].append(d_s)
+            pv["cnp_dly"].append(
+                max(0, int(round(s.fabric.cnp_delay_us / dt))))
             line = [s.topology.access_gbps(f.src) for f in s.flows]
             pv["line"].append(line)
             pv["cap"].append([np.inf if f.offered_gbps is None
@@ -265,29 +276,31 @@ class FabricSweepParams:
             dcq = [DcqcnConfig(line_rate_gbps=lr) for lr in line]
             for name, fn in _DCQCN_SCALARS:
                 pv[name].append([fn(d) for d in dcq])
-        pvals = {k: np.asarray(v, np.int32 if k in ("d_base", "d_strag")
+        pvals = {k: np.asarray(v, np.int32
+                               if k in ("d_base", "d_strag", "cnp_dly")
                                else np.float64) for k, v in pv.items()}
         H = int(max(pvals["d_base"].max(), pvals["d_strag"].max())) + 2
+        Hc = int(pvals["cnp_dly"].max()) + 1
 
         h = hashlib.sha1()
-        for arr in (stage_mask, *occ, *dest, recv_onehot, recv_of,
+        for arr in (stage_mask, *occ, *dest, recv_onehot, recv_of, qos_of,
                     prev_onehot, owner_recv):
             h.update(np.ascontiguousarray(arr).tobytes())
-        h.update(repr((F, P, R, ticks, dt, H)).encode())
+        h.update(repr((F, P, R, ticks, dt, H, Hc)).encode())
         return cls(port_keys=port_keys, recv_hosts=recv_hosts,
                    flow_tags=[f.tag for f in flows0],
                    stage_mask=stage_mask, occ=occ, dest=dest,
-                   recv_onehot=recv_onehot, recv_of=recv_of,
+                   recv_onehot=recv_onehot, recv_of=recv_of, qos_of=qos_of,
                    prev_onehot=prev_onehot, owner_recv=owner_recv,
                    pvals=pvals, n_points=G, n_flows=F, n_ports=P, n_recv=R,
-                   ticks=ticks, dt_us=dt, ring_len=H,
+                   ticks=ticks, dt_us=dt, ring_len=H, cnp_ring=Hc,
                    structure_key=h.hexdigest())
 
 
 # --------------------------------------------------------------------------- #
 # The shared per-tick step (numpy [G, ...] and jax vmapped [...])
 # --------------------------------------------------------------------------- #
-def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype):
+def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1):
     """Build ``step(state, t) -> state`` in array namespace ``xp``.
 
     ``st`` holds the static structure arrays (no grid axis), ``p`` the
@@ -306,6 +319,7 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype):
     bpt = f(1e9 / 8.0 * dt * 1e-6)       # bytes per (Gbps * tick)
     fdt = f(dt)
     zero, one, tiny = f(0.0), f(1.0), f(1e-30)
+    half, inf = f(0.5), f(np.inf)
     eps_q = f(1e-9)
     arangeF = xp.arange(st["recv_of"].shape[0], dtype=xp.int32)
     # loop-invariant per-point quantities, computed once outside the scan
@@ -452,13 +466,22 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype):
         arr_b = fbm[..., 0, :]
         arr_m = fbm[..., 1, :]
 
-        # ---- 3. receivers advance one tick -------------------------------- #
+        # ---- 3. receivers advance one tick (HostDatapath, stacked) -------- #
         arr_rb = st["recv_onehot"] * arr_b[..., None, :]
-        arr_tot = arr_rb.sum(-1)
-        space_r = xp.maximum(p["rnic_buf"] - s["rnic_q"], zero)
-        accepted = xp.minimum(arr_tot, space_r)
+        # QoS-classed arrivals [.., Q, R] (admission class x receiver)
+        arr_cr = (st["cls_recv"] * arr_b[..., None, None, :]).sum(-1)
+        arr_tot = arr_cr.sum(-2)
+        # admission: RNIC buffer space granted in QoS-priority order
+        space_r = xp.maximum(p["rnic_buf"] - s["qos_q"].sum(-2), zero)
+        acc = []
+        for q_i in range(N_QOS):
+            a = xp.minimum(arr_cr[..., q_i, :], space_r)
+            space_r = space_r - a
+            acc.append(a)
+        acc_cr = xp.stack(acc, -2)
+        accepted = sum(acc)
         s["rnic_drop"] = s["rnic_drop"] + (arr_tot - accepted)
-        s["rnic_q"] = s["rnic_q"] + accepted
+        s["qos_q"] = s["qos_q"] + acc_cr
 
         ws = p["qp_bytes"] + s["resident"]
         miss = xp.clip((ws - p["ddio"]) * inv_knee, zero, one)
@@ -467,20 +490,39 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype):
                            xp.minimum(p["pcie"],
                                       avail_dram / (2.0 * miss + tiny)),
                            p["pcie"])
-        ddio_drained = xp.minimum(s["rnic_q"], ddio_bw * bpt)
+        # drain budget granted in QoS-priority order; under Jet pool
+        # pressure (< cache_safe free) the LOW class spills to DRAM (§5)
+        budget = xp.where(jet, jet_cap, ddio_bw * bpt)
         pool_free = xp.maximum(zero, p["pool"] - s["resident"])
-        jet_drained = xp.minimum(xp.minimum(s["rnic_q"], jet_cap),
-                                 pool_free)
-        drained = xp.where(jet, jet_drained, ddio_drained)
+        spill = jet & (pool_free / p["pool"] < p["safe"])
+        pf = xp.where(jet, pool_free, inf)
+        drained = pool_drained = fallback = zero
+        new_q = []
+        for q_i in range(N_QOS):
+            qq = s["qos_q"][..., q_i, :]
+            take = xp.minimum(xp.minimum(qq, budget), pf)
+            if q_i == N_QOS - 1:        # LOW spills instead of waiting
+                take = xp.where(spill, xp.minimum(qq, budget), take)
+                spilled = xp.where(spill, take, zero)
+            else:
+                spilled = zero
+            pf = pf - (take - spilled)
+            budget = budget - take
+            new_q.append(qq - take)
+            drained = drained + take
+            pool_drained = pool_drained + (take - spilled)
+            fallback = fallback + spilled
+        s["qos_q"] = xp.stack(new_q, -2)
         s["nic_dram"] = s["nic_dram"] + \
-            xp.where(jet, zero, ddio_drained * 2.0 * miss)
-        s["rnic_q"] = s["rnic_q"] - drained
-        strag_part = drained * strag_share
-        parts = xp.stack([drained * (1.0 - strag_share), strag_part], -2)
+            xp.where(jet, fallback, drained * 2.0 * miss)
+        s["mem_fb"] = s["mem_fb"] + fallback
+        strag_part = pool_drained * strag_share
+        parts = xp.stack([pool_drained * (1.0 - strag_share), strag_part],
+                         -2)
         # ring layout [H, 2, R]: the write is a contiguous leading-axis
         # slice update, which XLA aliases in place inside the scan carry
         s["ring"] = ring_set(s["ring"], t % H, parts)
-        s["resident"] = s["resident"] + drained
+        s["resident"] = s["resident"] + pool_drained
         s["strag_res"] = s["strag_res"] + strag_part
         s["drained"] = s["drained"] + drained
 
@@ -535,7 +577,7 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype):
                                     xp.where(jet, s["resident"], zero))
 
         # receiver congestion signalling
-        q_frac = s["rnic_q"] / p["rnic_buf"]
+        q_frac = s["qos_q"].sum(-2) / p["rnic_buf"]
         s["pfc"] = rx_pfc_en & xp.where(s["pfc"], q_frac >= p["xon"],
                                         q_frac > p["xoff"])
         s["pfc_us"] = s["pfc_us"] + xp.where(s["pfc"], fdt, zero)
@@ -546,9 +588,11 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype):
         s["cnps"] = s["cnps"] + wm_fire
 
         # ---- 4. feedback routes back to the senders ----------------------- #
-        share = xp.where(arr_tot > zero,
-                         accepted / xp.maximum(arr_tot, tiny), zero)
-        deliv = arr_b * share[..., st["recv_of"]]
+        # per-class acceptance share: a flow recovers the share its own
+        # admission class received (matches HostDatapath.admit_link)
+        share_cr = xp.where(arr_cr > zero,
+                            acc_cr / xp.maximum(arr_cr, tiny), zero)
+        deliv = arr_b * share_cr[..., st["cls_of"], st["recv_of"]]
         s["deliv_lo"] = s["deliv_lo"] + deliv
         # RNIC tail drops are retransmitted too (fluid RC)
         s["inj_lo"] = s["inj_lo"] - (arr_b - deliv)
@@ -564,15 +608,28 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype):
         heavy_new = xp.argmax(arr_rb, -1).astype(xp.int32)
         s["heavy"] = xp.where(has_arr, heavy_new, s["heavy"])
         is_heavy = arangeF == s["heavy"][..., st["recv_of"]]
-        s = cut(s, is_heavy & esc_fire[..., st["recv_of"]])
-        s = cut(s, is_heavy & wm_fire[..., st["recv_of"]])
+        f_esc = is_heavy & esc_fire[..., st["recv_of"]]
+        f_wm = is_heavy & wm_fire[..., st["recv_of"]]
         # switch ECN marks -> per-flow CNPs, paced per DCQCN NP
         s["backlog"] = s["backlog"] + arr_m
         pace_tus = s["pace_tus"] + fdt
         pace_fire = (s["backlog"] > zero) & (pace_tus >= p["cnp_iv_f"])
         s["pace_tus"] = xp.where(pace_fire, zero, pace_tus)
         s["backlog"] = xp.where(pace_fire, zero, s["backlog"])
-        s = cut(s, pace_fire)
+        # CNP propagation ring [Hc, 3, F]: notifications generated this
+        # tick (slot t % Hc) cut their sender cnp_delay ticks later (read
+        # slot (t - delay) % Hc; Hc > delay, so for t < delay the read
+        # lands on a slot not yet written, which still holds zero)
+        fires = xp.stack([xp.where(f_esc, one, zero),
+                          xp.where(f_wm, one, zero),
+                          xp.where(pace_fire, one, zero)], -2)
+        s["cring"] = ring_set(s["cring"], t % Hc, fires)
+        cidx = (t - p["cnp_dly"]) % Hc
+        due = xp.take_along_axis(s["cring"], cidx[..., None, None, None],
+                                 -3)[..., 0, :, :]
+        s = cut(s, due[..., 0, :] > half)
+        s = cut(s, due[..., 1, :] > half)
+        s = cut(s, due[..., 2, :] > half)
 
         # ---- 5. PFC pause propagation ------------------------------------- #
         q0 = s["qm"][..., 0, :, :]
@@ -597,6 +654,7 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype):
 def _init_state(xp, lead, fsp: FabricSweepParams, p, dtype):
     """Zero/steady-state carry; ``lead`` is () under vmap, (G,) for numpy."""
     F, P, R, H = (fsp.n_flows, fsp.n_ports, fsp.n_recv, fsp.ring_len)
+    Hc = fsp.cnp_ring
     z = lambda *sh: xp.zeros(lead + sh, dtype)       # noqa: E731
     s = {
         # flows
@@ -609,16 +667,19 @@ def _init_state(xp, lead, fsp: FabricSweepParams, p, dtype):
         "backlog": z(F),
         # immediate first paced CNP, as in the scalar driver
         "pace_tus": xp.full(lead + (F,), np.inf, dtype),
+        # CNP propagation ring (slot-major, 3 notification sources)
+        "cring": z(Hc, 3, F),
         # ports (axis -3: 0 = queued bytes, 1 = ECN-marked subset)
         "qm": z(2, P, F),
         "asserted": xp.zeros(lead + (P,), bool),
         "paused": xp.zeros(lead + (P,), bool),
         "pause_us": z(P),
         "ever_paused": xp.zeros(lead + (P,), bool),
-        # receivers
-        "rnic_q": z(R), "resident": z(R), "strag_res": z(R),
+        # receivers ("qos_q" = HostDatapath's per-class RNIC buffer)
+        "qos_q": z(N_QOS, R), "resident": z(R), "strag_res": z(R),
         "esc_debt": z(R), "repl_debt": z(R), "repl_mem": z(R),
         "rnic_drop": z(R), "drained": z(R), "nic_dram": z(R),
+        "mem_fb": z(R),
         "esc_dram": z(R), "miss_sum": z(R), "pool_sum": z(R),
         "pool_peak": z(R), "cnps": z(R), "ecns": z(R), "replaces": z(R),
         "copies": z(R), "pfc_us": z(R), "ecn_tus": z(R),
@@ -637,7 +698,12 @@ def _static(fsp: FabricSweepParams, xp, dtype):
     owner = fsp.owner_recv
     sel = np.zeros((2, 2, 1, 1))
     sel[0, 0], sel[1, 1] = 1.0, 1.0
+    cls_onehot = np.zeros((N_QOS, F))
+    cls_onehot[fsp.qos_of, np.arange(F)] = 1.0
     return {
+        "cls_of": xp.asarray(fsp.qos_of),
+        "cls_recv": xp.asarray(cls_onehot[:, None, :]
+                               * fsp.recv_onehot[None, :, :], dtype),
         "stage": xp.asarray(fsp.stage_mask),
         "occ": [xp.asarray(a, dtype) for a in fsp.occ],
         "dest": [xp.asarray(a, dtype) for a in fsp.dest],
@@ -684,8 +750,10 @@ def _results(s, fsp: FabricSweepParams) -> Dict[str, np.ndarray]:
         "recv_goodput_gbps": np.asarray(s["drained"], np.float64)
         * per_gbps,
         "recv_cnp_count": np.asarray(s["cnps"], np.float64),
+        "recv_escape_ecn": np.asarray(s["ecns"], np.float64),
         "recv_pfc_pause_us": np.asarray(s["pfc_us"], np.float64),
         "recv_rnic_dropped_bytes": np.asarray(s["rnic_drop"], np.float64),
+        "recv_mem_fallback_bytes": np.asarray(s["mem_fb"], np.float64),
     }
 
 
@@ -716,7 +784,8 @@ def _run_numpy(fsp: FabricSweepParams, dtype=np.float64):
         ring[..., idx, :, :] = v
         return ring
 
-    step = _make_step(np, ring_set, st, p, fsp.dt_us, fsp.ring_len, dtype)
+    step = _make_step(np, ring_set, st, p, fsp.dt_us, fsp.ring_len, dtype,
+                      fsp.cnp_ring)
     s = _init_state(np, (fsp.n_points,), fsp, p, dtype)
     for t in range(fsp.ticks):
         s = step(s, t)
@@ -729,7 +798,7 @@ _PROGRAMS_MAX = 8          # bound compiled-executable memory, as sweep.py
 
 def _jax_program(fsp: FabricSweepParams, unroll: int):
     key = (fsp.structure_key, fsp.n_points, fsp.ticks, fsp.ring_len,
-           fsp.dt_us, unroll)
+           fsp.cnp_ring, fsp.dt_us, unroll)
     fn = _PROGRAMS.get(key)
     if fn is not None:
         return fn
@@ -738,13 +807,13 @@ def _jax_program(fsp: FabricSweepParams, unroll: int):
 
     dtype = jnp.float32
     st = _static(fsp, jnp, dtype)
-    ticks, H = fsp.ticks, fsp.ring_len
+    ticks, H, Hc = fsp.ticks, fsp.ring_len, fsp.cnp_ring
 
     def ring_set(ring, idx, v):
         return ring.at[..., idx, :, :].set(v)
 
     def one_point(s0, p):
-        step = _make_step(jnp, ring_set, st, p, fsp.dt_us, H, dtype)
+        step = _make_step(jnp, ring_set, st, p, fsp.dt_us, H, dtype, Hc)
 
         def body(s, t):
             return step(s, t), None

@@ -10,6 +10,14 @@ The mapping (paper §3.2 workflow -> serving):
   * slow/stuck sequences (consumer stalls) are stragglers: the escape
     ladder first flags them, then evicts (copy-out) their lane, and under
     danger pressure rejects new admissions (ECN).
+
+The admission machinery behind ``JetService`` is the shared
+:mod:`repro.core.datapath` ``AdmissionQueues`` — the same QoS policy the
+fluid simulator and the fabric engines advance — so the engine can be
+driven *by a fabric*: route the receiving host's congestion state (PFC
+pause, pool danger) into :meth:`ServingEngine.set_network_pressure` and
+switch backpressure throttles decode-lane admission
+(``examples/serving_on_fabric.py`` demonstrates the loop).
 """
 from __future__ import annotations
 
@@ -56,7 +64,8 @@ class ServingEngine:
         self.params = params
         self.ctx = ctx
         self.jet = JetService(jet_cfg or JetConfig())
-        self.jet.register(0, QoS.NORMAL)
+        for q in QoS:        # one Jet app per service class (paper §3.2)
+            self.jet.register(int(q), q)
         self.compute_dtype = compute_dtype
         self.state = model_api.init_decode_state(
             cfg, ectx.max_lanes, ectx.max_len, compute_dtype)
@@ -78,12 +87,25 @@ class ServingEngine:
     def submit(self, req: Request) -> None:
         req.generated = []
         req.xfer_id = self.jet.request(
-            0, len(req.prompt) * self.ecfg.bytes_per_token, self.now)
+            int(req.qos), len(req.prompt) * self.ecfg.bytes_per_token,
+            self.now)
         self.waiting.append(req)
 
     def _free_lanes(self) -> List[int]:
         return [i for i in range(self.ecfg.max_lanes)
                 if i not in self.active]
+
+    # ---- network feedback (fabric backpressure -> admission) -------------- #
+    def set_network_pressure(self, paused: bool) -> None:
+        """Gate decode-lane admission on network congestion state: while
+        asserted (e.g. the host's PFC pause or pool-danger signal from a
+        fabric co-simulation), no new transfers are admitted to the pool;
+        already-admitted lanes keep decoding."""
+        self.jet.set_backpressure(paused)
+
+    @property
+    def network_paused(self) -> bool:
+        return self.jet.network_paused
 
     # ---- admission + prefill (paper step 3/4) ----------------------------- #
     def _admit(self) -> None:

@@ -1,0 +1,206 @@
+"""The shared host receive datapath (`repro.core.datapath`): extraction
+equivalence against pre-refactor `run_sim`, the QoS admission machinery,
+and the JetService facade under network backpressure."""
+import pytest
+
+from repro.core import simulator as S
+from repro.core.datapath import (Admit, AdmissionQueues, HostDatapath,
+                                 N_QOS, QoS, expected_footprint)
+from repro.core.jet import JetConfig, JetService
+
+
+# --------------------------------------------------------------------------- #
+# datapath-extraction equivalence: run_sim numerics preserved
+# --------------------------------------------------------------------------- #
+# Golden values recorded from the pre-refactor ReceiverHost (its former
+# monolithic tick body, commit aa60dff) on both calibrated testbeds.
+# The extraction is arithmetic-preserving — per-class loops with all
+# traffic in the NORMAL class reduce to the original scalar ops — so the
+# comparison is exact (== on floats), not approximate.
+_GOLD = {
+    ("100g", "ddio"): dict(goodput_gbps=116.68822835927475,
+                           avg_latency_us=635.5263277419357,
+                           cnp_count=15.0,
+                           ddio_miss_rate=0.9444188874605015,
+                           nic_dram_gbps=221.05323616147538,
+                           pfc_pause_us=0.0, completed_messages=1088),
+    ("100g", "jet"): dict(goodput_gbps=200.0,
+                          avg_latency_us=396.0716515555555,
+                          cnp_count=0.0, ddio_miss_rate=0.0,
+                          nic_dram_gbps=0.0, pfc_pause_us=0.0,
+                          completed_messages=1888),
+    ("25g", "ddio"): dict(goodput_gbps=28.0,
+                          avg_latency_us=2787.78036,
+                          cnp_count=0.0, ddio_miss_rate=1.0,
+                          nic_dram_gbps=56.0, pfc_pause_us=8598.0,
+                          completed_messages=256),
+    ("25g", "jet"): dict(goodput_gbps=50.0,
+                         avg_latency_us=1402.669942153846,
+                         cnp_count=0.0, ddio_miss_rate=0.0,
+                         nic_dram_gbps=0.0, pfc_pause_us=0.0,
+                         completed_messages=448),
+}
+
+
+@pytest.mark.parametrize("bed,mode", sorted(_GOLD))
+def test_extraction_bit_equal_to_pre_refactor(bed, mode):
+    mk = S.testbed_100g if bed == "100g" else S.testbed_25g
+    r = S.run_sim(mk(mode, msg_bytes=256 << 10, sim_time_s=0.02))
+    for key, want in _GOLD[(bed, mode)].items():
+        assert getattr(r, key) == want, (bed, mode, key)
+
+
+def test_extraction_bit_equal_escape_pressure_corner():
+    """The full escape ladder (replace + ECN rungs) under a shrunken pool
+    must reproduce the pre-refactor trajectory exactly."""
+    r = S.run_sim(S.testbed_100g("jet", msg_bytes=256 << 10,
+                                 sim_time_s=0.05, jet_pool_bytes=2 << 20,
+                                 straggler_frac=0.3,
+                                 straggler_mult=100.0))
+    assert r.goodput_gbps == 1.1592876095847413
+    assert r.escape_replaces == 5908
+    assert r.escape_ecn == 102
+    assert r.cnp_count == 103.0
+    assert r.pool_peak_bytes == 2096875
+
+
+# --------------------------------------------------------------------------- #
+# AdmissionQueues: the shared QoS pump
+# --------------------------------------------------------------------------- #
+def test_pump_priority_and_fifo_order():
+    q = AdmissionQueues()
+    q.push("n0", QoS.NORMAL)
+    q.push("h0", QoS.HIGH)
+    q.push("l0", QoS.LOW)
+    q.push("h1", QoS.HIGH)
+    assert q.pump(lambda item: Admit.OK) == ["h0", "h1", "n0", "l0"]
+    assert len(q) == 0
+
+
+def test_pump_defer_blocks_only_its_class():
+    """A deferred NORMAL head must not stop LOW from being probed (a
+    small LOW transfer may fit where a big NORMAL one did not)."""
+    q = AdmissionQueues()
+    q.push("big_n", QoS.NORMAL)
+    q.push("small_l", QoS.LOW)
+    out = q.pump(lambda item: Admit.DEFER if item == "big_n" else Admit.OK)
+    assert out == ["small_l"]
+    assert q.depth(QoS.NORMAL) == 1        # still queued, not dropped
+
+
+def test_pump_low_falls_back_instead_of_waiting():
+    q = AdmissionQueues()
+    q.push("l0", QoS.LOW)
+    q.push("l1", QoS.LOW)
+    spilled = []
+    out = q.pump(lambda item: Admit.DEFER, fallback=spilled.append)
+    assert out == [] and spilled == ["l0", "l1"]
+    assert len(q) == 0
+
+
+def test_pump_stop_ends_everything():
+    q = AdmissionQueues()
+    q.push("h0", QoS.HIGH)
+    q.push("l0", QoS.LOW)
+    assert q.pump(lambda item: Admit.STOP) == []
+    assert len(q) == 2
+
+
+def test_expected_footprint_capped_by_size():
+    assert expected_footprint(1000, 200.0) <= 1000
+    assert expected_footprint(1 << 30, 1e-9) <= 1 << 30
+
+
+# --------------------------------------------------------------------------- #
+# HostDatapath: QoS-classed fluid tick
+# --------------------------------------------------------------------------- #
+def test_admit_link_priority_space_allocation():
+    c = S.testbed_100g("jet", rnic_buffer_bytes=1000)
+    dp = HostDatapath(c, sim_ticks=10)
+    total, per, offered = dp.admit_link([600.0, 600.0, 600.0])
+    assert per == [600.0, 400.0, 0.0]      # HIGH first, LOW starved
+    assert total == 1000.0
+    assert offered == 1800.0
+    assert dp.rnic_q == 1000.0
+
+
+def test_low_qos_spills_to_dram_under_pool_pressure():
+    c = S.testbed_100g("jet", jet_pool_bytes=1 << 20)
+    dp = HostDatapath(c, sim_ticks=100)
+    dp.resident = 0.9 * dp.pool_cap        # past the cache_safe watermark
+    dp.admit_link([0.0, 0.0, 50_000.0])
+    fb = dp.step(0, c.cpu_membw_gbps)
+    assert fb.fallback == pytest.approx(50_000.0)
+    assert dp.mem_fallback_bytes == pytest.approx(50_000.0)
+    # spilled bytes are goodput (they reached DRAM buffers), but they
+    # never took pool residency
+    assert fb.drained == pytest.approx(50_000.0)
+    assert fb.pool_drained == 0.0
+
+
+def test_normal_qos_takes_pool_residency_when_safe():
+    c = S.testbed_100g("jet", jet_pool_bytes=1 << 20)
+    dp = HostDatapath(c, sim_ticks=100)
+    dp.admit_link(50_000.0)                # plain float = NORMAL class
+    fb = dp.step(0, c.cpu_membw_gbps)
+    assert fb.pool_drained == pytest.approx(50_000.0)
+    assert fb.fallback == 0.0
+    assert dp.resident == pytest.approx(50_000.0)
+
+
+def test_datapath_horizon_guard():
+    c = S.testbed_100g("jet")
+    dp = HostDatapath(c, sim_ticks=1, dt_us=1e6)   # horizon of 2 ticks
+    dp.step(0, 0.0)
+    with pytest.raises(RuntimeError):
+        dp.step(dp.horizon, 0.0)
+
+
+# --------------------------------------------------------------------------- #
+# JetService QoS admission under network backpressure (PFC pause)
+# --------------------------------------------------------------------------- #
+def _jet(**kw):
+    jet = JetService(JetConfig(**kw))
+    for q in QoS:
+        jet.register(int(q), q)
+    return jet
+
+
+def test_jet_admission_stalls_under_pfc_pause():
+    jet = _jet(pool_bytes=4 << 20)
+    ids = [jet.request(int(q), 64 << 10, 0.0) for q in QoS]
+    jet.set_backpressure(True)             # receiver asserted PFC pause
+    assert jet.pump(0.0) == []
+    assert jet.queue_depth() == 3          # nothing admitted, nothing lost
+    assert jet.stats()["network_paused"]
+    # LOW must NOT fall back to DRAM while paused: arrivals are stalled
+    # on the wire, there is nothing to buffer yet
+    assert jet.memory_fallbacks == 0
+    jet.set_backpressure(False)            # xon: admission resumes
+    admitted = jet.pump(1.0)
+    assert [t.xfer_id for t in admitted] == ids   # priority order intact
+    assert jet.queue_depth() == 0
+
+
+def test_jet_qos_priority_and_low_fallback_under_pool_pressure():
+    jet = _jet(pool_bytes=256 << 10, expected_timespan_us=1e5)
+    hi = jet.request(int(QoS.HIGH), 128 << 10, 0.0)
+    jet.request(int(QoS.NORMAL), 512 << 10, 0.0)    # too big for the pool
+    jet.request(int(QoS.LOW), 512 << 10, 0.0)       # too big -> DRAM (§5)
+    admitted = jet.pump(0.0)
+    assert [t.xfer_id for t in admitted] == [hi]
+    assert jet.memory_fallbacks == 1       # LOW spilled, NORMAL waits
+    assert jet.queue_depth(QoS.NORMAL) == 1
+    assert jet.queue_depth(QoS.LOW) == 0
+    st = jet.stats()
+    assert st["queued_by_qos"]["NORMAL"] == 1
+
+
+def test_jet_stats_surface_queue_depths():
+    jet = _jet()
+    jet.request(int(QoS.HIGH), 64 << 10, 0.0)
+    jet.request(int(QoS.LOW), 64 << 10, 0.0)
+    st = jet.stats()
+    assert st["queued"] == 2
+    assert st["queued_by_qos"] == {"HIGH": 1, "NORMAL": 0, "LOW": 1}
+    assert N_QOS == 3

@@ -77,6 +77,26 @@ def test_engine_admission_respects_lanes():
     assert len(eng.done) == 3
 
 
+def test_engine_network_backpressure_gates_admission():
+    """Fabric congestion (PFC pause / pool danger) routed into the engine
+    must stall decode-lane admission without losing requests."""
+    cfg, params, eng = _engine(lanes=2)
+    rng = np.random.default_rng(3)
+    for i in range(3):
+        eng.submit(Request(i, rng.integers(
+            2, cfg.vocab_size, size=4).astype(np.int32), max_new_tokens=4))
+    eng.set_network_pressure(True)
+    eng.step()
+    eng.step()
+    assert len(eng.active) == 0            # gate shut: nothing admitted
+    assert len(eng.waiting) == 3
+    assert eng.network_paused
+    eng.set_network_pressure(False)        # xon: backlog clears
+    eng.run_until_done(max_ticks=60)
+    assert len(eng.done) == 3
+    assert all(len(r.generated) == 4 for r in eng.done.values())
+
+
 def test_paged_kv_append_release_cycle():
     cfg = PagedKVConfig(num_pages=8, page_size=4, num_kv_heads=2,
                         head_dim=8, max_pages_per_seq=3,
