@@ -93,7 +93,7 @@ def main() -> None:
         # -- fabric sub-ticks: senders -> switch port -> receiver ------- #
         for _ in range(FABRIC_US_PER_ENGINE_TICK):
             port.paused = rx.pfc_paused
-            batch = [(fid, b, 0.0, None)
+            batch = [(fid, b, 0.0, None, 0)
                      for fid, s in enumerate(senders)
                      if (b := s.offer(dt)) > 0.0]
             if batch:

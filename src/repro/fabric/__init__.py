@@ -1,25 +1,36 @@
 """Multi-host RDCA fabric: Clos topologies, switches, hosts, driver, sweeps.
 
 - topology:  leaf–spine Clos graphs + presets (jet_testbed, incast_fabric)
-- switch:    output-queued switch (per-port ECN marking, PFC propagation)
+- switch:    output-queued switch with per-traffic-class queues (one
+             FIFO + buffer partition + ECN knee + PFC xoff/xon pair per
+             TC; pause targets are `(ingress link, tc)` pairs, 802.1Qbb
+             style; `SwitchConfig.per_tc=False` restores the legacy
+             whole-link pause for comparison baselines)
 - hosts:     step-able ReceiverHost (wrapping the shared
              `repro.core.datapath.HostDatapath` — the same QoS admission/
              escape/recycle machine behind run_sim and JetService) and
              DCQCN SenderHost
 - fabric:    scalar multi-host driver -> per-host SimResults + fabric
-             metrics (victim goodput, pause fan-out, incast FCT); flows
-             carry a QoS class into receiver admission, escape-ladder
-             ECN comes back as CNPs, `cnp_delay_us` models NP->RP
-             propagation
+             metrics (victim goodput, pause fan-out + per-TC pause
+             breakdown, incast FCT); `Flow.qos` selects both the
+             receiver admission class and the switch queue along the
+             route, escape-ladder ECN comes back as CNPs, and NP->RP
+             CNP propagation delay is per flow (`Flow.cnp_delay_us`
+             falling back to `FabricConfig.cnp_delay_us`); burst-train
+             sources via `Flow.on_off_us`
 - scenarios: incast-N / all-to-all HPC / storage OLTP-OLAP-backup /
-             mixed Jet+DDIO fleet bundles + fabric_grid /
-             mixed_fleet_grid for building scenario grids
+             mixed Jet+DDIO fleet / QoS-mixed storage (LOW bulk incast
+             + HIGH on-off OLTP + NORMAL OLAP, per-TC vs per-link
+             pause) bundles + fabric_grid / mixed_fleet_grid /
+             qos_mixed_grid for building scenario grids
 - sweep:     vectorized receiver-datapath grid (jax.vmap + lax.scan over
              stacked single-host fluid state; numpy reference backend)
 - vector:    vectorized *fabric* grid — the whole multi-host tick body
              (flows x ports x receivers, with the HostDatapath QoS
-             classes as a stacked [G, Q, R] block and a CNP-delay ring)
-             as one vmap+scan program
+             classes as a stacked [G, Q, R] block and a per-flow
+             CNP-delay ring) as one vmap+scan program; switch state is
+             classed too ([G, Q, P] occupancy/assert/pause via the
+             flow->TC one-hot, priority-unrolled drain grants)
 - _scan:     shared lax.scan compile-cost machinery (unroll autotune,
              donated carries)
 
@@ -51,13 +62,29 @@ Choosing an engine
     Matches the scalar driver to float32 round-off (float64 exact via
     ``backend="numpy"``) and turns minutes-per-grid into seconds.  Grid
     points must share topology *structure* (same flows/routes/ticks).
+
+Per-TC queue support across engines
+-----------------------------------
+Every engine implements the classed switch identically (the test suite
+in ``tests/test_pfc_priority.py`` holds them together): per-TC FIFOs
+with their own buffer partition, ECN knee and PFC xoff/xon watermarks,
+strict-priority drain, and ``(ingress link, tc)`` pause targeting.
+``Flow.qos`` selects the class end to end — switch queue on every hop
+*and* receiver RNIC admission class.  The scalar driver additionally
+reports the per-``(link, tc)`` pause breakdown
+(``FabricResult.pause_tc_us``); the vector engines aggregate it to a
+per-class total (``pause_tc_total_us``, [G, Q]).  ``per_tc`` and the
+``tc_*`` watermark overrides are plain per-point parameters, so one
+sweep grid can compare 802.1Qbb pause against the legacy whole-link
+pause (``SwitchConfig.per_tc=False``, which is bit-equal to the
+pre-refactor switch for single-class traffic in every engine).
 """
 from .fabric import (FabricConfig, FabricResult, Flow, burst_done_bytes,
                      run_fabric)
 from .hosts import HostFeedback, ReceiverHost, SenderHost
 from .scenarios import (Scenario, all_to_all, fabric_grid, incast,
-                        mixed_fleet, mixed_fleet_grid, single_pair,
-                        storage_mix)
+                        mixed_fleet, mixed_fleet_grid, qos_mixed_grid,
+                        qos_mixed_storage, single_pair, storage_mix)
 from .switch import OutputPort, Switch, SwitchConfig
 from .sweep import SweepParams, grid_configs, run_sweep
 from .topology import Link, Topology, clos, incast_fabric, jet_testbed
@@ -69,6 +96,7 @@ __all__ = [
     "SenderHost", "Switch", "SwitchConfig", "SweepParams", "Topology",
     "all_to_all", "burst_done_bytes", "clos", "fabric_grid",
     "grid_configs", "incast", "incast_fabric", "jet_testbed",
-    "mixed_fleet", "mixed_fleet_grid", "run_fabric",
-    "run_fabric_sweep", "run_sweep", "single_pair", "storage_mix",
+    "mixed_fleet", "mixed_fleet_grid", "qos_mixed_grid",
+    "qos_mixed_storage", "run_fabric", "run_fabric_sweep", "run_sweep",
+    "single_pair", "storage_mix",
 ]

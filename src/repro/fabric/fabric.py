@@ -11,8 +11,13 @@ Per 1 us fluid tick (same timebase as the single-host simulator):
    bytes; its CNPs (RNIC watermark / Jet escape ECN) and the ECN marks the
    switches stamped on departing bytes are converted into per-flow CNPs
    that throttle exactly the offending senders;
-4. switch ports refresh PFC xoff/xon state; paused ingress links stall all
-   flows riding them next tick (head-of-line blocking).
+4. switch ports refresh per-TC PFC xoff/xon state; a paused
+   ``(ingress link, tc)`` pair stalls that class's flows on that link
+   next tick.  With ``SwitchConfig.per_tc`` (the default) pause is
+   per-priority, so a congested class no longer head-of-line-blocks the
+   other classes sharing the link; with ``per_tc=False`` every flow
+   rides TC 0 and the legacy whole-link pause (congestion spreading,
+   §2.1) is reproduced exactly.
 
 Outputs one :class:`~repro.core.simulator.SimResult` per receiver plus
 fabric-level metrics: per-flow goodput, victim-flow goodput, pause-frame
@@ -31,15 +36,15 @@ sequential semantics.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
+import heapq
 import math
-from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from ..core.datapath import N_QOS, QoS
 from ..core.simulator import SimConfig, SimResult, testbed_100g
 from .hosts import ReceiverHost, SenderHost
-from .switch import OutputPort, Switch, SwitchConfig
+from .switch import OutputPort, PauseKey, Switch, SwitchConfig
 from .topology import LinkKey, Topology
 
 
@@ -53,6 +58,14 @@ class Flow:
     start_us: float = 0.0
     tag: str = ""                            # e.g. "incast" | "victim"
     qos: QoS = QoS.NORMAL                    # receiver admission class (§3.2)
+    #                                          + switch traffic class (per-TC
+    #                                          queues, SwitchConfig.per_tc)
+    # burst-train source: (on_us, off_us) duty cycle — the flow offers
+    # bytes only during the on-phase (OLTP client trains); None = always on
+    on_off_us: Optional[Tuple[float, float]] = None
+    # per-flow NP->RP CNP propagation delay override; None falls back to
+    # FabricConfig.cnp_delay_us
+    cnp_delay_us: Optional[float] = None
 
 
 def burst_done_bytes(burst_bytes: float) -> float:
@@ -94,11 +107,16 @@ class FabricResult:
     incast_completion_us: float              # max over tag=="incast" flows
     victim_goodput_gbps: float               # mean over tag=="victim" flows;
     #                                          0.0 when has_victim is False
-    pause_link_us: Dict[LinkKey, float]
+    pause_link_us: Dict[LinkKey, float]      # link paused in >=1 TC
     pause_fanout: int                        # distinct links ever paused
     ecn_marked_bytes: float
     switch_dropped_bytes: float
     has_victim: bool = False                 # any tag=="victim" flow present
+    # per-priority pause breakdown: (link, tc) -> paused microseconds.
+    # With per-TC queues a pause stalls one class on one ingress link;
+    # summing over links per tc gives the class-level pause budget.
+    pause_tc_us: Dict[PauseKey, float] = \
+        dataclasses.field(default_factory=dict)
 
     def has_tag(self, tag: str) -> bool:
         return any(t == tag for t in self.flow_tags.values())
@@ -132,7 +150,7 @@ def run_fabric(topo: Topology, flows: List[Flow],
         senders[fid] = SenderHost(
             line_rate_gbps=topo.access_gbps(f.src),
             offered_gbps=f.offered_gbps, burst_bytes=f.burst_bytes,
-            start_us=f.start_us)
+            start_us=f.start_us, on_off_us=f.on_off_us)
 
     recv_hosts = sorted({f.dst for f in flows})
     receivers: Dict[str, ReceiverHost] = {
@@ -152,14 +170,26 @@ def run_fabric(topo: Topology, flows: List[Flow],
         out = [l for l in topo.links.values() if l.src == name]
         switches[name] = Switch(name, out, fcfg.switch)
 
+    # switch traffic class of each flow: the QoS class selects the
+    # per-TC queue along the route; legacy per-link mode collapses
+    # everything onto TC 0 (one queue, one watermark — the pre-per-TC
+    # pause behaviour)
+    tc_of = [int(f.qos) if fcfg.switch.per_tc else 0 for f in flows]
+
     # -- per-flow CNP pacing at the receiver NP (DCQCN) ----------------------
     cnp_accum_us = {fid: math.inf for fid in senders}   # immediate first CNP
     marked_backlog = {fid: 0.0 for fid in senders}
     # CNP propagation: a notification generated at tick t cuts its sender
-    # at t + cnp_delay ticks (FIFO — the delay is constant, so the deque
-    # stays sorted by due tick); 0 delay preserves same-tick delivery
-    cnp_delay_ticks = max(0, int(round(fcfg.cnp_delay_us / dt)))
-    pending_cnps: Deque[Tuple[int, int]] = collections.deque()
+    # at t + delay ticks; the delay is per flow (Flow.cnp_delay_us
+    # overriding FabricConfig.cnp_delay_us), so pending notifications
+    # live in a min-heap on due tick (insertion order breaks ties)
+    cnp_delay_ticks = {
+        fid: max(0, int(round(
+            (f.cnp_delay_us if f.cnp_delay_us is not None
+             else fcfg.cnp_delay_us) / dt)))
+        for fid, f in enumerate(flows)}
+    pending_cnps: List[Tuple[int, int, int]] = []       # (due, seq, fid)
+    cnp_seq = 0
     flows_by_dst: Dict[str, List[int]] = {}
     for fid, f in enumerate(flows):
         flows_by_dst.setdefault(f.dst, []).append(fid)
@@ -171,11 +201,14 @@ def run_fabric(topo: Topology, flows: List[Flow],
     delivered = {fid: 0.0 for fid in senders}
     completion = {fid: math.inf for fid in senders}
     pause_link_us: Dict[LinkKey, float] = {}
-    paused_links: Set[LinkKey] = set()
+    pause_tc_us: Dict[PauseKey, float] = {}
+    # (ingress link -> paused TC set) as of the previous tick's PFC pass
+    paused_by_link: Dict[LinkKey, frozenset] = {}
+    _no_tcs: frozenset = frozenset()
 
     hosts_set = set(topo.hosts)
     Batches = Dict[Tuple[str, str], List[Tuple[int, float, float,
-                                               Optional[LinkKey]]]]
+                                               Optional[LinkKey], int]]]
 
     def flush(batches: Batches) -> None:
         """Enqueue one stage's accumulated arrivals, one batch per
@@ -192,10 +225,12 @@ def run_fabric(topo: Topology, flows: List[Flow],
         for owner, port in ports:
             dst = port.link.dst
             to_host = dst in hosts_set
-            port.paused = (port.link.key in paused_links or
-                           (to_host and dst in receivers and
-                            receivers[dst].cfg.pfc_enabled and
-                            receivers[dst].pfc_paused))
+            # switch-side PFC is per (link, tc); the receiver-side RNIC
+            # gate pauses its whole access link (host PFC is not classed)
+            port.paused_tcs = paused_by_link.get(port.link.key, _no_tcs)
+            port.paused = (to_host and dst in receivers and
+                           receivers[dst].cfg.pfc_enabled and
+                           receivers[dst].pfc_paused)
             for fid, b, m in port.drain(dt):
                 if to_host:
                     cur = arrivals.setdefault(dst, {}) \
@@ -204,7 +239,7 @@ def run_fabric(topo: Topology, flows: List[Flow],
                     cur[1] += m
                 else:
                     batches.setdefault((dst, next_hop[(dst, fid)]), []) \
-                        .append((fid, b, m, port.link.key))
+                        .append((fid, b, m, port.link.key, tc_of[fid]))
 
     # the four forwarding stages of one tick, in traversal order; a port
     # drains once per tick, after every same-tick upstream stage has
@@ -223,9 +258,10 @@ def run_fabric(topo: Topology, flows: List[Flow],
     for t in range(ticks):
         now_us = (t + 1) * dt
         # ---- 1. senders inject into their NIC queue ----------------------- #
-        # one batch per NIC port: space is split proportionally over the
-        # port's flows (source-side backpressure never overflows the NIC
-        # queue, so un-injectable bytes are refunded, not dropped)
+        # one batch per NIC port: each class's buffer partition is split
+        # proportionally over that class's flows (source-side
+        # backpressure never overflows the NIC queue, so un-injectable
+        # bytes are refunded, not dropped)
         offers: Dict[str, List[Tuple[int, float]]] = {}
         for fid, f in enumerate(flows):
             b = senders[fid].offer(dt)
@@ -233,15 +269,19 @@ def run_fabric(topo: Topology, flows: List[Flow],
                 offers.setdefault(f.src, []).append((fid, b))
         for host, items in offers.items():
             port = nic_ports[host]
-            space = max(0.0, fcfg.switch.port_buffer_bytes
-                        - port.queued_bytes)
-            total = sum(b for _, b in items)
-            scale = 1.0 if total <= space else space / total
-            batch = []
+            by_tc: Dict[int, List[Tuple[int, float]]] = {}
             for fid, b in items:
-                take = b if scale >= 1.0 else b * scale
-                senders[fid].injected -= b - take
-                batch.append((fid, take, 0.0, None))
+                by_tc.setdefault(tc_of[fid], []).append((fid, b))
+            batch = []
+            for tc, tc_items in by_tc.items():
+                space = max(0.0, fcfg.switch.port_buffer_bytes
+                            - port.tc_bytes(tc))
+                total = sum(b for _, b in tc_items)
+                scale = 1.0 if total <= space else space / total
+                for fid, b in tc_items:
+                    take = b if scale >= 1.0 else b * scale
+                    senders[fid].injected -= b - take
+                    batch.append((fid, take, 0.0, None, tc))
             port.enqueue_batch(batch)
 
         # ---- 2. tier-ordered forwarding ----------------------------------- #
@@ -289,7 +329,10 @@ def run_fabric(topo: Topology, flows: List[Flow],
             heavy = last_heavy.get(host)
             if fb.cnps and heavy is not None:
                 for _ in range(fb.cnps):
-                    pending_cnps.append((t + cnp_delay_ticks, heavy))
+                    heapq.heappush(pending_cnps,
+                                   (t + cnp_delay_ticks[heavy], cnp_seq,
+                                    heavy))
+                    cnp_seq += 1
             # switch ECN marks -> per-flow CNPs, paced per DCQCN NP; the
             # pacing clock runs for every flow of this receiver, so marks
             # owed to a stalled/paused flow still convert on schedule
@@ -302,19 +345,26 @@ def run_fabric(topo: Topology, flows: List[Flow],
                         cnp_accum_us[fid] >= interval:
                     cnp_accum_us[fid] = 0.0
                     marked_backlog[fid] = 0.0
-                    pending_cnps.append((t + cnp_delay_ticks, fid))
+                    heapq.heappush(pending_cnps,
+                                   (t + cnp_delay_ticks[fid], cnp_seq, fid))
+                    cnp_seq += 1
         # deliver CNPs whose propagation delay has elapsed (same tick
-        # when cnp_delay_us == 0 — the sender's rate machine is only read
-        # at the next tick's offer, so end-of-tick delivery is exact)
+        # when the flow's delay is 0 — the sender's rate machine is only
+        # read at the next tick's offer, so end-of-tick delivery is exact)
         while pending_cnps and pending_cnps[0][0] <= t:
-            _, fid = pending_cnps.popleft()
+            _, _, fid = heapq.heappop(pending_cnps)
             senders[fid].on_cnp()
 
         # ---- 4. PFC pause propagation ------------------------------------- #
-        paused_links = set()
+        paused_pairs: Set[PauseKey] = set()
         for sw in switches.values():
-            paused_links |= sw.update_pfc()
-        for lk in paused_links:
+            paused_pairs |= sw.update_pfc()
+        by_link: Dict[LinkKey, Set[int]] = {}
+        for lk, tc in paused_pairs:
+            by_link.setdefault(lk, set()).add(tc)
+            pause_tc_us[(lk, tc)] = pause_tc_us.get((lk, tc), 0.0) + dt
+        paused_by_link = {lk: frozenset(tcs) for lk, tcs in by_link.items()}
+        for lk in paused_by_link:
             pause_link_us[lk] = pause_link_us.get(lk, 0.0) + dt
 
     # -- aggregate ----------------------------------------------------------
@@ -338,6 +388,7 @@ def run_fabric(topo: Topology, flows: List[Flow],
                              if victims else 0.0),
         has_victim=bool(victims),
         pause_link_us=pause_link_us,
+        pause_tc_us=pause_tc_us,
         pause_fanout=len(pause_link_us),
         ecn_marked_bytes=sum(s.marked_bytes() for s in switches.values()),
         switch_dropped_bytes=sum(s.dropped_bytes()

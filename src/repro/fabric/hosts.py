@@ -15,7 +15,8 @@ so backpressure reaches the flow through queue space, not a sender flag.
 """
 from __future__ import annotations
 
-from typing import Optional
+import math
+from typing import Optional, Tuple
 
 from ..core.dcqcn import DcqcnConfig, DcqcnRate
 from ..core.simulator import (HostFeedback, ReceiverHost,  # noqa: F401
@@ -33,19 +34,30 @@ class SenderHost:
     offering once the burst has been injected; the fabric re-credits
     ``injected`` for bytes lost downstream (fluid go-back-N), which
     re-opens the tap.
+
+    ``on_off_us=(on, off)`` makes the source a burst train (on-off OLTP
+    client): after ``start_us`` the flow offers bytes only while
+    ``(now - start) mod (on + off) < on``.  The DCQCN machine keeps
+    advancing through off-phases (timers run; the tap is simply shut),
+    mirroring the vectorized engine's gating.
     """
 
     def __init__(self, line_rate_gbps: float,
                  dcqcn: Optional[DcqcnConfig] = None,
                  offered_gbps: Optional[float] = None,
                  burst_bytes: Optional[float] = None,
-                 start_us: float = 0.0):
+                 start_us: float = 0.0,
+                 on_off_us: Optional[Tuple[float, float]] = None):
         self.line_rate_gbps = line_rate_gbps
         self.rate = DcqcnRate(dcqcn or
                               DcqcnConfig(line_rate_gbps=line_rate_gbps))
         self.offered_gbps = offered_gbps
         self.burst_bytes = burst_bytes
         self.start_us = start_us
+        if on_off_us is not None and (on_off_us[0] <= 0.0
+                                      or on_off_us[1] < 0.0):
+            raise ValueError("on_off_us needs on > 0 and off >= 0")
+        self.on_off_us = on_off_us
         self.injected = 0.0
         self.now_us = 0.0
 
@@ -62,6 +74,10 @@ class SenderHost:
         gbps = min(self.rate.advance(dt_us), self.line_rate_gbps)
         if self.offered_gbps is not None:
             gbps = min(gbps, self.offered_gbps)
+        if self.on_off_us is not None and self.on_off_us[1] > 0.0:
+            on, off = self.on_off_us
+            if math.fmod(self.now_us - self.start_us, on + off) >= on:
+                return 0.0
         if self.exhausted:
             return 0.0
         b = gbps * 1e9 / 8.0 * dt_us * 1e-6

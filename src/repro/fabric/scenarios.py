@@ -10,6 +10,7 @@ import dataclasses
 import itertools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from ..core.datapath import QoS
 from ..core.simulator import SimConfig, testbed_100g
 from .fabric import FabricConfig, Flow
 from .switch import SwitchConfig
@@ -180,6 +181,78 @@ def mixed_fleet_grid(pool_mb: Sequence[float] = (12.0, 4.0, 1.0),
         lambda pool_mb, burst_mb: mixed_fleet(
             pool_mb=pool_mb, burst_mb=burst_mb, **kw),
         pool_mb=list(pool_mb), burst_mb=list(burst_mb))
+
+
+def qos_mixed_storage(n_bulk: int = 4, n_oltp: int = 3, n_olap: int = 2,
+                      bulk_gbps: float = 60.0, oltp_gbps: float = 25.0,
+                      olap_gbps: float = 25.0,
+                      oltp_on_off_us: Tuple[float, float] = (60.0, 60.0),
+                      per_tc: bool = True, pfc: bool = True,
+                      ecn: bool = False, pool_mb: float = 0.5,
+                      sim_time_s: float = 0.01) -> Scenario:
+    """QoS-mixed storage fleet (paper fig 9 classes on one fabric): LOW
+    bulk/backup writers incast into a small-pool Jet receiver (``h1_0`` —
+    pool pressure drives the §5 LOW->DRAM spill), HIGH OLTP clients run
+    on-off burst trains into ``h1_1``, and NORMAL OLAP scans stream into
+    ``h1_2``.  The bulk class oversubscribes its receiver's access link,
+    so with ``pfc`` the congested downlink asserts pause up the tree.
+
+    The scenario exists to measure PFC collateral damage: with
+    ``per_tc=True`` (802.1Qbb per-priority pause) only the LOW class is
+    paused on the shared spine->leaf links and the OLTP/OLAP classes
+    keep flowing; ``per_tc=False`` reproduces the legacy whole-link
+    pause, which head-of-line-blocks all three classes (the >= 2x victim
+    -goodput gap asserted in tests/test_pfc_priority.py).  ``ecn=False``
+    by default: a lossless-without-ECN fabric is held back *only* by
+    PFC, the configuration where pause fan-out does real damage (§2.1).
+    """
+    # OLTP/OLAP clients *share* source hosts with bulk writers: the
+    # classes meet at the source NIC and on every fabric link, the
+    # worst case for pause collateral.  Per-TC queues keep them apart
+    # anyway (own buffer partition, own pause state); the legacy
+    # per-link mode lets a paused bulk class freeze the whole NIC.
+    n = max(n_bulk, n_oltp, n_olap)
+    topo = incast_fabric(n, host_gbps=100.0, uplink_gbps=800.0,
+                         extra_receivers=2)
+    flows = [Flow(src=f"h0_{i}", dst="h1_0", offered_gbps=bulk_gbps,
+                  qos=QoS.LOW, tag="incast")
+             for i in range(n_bulk)]
+    flows += [Flow(src=f"h0_{i}", dst="h1_1", offered_gbps=oltp_gbps,
+                   qos=QoS.HIGH, tag="oltp", on_off_us=oltp_on_off_us)
+              for i in range(n_oltp)]
+    flows += [Flow(src=f"h0_{i}", dst="h1_2", offered_gbps=olap_gbps,
+                   qos=QoS.NORMAL, tag="olap")
+              for i in range(n_olap)]
+
+    def recv(host: str) -> SimConfig:
+        if host == "h1_0":      # the squeezed Jet pool: LOW spills (§5)
+            return testbed_100g("jet", pfc_enabled=False,
+                                jet_pool_bytes=int(pool_mb * (1 << 20)),
+                                rnic_ecn_cnp=False)
+        return testbed_100g("ddio", pfc_enabled=False)
+
+    sw = SwitchConfig(pfc_enabled=pfc, ecn_enabled=ecn, per_tc=per_tc,
+                      port_buffer_bytes=1 << 20)
+    return Scenario(
+        name=f"qosmix{n_bulk}b{n_oltp}o{n_olap}a"
+             f"_{'tc' if per_tc else 'link'}{'_pfc' if pfc else ''}",
+        topology=topo, flows=flows,
+        fabric=FabricConfig(sim_time_s=sim_time_s, switch=sw,
+                            receiver_cfg=recv))
+
+
+def qos_mixed_grid(per_tc: Sequence[bool] = (False, True),
+                   pool_mb: Sequence[float] = (0.5,),
+                   **kw) -> Tuple[List[Scenario], List[dict]]:
+    """Grid of :func:`qos_mixed_storage` scenarios over pause granularity
+    x Jet pool size for :func:`repro.fabric.vector.run_fabric_sweep` —
+    the fleet-scale view of per-priority PFC: the ``per_tc`` axis flips
+    the same workload between 802.1Qbb pause and legacy whole-link pause
+    (both are plain per-point parameters, so one sweep covers both)."""
+    return fabric_grid(
+        lambda per_tc, pool_mb: qos_mixed_storage(
+            per_tc=per_tc, pool_mb=pool_mb, **kw),
+        per_tc=list(per_tc), pool_mb=list(pool_mb))
 
 
 def single_pair(mode: str = "jet", sim_time_s: float = 0.01,

@@ -1,23 +1,45 @@
-"""Output-queued switch model with per-port ECN marking and PFC pauses.
+"""Output-queued switch model with per-traffic-class queues, ECN and PFC.
 
-Fluid model, one FIFO per output port, per-flow byte accounting so that
+Fluid model.  Each output port owns one FIFO *per traffic class* (TC —
+the fabric reuses the receiver's :class:`repro.core.datapath.QoS`
+classes, so ``N_TC == N_QOS``), with
 
-* ECN marks survive multi-hop forwarding and reach the right receiver
-  (which turns them into per-flow CNPs, DCQCN-style);
-* PFC pause targets exactly the ingress links feeding a congested output
-  port — pausing a link stalls *everything* riding it, which is the
-  head-of-line blocking / congestion-spreading pathology the hyperscale
-  RDMA literature documents (Hoefler et al.) and the paper motivates
-  against (§2.1).
+* a per-TC ECN knee: departures of a class are marked once *that class's*
+  queue is past the knee (DCTCP-style, knee evaluated on enqueue);
+* per-TC PFC xoff/xon watermarks: a congested class asserts pause toward
+  exactly the ``(ingress link, tc)`` pairs feeding it, so a paused HIGH
+  class no longer stalls LOW traffic sharing the same ingress link — the
+  per-priority pause granularity real Clos fabrics run (802.1Qbb), which
+  the paper's PFC fan-out / HoL measurements assume (§2, §6);
+* strict-priority scheduling across classes on the shared link budget
+  (HIGH drains first), pro rata across flows within a class (fluid
+  approximation of per-class FIFO);
+* per-class buffer space: every class owns a full ``port_buffer_bytes``
+  worth of queue memory (the static per-priority-group partition real
+  802.1Qbb switches reserve so a paused class cannot squeeze the
+  others' headroom); tail drop and the xoff/xon watermark fractions are
+  evaluated against the class's own partition.
 
-Queues drain proportionally across flows (fluid approximation of FIFO).
+The legacy per-link behaviour (one FIFO per port, pause stalls the whole
+ingress link) is exactly the special case "all traffic in one class":
+the driver maps every flow to TC 0 when ``SwitchConfig.per_tc`` is
+False, which keeps the old congestion-spreading pathology available as a
+comparison baseline (tests/test_pfc_priority.py golden-tests that a
+single-TC workload is bit-equal between the two modes and to the
+pre-refactor driver).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from ..core.datapath import N_QOS
 from .topology import Link, LinkKey
+
+N_TC = N_QOS                      # switch queues mirror the QoS classes
+
+# (ingress link, traffic class) — the granularity of a PFC pause frame
+PauseKey = Tuple[LinkKey, int]
 
 
 @dataclasses.dataclass
@@ -28,6 +50,26 @@ class SwitchConfig:
     pfc_enabled: bool = False
     pfc_xoff_frac: float = 0.60       # assert pause above this occupancy
     pfc_xon_frac: float = 0.30        # release below this occupancy
+    # classed queues (per-TC ECN knees + per-priority PFC).  False =
+    # legacy per-link behaviour: every flow rides TC 0, one knee, one
+    # watermark pair, and a pause stalls the whole ingress link.
+    per_tc: bool = True
+    # optional per-TC overrides (len N_TC), falling back to the scalars
+    tc_ecn_kmin_frac: Optional[Sequence[float]] = None
+    tc_pfc_xoff_frac: Optional[Sequence[float]] = None
+    tc_pfc_xon_frac: Optional[Sequence[float]] = None
+
+    def kmin_frac(self, tc: int) -> float:
+        return (self.tc_ecn_kmin_frac[tc]
+                if self.tc_ecn_kmin_frac is not None else self.ecn_kmin_frac)
+
+    def xoff_frac(self, tc: int) -> float:
+        return (self.tc_pfc_xoff_frac[tc]
+                if self.tc_pfc_xoff_frac is not None else self.pfc_xoff_frac)
+
+    def xon_frac(self, tc: int) -> float:
+        return (self.tc_pfc_xon_frac[tc]
+                if self.tc_pfc_xon_frac is not None else self.pfc_xon_frac)
 
 
 @dataclasses.dataclass
@@ -36,82 +78,98 @@ class _FlowQ:
     marked: float = 0.0               # ECN-marked subset of ``bytes``
 
 
+_NO_TCS: frozenset = frozenset()
+
+
 class OutputPort:
-    """One output FIFO: per-flow bytes, ECN/PFC watermarks, drop + pause
-    accounting."""
+    """One output port: per-TC FIFOs with per-flow byte accounting, ECN
+    and per-priority PFC watermarks, drop + pause accounting."""
 
     def __init__(self, link: Link, cfg: SwitchConfig):
         self.link = link
         self.cfg = cfg
-        self.flows: Dict[int, _FlowQ] = {}
+        # per-TC FIFO: tc -> {fid -> _FlowQ}; within a class, dict
+        # insertion order is the (fluid) FIFO order
+        self.tcq: List[Dict[int, _FlowQ]] = [{} for _ in range(N_TC)]
         # which ingress link each queued flow arrived on (pause targeting)
         self.flow_ingress: Dict[int, Optional[LinkKey]] = {}
-        self.paused = False           # downstream asserted PFC on this link
-        self.pause_asserted = False   # this port's xoff toward upstream
+        self.paused = False           # whole-link pause (receiver gate)
+        self.paused_tcs: frozenset = _NO_TCS   # downstream per-TC pause
+        self.tc_asserted = [False] * N_TC      # this port's per-TC xoff
         self.dropped_bytes = 0.0
         self.marked_bytes = 0.0
         self.pause_us = 0.0
         self.peak_bytes = 0.0
-        # running total: queued_bytes is read per (flow, tick) by the
-        # fabric hot loop, so summing the dict there would be O(flows^2)
+        # running totals: queued_bytes is read per (flow, tick) by the
+        # fabric hot loop, so summing the dicts there would be O(flows^2)
+        self._tc_bytes = [0.0] * N_TC
         self._total_bytes = 0.0
 
     @property
     def queued_bytes(self) -> float:
         return self._total_bytes
 
+    def tc_bytes(self, tc: int) -> float:
+        return self._tc_bytes[tc]
+
+    @property
+    def pause_asserted(self) -> bool:
+        """Any class asserting xoff (legacy single-flag view)."""
+        return any(self.tc_asserted)
+
+    @property
+    def flows(self) -> Dict[int, _FlowQ]:
+        """Merged per-flow view across classes (stats / introspection)."""
+        merged: Dict[int, _FlowQ] = {}
+        for q in self.tcq:
+            merged.update(q)
+        return merged
+
     def enqueue(self, fid: int, nbytes: float, marked: float,
-                in_link: Optional[LinkKey]) -> float:
+                in_link: Optional[LinkKey], tc: int = 0) -> float:
         """Queue up to the buffer limit; returns the bytes dropped (tail
         drop — the fabric re-credits them to the sender, i.e. fluid
-        go-back-N retransmission)."""
+        go-back-N retransmission).  Exactly a single-item
+        :meth:`enqueue_batch`."""
         if nbytes <= 0.0:
             return 0.0
-        q = self.queued_bytes
-        space = self.cfg.port_buffer_bytes - q
-        take = min(nbytes, max(0.0, space))
-        dropped = nbytes - take
-        self.dropped_bytes += dropped
-        if take <= 0.0:
-            return dropped
-        marked = marked * (take / nbytes)
-        # DCTCP-style: mark on enqueue when the queue is past the knee
-        if self.cfg.ecn_enabled and \
-                q > self.cfg.ecn_kmin_frac * self.cfg.port_buffer_bytes:
-            new_marks = take - marked
-            self.marked_bytes += new_marks
-            marked = take
-        fq = self.flows.setdefault(fid, _FlowQ())
-        fq.bytes += take
-        fq.marked += marked
-        self._total_bytes += take
-        self.flow_ingress[fid] = in_link
-        self.peak_bytes = max(self.peak_bytes, q + take)
-        return dropped
+        return self.enqueue_batch([(fid, nbytes, marked, in_link, tc)]) \
+            .get(fid, 0.0)
 
     def enqueue_batch(
-            self, items: List[Tuple[int, float, float, Optional[LinkKey]]],
+            self,
+            items: List[Tuple[int, float, float, Optional[LinkKey], int]],
     ) -> Dict[int, float]:
         """Queue one tick's simultaneous arrivals ``[(fid, bytes, marked,
-        in_link)]`` as a single fluid batch: buffer space is allocated
-        proportionally to offered bytes and the ECN knee is evaluated once
-        against the pre-batch occupancy, so the outcome is independent of
-        the order arrivals are listed in (a sequence of :meth:`enqueue`
-        calls would privilege earlier callers).  A single-item batch is
-        exactly ``enqueue``.  Returns ``{fid: dropped bytes}``."""
-        total = sum(b for _, b, _, _ in items if b > 0.0)
-        if total <= 0.0:
+        in_link, tc)]`` as a single fluid batch: each class's buffer
+        partition is allocated proportionally to that class's offered
+        bytes, and each class's ECN knee is evaluated once against that
+        class's pre-batch occupancy, so the outcome is independent of
+        the order arrivals are listed in.  Returns ``{fid: dropped
+        bytes}``."""
+        tot_tc = [0.0] * N_TC
+        for _, b, _, _, tc in items:
+            if b > 0.0:
+                tot_tc[tc] += b
+        if not any(t > 0.0 for t in tot_tc):
             return {}
-        q = self.queued_bytes
-        space = max(0.0, self.cfg.port_buffer_bytes - q)
-        scale = 1.0 if total <= space else space / total
-        mark_now = (self.cfg.ecn_enabled and
-                    q > self.cfg.ecn_kmin_frac * self.cfg.port_buffer_bytes)
+        buf = self.cfg.port_buffer_bytes
+        scale_tc = [1.0] * N_TC
+        for tc in range(N_TC):
+            if tot_tc[tc] <= 0.0:
+                continue
+            space = max(0.0, buf - self._tc_bytes[tc])
+            if tot_tc[tc] > space:
+                scale_tc[tc] = space / tot_tc[tc]
+        # one knee decision per class against the pre-batch occupancy
+        mark_tc = [self.cfg.ecn_enabled and
+                   self._tc_bytes[tc] > self.cfg.kmin_frac(tc) * buf
+                   for tc in range(N_TC)]
         dropped: Dict[int, float] = {}
-        for fid, b, m, in_link in items:
+        for fid, b, m, in_link, tc in items:
             if b <= 0.0:
                 continue
-            take = b if scale >= 1.0 else b * scale
+            take = b if scale_tc[tc] >= 1.0 else b * scale_tc[tc]
             lost = b - take
             if lost > 0.0:
                 self.dropped_bytes += lost
@@ -119,59 +177,92 @@ class OutputPort:
             if take <= 0.0:
                 continue
             mk = m * (take / b)
-            if mark_now:
+            if mark_tc[tc]:
                 self.marked_bytes += take - mk
                 mk = take
-            fq = self.flows.setdefault(fid, _FlowQ())
+            fq = self.tcq[tc].setdefault(fid, _FlowQ())
             fq.bytes += take
             fq.marked += mk
+            self._tc_bytes[tc] += take
             self._total_bytes += take
             self.flow_ingress[fid] = in_link
-        self.peak_bytes = max(self.peak_bytes, self.queued_bytes)
+        self.peak_bytes = max(self.peak_bytes, self._total_bytes)
         return dropped
 
     def drain(self, dt_us: float) -> List[Tuple[int, float, float]]:
-        """Forward up to rate*dt bytes; returns [(fid, bytes, marked)]."""
-        if self.paused:
+        """Forward up to rate*dt bytes; returns [(fid, bytes, marked)].
+
+        Strict priority across classes (TC 0 first), pro rata across
+        flows within a class; paused classes keep their bytes and do not
+        consume link budget."""
+        if self.paused or self.paused_tcs:
             self.pause_us += dt_us
+            if self.paused:
+                return []
+        if self._total_bytes <= 0.0:
             return []
         budget = self.link.gbps * 1e9 / 8.0 * dt_us * 1e-6
-        total = self.queued_bytes
-        if total <= 0.0:
-            return []
-        frac = min(1.0, budget / total)
+        budget_left = budget
         out: List[Tuple[int, float, float]] = []
-        for fid, fq in list(self.flows.items()):
-            b = fq.bytes * frac
-            m = fq.marked * frac
-            fq.bytes -= b
-            fq.marked -= m
-            self._total_bytes -= b
-            if fq.bytes < 1e-9:
-                self._total_bytes -= fq.bytes
-                del self.flows[fid]
-            if b > 0.0:
-                out.append((fid, b, m))
+        for tc in range(N_TC):
+            total = self._tc_bytes[tc]
+            if total <= 0.0 or tc in self.paused_tcs:
+                continue
+            frac = min(1.0, budget_left / total)
+            q = self.tcq[tc]
+            for fid, fq in list(q.items()):
+                b = fq.bytes * frac
+                m = fq.marked * frac
+                fq.bytes -= b
+                fq.marked -= m
+                self._tc_bytes[tc] -= b
+                self._total_bytes -= b
+                if fq.bytes < 1e-9:
+                    self._tc_bytes[tc] -= fq.bytes
+                    self._total_bytes -= fq.bytes
+                    del q[fid]
+                if b > 0.0:
+                    out.append((fid, b, m))
+            budget_left -= total * frac
+            # leftover budget below 1e-6 of the link budget is rounding
+            # crumb (budget - frac * total when a class eats the whole
+            # budget); granting it to the next class would forward
+            # micro-byte trickles that downstream convert into full-size
+            # discrete events (ECN marks -> CNPs).  The clamp is
+            # *relative* so float32 and float64 engines make the same
+            # grant/no-grant decision, keeping the priority ladder
+            # deterministic across backends.
+            if budget_left < 1e-6 * budget:
+                budget_left = 0.0
+            self._tc_bytes[tc] = max(0.0, self._tc_bytes[tc])
         self._total_bytes = max(0.0, self._total_bytes)
         return out
 
     def update_pfc(self) -> None:
         if not self.cfg.pfc_enabled:
             return
-        q_frac = self.queued_bytes / self.cfg.port_buffer_bytes
-        if self.pause_asserted:
-            if q_frac < self.cfg.pfc_xon_frac:
-                self.pause_asserted = False
-        elif q_frac > self.cfg.pfc_xoff_frac:
-            self.pause_asserted = True
+        buf = self.cfg.port_buffer_bytes
+        for tc in range(N_TC):
+            q_frac = self._tc_bytes[tc] / buf
+            if self.tc_asserted[tc]:
+                if q_frac < self.cfg.xon_frac(tc):
+                    self.tc_asserted[tc] = False
+            elif q_frac > self.cfg.xoff_frac(tc):
+                self.tc_asserted[tc] = True
 
-    def pause_targets(self) -> Set[LinkKey]:
-        """Ingress links this congested port wants paused (only links of
-        flows actually queued here — PFC's per-ingress granularity)."""
-        if not self.pause_asserted:
-            return set()
-        return {self.flow_ingress[fid] for fid in self.flows
-                if self.flow_ingress.get(fid) is not None}
+    def pause_targets(self) -> Set[PauseKey]:
+        """``(ingress link, tc)`` pairs this port wants paused: only the
+        ingress links of flows actually queued in an over-watermark
+        class — PFC's per-priority granularity (802.1Qbb)."""
+        out: Set[PauseKey] = set()
+        for tc in range(N_TC):
+            if not self.tc_asserted[tc]:
+                continue
+            for fid in self.tcq[tc]:
+                lk = self.flow_ingress.get(fid)
+                if lk is not None:
+                    out.add((lk, tc))
+        return out
 
 
 class Switch:
@@ -184,13 +275,14 @@ class Switch:
             l.dst: OutputPort(l, cfg) for l in out_links}
 
     def enqueue(self, out_dst: str, fid: int, nbytes: float, marked: float,
-                in_link: Optional[LinkKey]) -> float:
+                in_link: Optional[LinkKey], tc: int = 0) -> float:
         """Returns bytes tail-dropped at the output port."""
-        return self.ports[out_dst].enqueue(fid, nbytes, marked, in_link)
+        return self.ports[out_dst].enqueue(fid, nbytes, marked, in_link, tc)
 
-    def update_pfc(self) -> Set[LinkKey]:
-        """Refresh per-port xoff/xon state; returns ingress links to pause."""
-        targets: Set[LinkKey] = set()
+    def update_pfc(self) -> Set[PauseKey]:
+        """Refresh per-port per-TC xoff/xon state; returns the
+        ``(ingress link, tc)`` pairs to pause."""
+        targets: Set[PauseKey] = set()
         for p in self.ports.values():
             p.update_pfc()
             targets |= p.pause_targets()

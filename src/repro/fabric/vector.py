@@ -10,7 +10,12 @@ tick body into stacked arrays and advances all grid points at once:
   grid) — rate machines, injected/delivered byte counters, CNP pacing,
   plus a circular delay ring for CNP propagation (``cnp_delay_us``);
 * per-port queue state as ``[P, F]`` byte/mark matrices covering the NIC
-  egress queues and every switch output port on some flow's path;
+  egress queues and every switch output port on some flow's path — a
+  flow's bytes belong to exactly one traffic class, so the classed
+  ``[Q, P]`` per-TC occupancy / PFC assert / pause state is derived with
+  one ``[Q, F] @ [F, P]`` one-hot matmul and the drain's strict-priority
+  budget grants are priority-unrolled over ``Q`` (the PR 3 receiver-block
+  pattern); legacy per-link points collapse every flow onto TC 0;
 * per-receiver datapath state as ``[R]`` arrays — including the
   :class:`~repro.core.datapath.HostDatapath` QoS admission classes as a
   stacked ``[G, Q, R]`` block (``Q = 3`` service classes, priority-order
@@ -30,8 +35,9 @@ Semantics are exactly the batch-fluid tick of :func:`repro.fabric.run_fabric`
 cut-through within the tick, proportional buffer-space allocation and a
 single pre-batch ECN-knee decision per port per stage, receiver CNPs to
 the heaviest recently-arriving flow (lowest flow id on ties), per-flow
-DCQCN CNP pacing of switch ECN marks, and PFC pause propagation targeted
-at the ingress links of flows queued at over-watermark ports.  A
+DCQCN CNP pacing of switch ECN marks, and per-priority PFC pause
+propagation targeted at the ``(ingress link, tc)`` pairs of flows queued
+in over-watermark classes.  A
 1-sender/1-receiver grid therefore reproduces ``run_sim`` goodput, and
 small incast grids match the scalar driver per flow.
 
@@ -96,9 +102,14 @@ _DCQCN_SCALARS = [
 
 _SWITCH_SCALARS = [
     ("buf", lambda s: float(s.port_buffer_bytes)),
-    ("kmin", lambda s: s.ecn_kmin_frac),
-    ("sw_xoff", lambda s: s.pfc_xoff_frac),
-    ("sw_xon", lambda s: s.pfc_xon_frac),
+]
+
+# per-TC switch knobs: resolved to [N_QOS]-vectors per grid point (the
+# scalar fields with optional tc_* overrides, see SwitchConfig)
+_SWITCH_TC = [
+    ("kmin", lambda s, tc: s.kmin_frac(tc)),
+    ("sw_xoff", lambda s, tc: s.xoff_frac(tc)),
+    ("sw_xon", lambda s, tc: s.xon_frac(tc)),
 ]
 
 
@@ -234,13 +245,27 @@ class FabricSweepParams:
         pv: Dict[str, List] = {k: [] for k in
                                ["gbps", "ecn_en", "can_assert",
                                 "line", "cap", "burst", "start", "cnp_iv_f",
-                                "d_base", "d_strag", "cnp_dly"]}
-        for name, _ in _RECV_SCALARS + _DCQCN_SCALARS + _SWITCH_SCALARS:
+                                "d_base", "d_strag", "cnp_dly", "clsF",
+                                "on_us", "off_us"]}
+        for name, _ in _RECV_SCALARS + _DCQCN_SCALARS + _SWITCH_SCALARS \
+                + _SWITCH_TC:
             pv[name] = []
+        # switch traffic class of each flow as a [Q, F] one-hot, built
+        # once from flows0: the structure check above rejects grids
+        # whose points disagree on Flow.qos.  Legacy per-link points
+        # collapse every flow onto TC 0 (one queue, one watermark pair
+        # — exactly the pre-per-TC pause semantics)
+        cls_true = np.zeros((N_QOS, F))
+        cls_true[[int(f.qos) for f in flows0], np.arange(F)] = 1.0
+        cls_legacy = np.zeros((N_QOS, F))
+        cls_legacy[0, :] = 1.0
         for s in scens:
             topo, sw = s.topology, s.fabric.switch
             for name, fn in _SWITCH_SCALARS:
                 pv[name].append(fn(sw))
+            for name, fn in _SWITCH_TC:
+                pv[name].append([fn(sw, tc) for tc in range(N_QOS)])
+            pv["clsF"].append(cls_true if sw.per_tc else cls_legacy)
             pv["gbps"].append([topo.links[k].gbps for k in port_keys])
             is_switch = np.array(port_stage) > 0
             pv["ecn_en"].append(is_switch * float(sw.ecn_enabled))
@@ -262,8 +287,13 @@ class FabricSweepParams:
                 d_s.append(max(1, int(hold * c.straggler_mult / dt)))
             pv["d_base"].append(d_b)
             pv["d_strag"].append(d_s)
-            pv["cnp_dly"].append(
-                max(0, int(round(s.fabric.cnp_delay_us / dt))))
+            # per-flow NP->RP propagation delay (Flow override, falling
+            # back to the FabricConfig scalar)
+            pv["cnp_dly"].append([
+                max(0, int(round(
+                    (f.cnp_delay_us if f.cnp_delay_us is not None
+                     else s.fabric.cnp_delay_us) / dt)))
+                for f in s.flows])
             line = [s.topology.access_gbps(f.src) for f in s.flows]
             pv["line"].append(line)
             pv["cap"].append([np.inf if f.offered_gbps is None
@@ -271,6 +301,10 @@ class FabricSweepParams:
             pv["burst"].append([np.inf if f.burst_bytes is None
                                 else f.burst_bytes for f in s.flows])
             pv["start"].append([f.start_us for f in s.flows])
+            pv["on_us"].append([np.inf if f.on_off_us is None
+                                else f.on_off_us[0] for f in s.flows])
+            pv["off_us"].append([0.0 if f.on_off_us is None
+                                 else f.on_off_us[1] for f in s.flows])
             pv["cnp_iv_f"].append([rcfgs[f.dst].cnp_interval_us
                                    for f in s.flows])
             dcq = [DcqcnConfig(line_rate_gbps=lr) for lr in line]
@@ -324,12 +358,22 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1):
     arangeF = xp.arange(st["recv_of"].shape[0], dtype=xp.int32)
     # loop-invariant per-point quantities, computed once outside the scan
     budget = p["gbps"] * bpt
+    budget_crumb = budget * f(1e-6)
     buf = p["buf"][..., None]
-    kmin_th = p["kmin"][..., None] * buf
+    # switch traffic classes: clsF is the per-point [Q, F] flow->TC
+    # one-hot (all flows on TC 0 for legacy per-link points); the per-TC
+    # knee/watermark thresholds broadcast as [.., Q, 1] against [.., Q, P]
+    clsF = p["clsF"]
+    buf_tc = p["buf"][..., None, None]
+    kmin_th = p["kmin"][..., None] * buf_tc
     ecn_on = p["ecn_en"] > 0.5
     can_assert = p["can_assert"] > 0.5
     sxoff = p["sw_xoff"][..., None]
     sxon = p["sw_xon"][..., None]
+    # on-off burst trains: sources offer only while the duty-cycle phase
+    # is inside the on-window (off_us == 0 means always on)
+    onoff = p["off_us"] > zero
+    period = xp.where(onoff, p["on_us"] + p["off_us"], one)
     jet = p["jet"] > 0.5
     avail_dram = xp.maximum(zero, p["membw"] - p["cpu_bw"])
     jet_cap = xp.minimum(p["pcie"], p["line1"] * 4.0) * bpt
@@ -353,41 +397,72 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1):
             s[k] = xp.where(fire, zero, s[k])
         return s
 
+    def class_tot(q0):
+        """Per-(port, TC) occupancy [.., Q, P] from per-flow bytes
+        [.., P, F] — one small matmul with the class one-hot."""
+        return xp.matmul(clsF, xp.swapaxes(q0, -1, -2))
+
     def drain(s, k):
-        """Stage-k ports forward up to rate*dt, pro rata across flows."""
+        """Stage-k ports forward up to rate*dt: strict priority across
+        traffic classes (per-TC pause gating, priority-unrolled budget
+        grants as in the receiver block), pro rata across the flows of a
+        class."""
         qm = s["qm"]
-        qtot = qm[..., 0, :, :].sum(-1)
-        can = st["stage"][k] & ~s["paused"] & (qtot > zero)
-        frac = xp.where(can,
-                        xp.minimum(one, budget /
-                                   xp.where(qtot > zero, qtot, one)),
-                        zero)
-        out = qm * frac[..., None, :, None]
+        q0 = qm[..., 0, :, :]
+        qtc = class_tot(q0)                       # [.., Q, P]
+        budget_left = budget
+        frac_pf = xp.zeros_like(q0)               # per-(port, flow) share
+        can_pf = xp.zeros_like(q0)                # class drained at port
+        for qi in range(N_QOS):
+            qsum = qtc[..., qi, :]
+            can = st["stage"][k] & ~s["paused"][..., qi, :] & (qsum > zero)
+            frac = xp.where(can,
+                            xp.minimum(one, budget_left /
+                                       xp.where(qsum > zero, qsum, one)),
+                            zero)
+            cls_row = clsF[..., qi, :][..., None, :]          # [.., 1, F]
+            frac_pf = frac_pf + frac[..., None] * cls_row
+            can_pf = can_pf + xp.where(can, one, zero)[..., None] * cls_row
+            # clamp leftover budget below 1e-6 of the link budget to
+            # zero (rounding crumbs after a class eats the whole budget
+            # must not become micro-byte trickles for the next class —
+            # they would trigger full-size discrete CNPs downstream);
+            # relative, so f32 and f64 backends agree with the scalar
+            # driver on every grant/no-grant decision (OutputPort.drain)
+            budget_left = budget_left - frac * qsum
+            budget_left = xp.where(budget_left < budget_crumb, zero,
+                                   budget_left)
+        out = qm * frac_pf[..., None, :, :]
         qm = qm - out
         # sub-1e-9 residues vanish with their marks (the scalar driver's
-        # dict-entry cleanup)
-        gone = can[..., None] & (qm[..., 0, :, :] < eps_q)
+        # dict-entry cleanup, per drained class)
+        gone = (can_pf > half) & (qm[..., 0, :, :] < eps_q)
         s["qm"] = xp.where(gone[..., None, :, :], zero, qm)
         # flow-level view of this stage's output: [.., 2, F]
         fbm = (st["occ"][k] * out).sum(-2)
         return s, fbm
 
     def enqueue(s, dest_oh, fbm):
-        """Batch-enqueue routed bytes: proportional space split, one ECN
-        knee decision per port against the pre-batch occupancy."""
+        """Batch-enqueue routed bytes: proportional split of each
+        class's buffer partition, one ECN knee decision per (port, TC)
+        against that class's pre-batch occupancy."""
         A = dest_oh * fbm[..., None, :]           # [.., 2, P, F]
-        tot_in = A[..., 0, :, :].sum(-1)
-        qtot = s["qm"][..., 0, :, :].sum(-1)
-        space = xp.maximum(buf - qtot, zero)
-        scale = xp.where(tot_in > space,
-                         space / xp.maximum(tot_in, tiny), one)
-        take = A * scale[..., None, :, None]
+        q0 = s["qm"][..., 0, :, :]
+        qtc = class_tot(q0)                       # [.., Q, P] pre-batch
+        tot_q = class_tot(A[..., 0, :, :])
+        space_q = xp.maximum(buf_tc - qtc, zero)
+        scale_q = xp.where(tot_q > space_q,
+                           space_q / xp.maximum(tot_q, tiny), one)
+        scale_pf = xp.matmul(xp.swapaxes(scale_q, -1, -2), clsF)
+        take = A * scale_pf[..., None, :, :]
         lost = (A - take)[..., 0, :, :]
         # fluid go-back-N: tail-dropped bytes re-open the sender's tap
         s["inj_lo"] = s["inj_lo"] - lost.sum(-2)
         s["sw_dropped"] = s["sw_dropped"] + lost.sum((-1, -2))
-        mark = ecn_on & (qtot > kmin_th)
-        dm = xp.where(mark[..., None],
+        mark_q = ecn_on[..., None, :] & (qtc > kmin_th)
+        mark_pf = xp.matmul(xp.swapaxes(xp.where(mark_q, one, zero),
+                                        -1, -2), clsF)        # [.., P, F]
+        dm = xp.where(mark_pf > half,
                       take[..., 0, :, :] - take[..., 1, :, :], zero)
         s["ecn_marked"] = s["ecn_marked"] + dm.sum((-1, -2))
         s["qm"] = s["qm"] + take + dm[..., None, :, :] * st["sel1"]
@@ -442,14 +517,21 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1):
 
         gbps = xp.minimum(s["rc"], linecap)
         room = xp.maximum(p["burst"] - (s["injected"] + s["inj_lo"]), zero)
-        offer = xp.where(adv, xp.minimum(gbps * bpt, room), zero)
+        # burst-train duty cycle: the DCQCN machine keeps running, the
+        # tap only opens during the on-phase (matches SenderHost.offer)
+        active = adv & (~onoff | (xp.fmod(now - p["start"], period)
+                                  < p["on_us"]))
+        offer = xp.where(active, xp.minimum(gbps * bpt, room), zero)
         # source-side backpressure: the NIC queue never overflows, bytes
-        # that don't fit simply stay un-injected
-        tot_p = (st["occ"][0] * offer[..., None, :]).sum(-1)
-        space = xp.maximum(buf - s["qm"][..., 0, :, :].sum(-1), zero)
-        scale_p = xp.where(tot_p > space,
-                           space / xp.maximum(tot_p, tiny), one)
-        take_f = offer * (st["occ"][0] * scale_p[..., None]).sum(-2)
+        # that don't fit in the flow's class partition stay un-injected
+        off_pf = st["occ"][0] * offer[..., None, :]
+        tot_q = class_tot(off_pf)                         # [.., Q, P]
+        space_q = xp.maximum(
+            buf_tc - class_tot(s["qm"][..., 0, :, :]), zero)
+        scale_q = xp.where(tot_q > space_q,
+                           space_q / xp.maximum(tot_q, tiny), one)
+        scale_pf = xp.matmul(xp.swapaxes(scale_q, -1, -2), clsF)
+        take_f = offer * (st["occ"][0] * scale_pf).sum(-2)
         s["inj_lo"] = s["inj_lo"] + take_f
         s["qm"] = s["qm"] + \
             (st["occ"][0] * take_f[..., None, :])[..., None, :, :] \
@@ -617,35 +699,46 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1):
         s["pace_tus"] = xp.where(pace_fire, zero, pace_tus)
         s["backlog"] = xp.where(pace_fire, zero, s["backlog"])
         # CNP propagation ring [Hc, 3, F]: notifications generated this
-        # tick (slot t % Hc) cut their sender cnp_delay ticks later (read
-        # slot (t - delay) % Hc; Hc > delay, so for t < delay the read
-        # lands on a slot not yet written, which still holds zero)
+        # tick (slot t % Hc) cut their sender its *own* cnp_delay ticks
+        # later — the delay is per flow, so the read index is a [F]
+        # gather (slot (t - delay_f) % Hc; Hc > every delay, so for
+        # t < delay the read lands on a slot not yet written, which
+        # still holds zero)
         fires = xp.stack([xp.where(f_esc, one, zero),
                           xp.where(f_wm, one, zero),
                           xp.where(pace_fire, one, zero)], -2)
         s["cring"] = ring_set(s["cring"], t % Hc, fires)
         cidx = (t - p["cnp_dly"]) % Hc
-        due = xp.take_along_axis(s["cring"], cidx[..., None, None, None],
+        due = xp.take_along_axis(s["cring"], cidx[..., None, None, :],
                                  -3)[..., 0, :, :]
         s = cut(s, due[..., 0, :] > half)
         s = cut(s, due[..., 1, :] > half)
         s = cut(s, due[..., 2, :] > half)
 
-        # ---- 5. PFC pause propagation ------------------------------------- #
+        # ---- 5. per-priority PFC pause propagation ------------------------ #
         q0 = s["qm"][..., 0, :, :]
-        qtot = q0.sum(-1)
-        frac_occ = qtot / buf
-        s["asserted"] = can_assert & \
+        frac_occ = class_tot(q0) / buf_tc                     # [.., Q, P]
+        s["asserted"] = can_assert[..., None, :] & \
             xp.where(s["asserted"], frac_occ >= sxon, frac_occ > sxoff)
-        contrib = xp.where(s["asserted"][..., None] & (q0 > zero),
-                           one, zero)
-        # ingress-link scatter as a tiny matmul: [.., P*F] @ [P*F, P]
-        flat = contrib.reshape(contrib.shape[:-2] + (-1,))
-        link_paused = xp.matmul(flat, st["prev_mat"]) > zero
-        s["pause_us"] = s["pause_us"] + xp.where(link_paused, fdt, zero)
-        s["ever_paused"] = s["ever_paused"] | link_paused
+        # a flow contributes a pause iff its own class is over watermark
+        # at the port it is queued in: scatter the per-class assert state
+        # back to (port, flow), then to that flow's class on its ingress
+        # link — [.., Q, P*F] @ [P*F, P] per class
+        assert_pf = xp.matmul(xp.swapaxes(
+            xp.where(s["asserted"], one, zero), -1, -2), clsF)
+        contrib = xp.where((assert_pf > half) & (q0 > zero), one, zero)
+        contrib_q = contrib[..., None, :, :] * clsF[..., :, None, :]
+        flat = contrib_q.reshape(contrib_q.shape[:-2] + (-1,))
+        link_paused = xp.matmul(flat, st["prev_mat"]) > zero   # [.., Q, P]
+        link_any = link_paused.any(-2)
+        s["pause_us"] = s["pause_us"] + xp.where(link_any, fdt, zero)
+        s["pause_tc_us"] = s["pause_tc_us"] + \
+            xp.where(link_paused, fdt, zero)
+        s["ever_paused"] = s["ever_paused"] | link_any
+        # the receiver RNIC gate pauses its whole access link (host PFC
+        # is not classed), so it broadcasts across the class axis
         rx_gate = s["pfc"][..., st["owner_clamp"]] & st["owner_valid"]
-        s["paused"] = link_paused | rx_gate
+        s["paused"] = link_paused | rx_gate[..., None, :]
         return s
 
     return step
@@ -669,11 +762,13 @@ def _init_state(xp, lead, fsp: FabricSweepParams, p, dtype):
         "pace_tus": xp.full(lead + (F,), np.inf, dtype),
         # CNP propagation ring (slot-major, 3 notification sources)
         "cring": z(Hc, 3, F),
-        # ports (axis -3: 0 = queued bytes, 1 = ECN-marked subset)
+        # ports (axis -3: 0 = queued bytes, 1 = ECN-marked subset);
+        # PFC state is classed: [Q, P] per-(TC, port) assert/pause masks
         "qm": z(2, P, F),
-        "asserted": xp.zeros(lead + (P,), bool),
-        "paused": xp.zeros(lead + (P,), bool),
+        "asserted": xp.zeros(lead + (N_QOS, P), bool),
+        "paused": xp.zeros(lead + (N_QOS, P), bool),
         "pause_us": z(P),
+        "pause_tc_us": z(N_QOS, P),
         "ever_paused": xp.zeros(lead + (P,), bool),
         # receivers ("qos_q" = HostDatapath's per-class RNIC buffer)
         "qos_q": z(N_QOS, R), "resident": z(R), "strag_res": z(R),
@@ -745,6 +840,10 @@ def _results(s, fsp: FabricSweepParams) -> Dict[str, np.ndarray]:
         "has_victim": np.full(G, bool(vic.any())),
         "pause_fanout": np.asarray(s["ever_paused"]).sum(-1),
         "pause_total_us": np.asarray(s["pause_us"], np.float64).sum(-1),
+        # per-priority pause budget: [G, Q] microseconds summed over
+        # ingress links (matches summing FabricResult.pause_tc_us per tc)
+        "pause_tc_total_us": np.asarray(s["pause_tc_us"],
+                                        np.float64).sum(-1),
         "ecn_marked_bytes": np.asarray(s["ecn_marked"], np.float64),
         "switch_dropped_bytes": np.asarray(s["sw_dropped"], np.float64),
         "recv_goodput_gbps": np.asarray(s["drained"], np.float64)

@@ -145,3 +145,51 @@ def test_cnp_delay_changes_dynamics():
     g0 = sum(r0.flow_goodput_gbps.values())
     g200 = sum(r200.flow_goodput_gbps.values())
     assert g0 != pytest.approx(g200, rel=1e-6)
+
+
+def test_cnp_delay_nonzero_closed_loop():
+    """The escape-ladder ECN -> delayed CNP -> DCQCN loop at a nonzero
+    propagation delay: scalar pending-heap vs vector delay-ring
+    agreement was previously only exercised at delay 0 on closed-loop
+    (escape-driven) scenarios."""
+    sc = SC.mixed_fleet(pool_mb=0.5, burst_mb=2.0, sim_time_s=0.01)
+    sc.fabric = dataclasses.replace(sc.fabric, cnp_delay_us=30.0)
+    r = sc.run()
+    # the delayed path must actually carry escape CNPs, else this test
+    # degenerates to the open-loop delay case
+    assert r.per_host["h1_0"].escape_ecn > 0
+    F = len(sc.flows)
+    gp = _flow_goodput([r], F)
+    out_np = run_fabric_sweep([sc], backend="numpy")
+    assert _maxrel(out_np["flow_goodput_gbps"], gp) < 1e-9
+    assert out_np["recv_escape_ecn"][0, JET_RX] == \
+        r.per_host["h1_0"].escape_ecn
+    out_jx = run_fabric_sweep([sc], backend="jax")
+    assert _maxrel(out_jx["flow_goodput_gbps"], gp) <= 5e-4
+
+
+# --------------------------------------------------------------------------- #
+# per-flow CNP delay (Flow.cnp_delay_us overrides FabricConfig)
+# --------------------------------------------------------------------------- #
+def test_per_flow_cnp_delay_overrides_config():
+    """Flows carry their own NP->RP delay: a mixed-delay fleet must
+    differ from every uniform-delay fleet and agree across engines."""
+    def mixed():
+        sc = _delayed(40.0)                  # config-level fallback: 40us
+        for i, f in enumerate(sc.flows):
+            if i % 2 == 0:
+                f.cnp_delay_us = 0.0         # half the flows override to 0
+        return sc
+
+    r = mixed().run()
+    F = len(mixed().flows)
+    gp = _flow_goodput([r], F)
+    # differs from both uniform delays: the override is per flow, not
+    # per config
+    for uniform in (0.0, 40.0):
+        gu = _flow_goodput([_delayed(uniform).run()], F)
+        assert np.abs(gp - gu).max() > 1e-6
+    out_np = run_fabric_sweep([mixed()], backend="numpy")
+    assert _maxrel(out_np["flow_goodput_gbps"], gp) < 1e-9
+    out_jx = run_fabric_sweep([mixed()], backend="jax")
+    assert _maxrel(out_jx["flow_goodput_gbps"], gp) <= 5e-4

@@ -93,9 +93,11 @@ def test_port_tail_drop_and_conservation():
 
 def test_port_pfc_hysteresis():
     p = _port(pfc_enabled=True, pfc_xoff_frac=0.5, pfc_xon_frac=0.25)
-    p.enqueue(7, 600 << 10, 0.0, ("x", "a"))
+    p.enqueue(7, 600 << 10, 0.0, ("x", "a"), tc=1)
     p.update_pfc()
-    assert p.pause_asserted and p.pause_targets() == {("x", "a")}
+    # pause is per (ingress link, traffic class): only TC 1 is targeted
+    assert p.pause_asserted and p.pause_targets() == {(("x", "a"), 1)}
+    assert p.tc_asserted == [False, True, False]
     # draining below xon releases the pause
     while p.queued_bytes > 0.25 * (1 << 20):
         p.drain(10.0)

@@ -1,0 +1,451 @@
+"""Per-priority PFC (per-TC switch queues): the ISSUE 4 contract.
+
+Three layers of evidence that the classed switch model is both *correct*
+and *worth having*:
+
+1. **Golden regression** — a single-TC workload under the per-TC switch
+   is bit-equal (scalar) to the pre-refactor per-link pause driver.  The
+   literals below were captured from the scalar driver at the commit
+   before the per-TC refactor (``incast`` and ``mixed_fleet`` with
+   ``pfc_enabled``); the legacy ``per_tc=False`` mode must reproduce
+   them too, and the vector engines must stay inside their PR 2 bounds
+   (numpy ~1e-13, jax <= 5e-4) while agreeing with each other across
+   the per-TC/per-link flag.
+
+2. **Hypothesis properties** — (a) HoL isolation: pausing the incast
+   class never pulls an uncongested victim class below its no-incast
+   baseline (minus tolerance) on random fabrics; (b) engine
+   equivalence: random multi-class fabrics with PFC agree between the
+   scalar driver and the numpy backend.  Example counts follow the
+   ``FABRIC_TEST_EXAMPLES`` env var (CI fast tier keeps the default;
+   the ``slow`` job raises it).
+
+3. **Isolation acceptance** — in ``qos_mixed_storage`` the non-incast
+   classes' goodput under per-TC PFC is >= 2x their goodput under the
+   legacy per-link pause, while the LOW class exercises the §5 DRAM
+   spill at fleet scale.
+"""
+import math
+import os
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.datapath import QoS
+from repro.fabric import scenarios as SC
+from repro.fabric import topology
+from repro.fabric.fabric import FabricConfig, Flow, run_fabric
+from repro.fabric.switch import N_TC, OutputPort, SwitchConfig
+from repro.fabric.vector import run_fabric_sweep
+
+EXAMPLES = int(os.environ.get("FABRIC_TEST_EXAMPLES", "6"))
+# the slow-marked deep variants also follow the env var (CI's slow job
+# raises it), but never drop below their own floor
+DEEP_EXAMPLES = max(30, EXAMPLES)
+SIM_S = 0.015
+
+# --------------------------------------------------------------------------- #
+# golden literals: scalar run_fabric at the commit *before* the per-TC
+# switch refactor (per-link pause), sim_time_s=0.015, dt=1us
+# --------------------------------------------------------------------------- #
+GOLDEN = {
+    "incast8_jet_pfc": dict(
+        goodput=[0.5333333333333341, 0.5333333333333319,
+                 0.5333333333333341, 0.5333333333333319,
+                 0.5333333333333341, 0.5333333333333319,
+                 0.5333333333333341, 0.5333333333333357,
+                 7.886817239667703],
+        completion=[320.0] * 8 + [math.inf],
+        pause_fanout=3,
+        pause_link_us={("leaf0", "spine0"): 127.0,
+                       ("spine0", "leaf1"): 160.0,
+                       ("spine1", "leaf1"): 160.0},
+        ecn_marked=10185267.893679425,
+        victim=7.886817239667703,
+        incast_fct=320.0,
+    ),
+    "incast8_ddio_pfc": dict(
+        goodput=[0.5333333333333324, 0.533333333333333,
+                 0.5333333333333341, 0.533333333333333,
+                 0.5333333333333341, 0.533333333333333,
+                 0.5333333333333341, 0.5333333333333338,
+                 3.359098529481528],
+        completion=[481.0] + [402.0] * 7 + [math.inf],
+        pause_fanout=3,
+        pause_link_us={("leaf0", "spine0"): 164.0,
+                       ("spine0", "leaf1"): 200.0,
+                       ("spine1", "leaf1"): 200.0},
+        ecn_marked=10251117.670557445,
+        victim=3.359098529481528,
+        incast_fct=481.0,
+    ),
+    "mixed_fleet_pfc": dict(
+        goodput=[0.5333333333333341, 0.5333333333333319,
+                 0.5333333333333341, 0.5333333333333319,
+                 0.5333333333333341, 0.5333333333333319,
+                 0.5333333333333341, 0.5333333333333357,
+                 3.296417023565302],
+        completion=[320.0] * 8 + [math.inf],
+        pause_fanout=3,
+        pause_link_us={("leaf0", "spine0"): 127.0,
+                       ("spine0", "leaf1"): 160.0,
+                       ("spine1", "leaf1"): 160.0},
+        ecn_marked=10167082.46982359,
+        victim=3.296417023565302,
+        incast_fct=320.0,
+    ),
+}
+
+
+def _golden_scenario(key, per_tc=True):
+    if key == "incast8_jet_pfc":
+        sc = SC.incast(n_senders=8, mode="jet", pfc=True, burst_mb=1.0,
+                       sim_time_s=SIM_S)
+    elif key == "incast8_ddio_pfc":
+        sc = SC.incast(n_senders=8, mode="ddio", pfc=True, burst_mb=1.0,
+                       sim_time_s=SIM_S)
+    else:
+        sc = SC.mixed_fleet(pfc=True, sim_time_s=SIM_S)
+    sc.fabric.switch.per_tc = per_tc
+    return sc
+
+
+def _check_scalar_golden(r, g):
+    F = len(g["goodput"])
+    assert [r.flow_goodput_gbps[f] for f in range(F)] == g["goodput"]
+    assert [r.flow_completion_us[f] for f in range(F)] == g["completion"]
+    assert r.pause_fanout == g["pause_fanout"]
+    assert r.pause_link_us == g["pause_link_us"]
+    assert r.ecn_marked_bytes == g["ecn_marked"]
+    assert r.victim_goodput_gbps == g["victim"]
+    assert r.incast_completion_us == g["incast_fct"]
+
+
+@pytest.mark.parametrize("key", sorted(GOLDEN))
+def test_scalar_single_tc_bit_equal_to_pre_refactor(key):
+    """Classed switch, single-TC workload: bit-equal to the per-link
+    driver the refactor replaced — in both pause modes."""
+    _check_scalar_golden(_golden_scenario(key).run(), GOLDEN[key])
+    _check_scalar_golden(_golden_scenario(key, per_tc=False).run(),
+                         GOLDEN[key])
+
+
+@pytest.mark.parametrize("key", sorted(GOLDEN))
+def test_scalar_per_tc_pause_breakdown_single_tc(key):
+    """With one TC in use, the per-priority breakdown carries the whole
+    pause budget on that class and sums back to pause_link_us."""
+    r = _golden_scenario(key).run()
+    assert all(tc == int(QoS.NORMAL) for _, tc in r.pause_tc_us)
+    for lk, us in r.pause_link_us.items():
+        assert r.pause_tc_us[(lk, int(QoS.NORMAL))] == us
+    r_legacy = _golden_scenario(key, per_tc=False).run()
+    assert all(tc == 0 for _, tc in r_legacy.pause_tc_us)
+
+
+@pytest.fixture(scope="module")
+def single_tc_grid():
+    """incast-8 jet/pfc at both pause granularities in ONE sweep grid
+    (per_tc is a per-point parameter), plus both vector backends."""
+    scens = [_golden_scenario("incast8_jet_pfc", per_tc=True),
+             _golden_scenario("incast8_jet_pfc", per_tc=False)]
+    out_np = run_fabric_sweep(scens, backend="numpy")
+    out_jx = run_fabric_sweep(scens, backend="jax")
+    return out_np, out_jx
+
+
+def _maxrel(a, b):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    m = np.isfinite(a) & np.isfinite(b)
+    assert (np.isfinite(a) == np.isfinite(b)).all()
+    if not m.any():
+        return 0.0
+    return float(np.max(np.abs(a[m] - b[m])
+                        / np.maximum(np.abs(b[m]), 1e-9)))
+
+
+def test_vector_single_tc_equivalent_to_per_link(single_tc_grid):
+    """1-TC == old per-link pause in the vector engines: the per-TC and
+    legacy grid points agree with each other and with the pre-refactor
+    scalar goldens (numpy ~1e-13, jax <= 5e-4)."""
+    out_np, out_jx = single_tc_grid
+    g = GOLDEN["incast8_jet_pfc"]
+    for out, tol in ((out_np, 1e-13), (out_jx, 5e-4)):
+        # the two pause granularities are indistinguishable on 1 TC
+        assert _maxrel(out["flow_goodput_gbps"][0],
+                       out["flow_goodput_gbps"][1]) <= tol
+        assert _maxrel(out["flow_completion_us"][0],
+                       out["flow_completion_us"][1]) <= tol
+        np.testing.assert_array_equal(out["pause_fanout"][0],
+                                      out["pause_fanout"][1])
+        # ...and both reproduce the pre-refactor scalar numbers
+        for i in range(2):
+            assert _maxrel(out["flow_goodput_gbps"][i],
+                           g["goodput"]) <= tol
+            assert _maxrel(out["flow_completion_us"][i],
+                           g["completion"]) <= tol
+            assert out["pause_fanout"][i] == g["pause_fanout"]
+            assert _maxrel(out["victim_goodput_gbps"][i],
+                           g["victim"]) <= tol
+    # per-TC pause budget sits on the (single) NORMAL class in the
+    # classed point and on TC 0 in the legacy point, same total
+    tc_np = single_tc_grid[0]["pause_tc_total_us"]
+    assert tc_np[0, int(QoS.NORMAL)] == tc_np[1, 0] > 0
+    assert tc_np[0, [0, 2]].sum() == tc_np[1, 1:].sum() == 0.0
+
+
+def test_vector_single_tc_golden_mixed_fleet():
+    """Same 1-TC == per-link contract on the closed-loop mixed_fleet
+    scenario (escape-ladder CNPs active), vs the pre-refactor goldens."""
+    scens = [_golden_scenario("mixed_fleet_pfc", per_tc=True),
+             _golden_scenario("mixed_fleet_pfc", per_tc=False)]
+    g = GOLDEN["mixed_fleet_pfc"]
+    # numpy: 15000 closed-loop ticks accumulate a few ulps more drift
+    # than the incast grid (matmul class totals vs scalar running sums)
+    for backend, tol in (("numpy", 5e-13), ("jax", 5e-4)):
+        out = run_fabric_sweep(scens, backend=backend)
+        for i in range(2):
+            assert _maxrel(out["flow_goodput_gbps"][i],
+                           g["goodput"]) <= tol, backend
+            assert _maxrel(out["flow_completion_us"][i],
+                           g["completion"]) <= tol, backend
+            assert out["pause_fanout"][i] == g["pause_fanout"], backend
+            assert _maxrel(out["victim_goodput_gbps"][i],
+                           g["victim"]) <= tol, backend
+
+
+# --------------------------------------------------------------------------- #
+# switch-unit mechanics of the classed port
+# --------------------------------------------------------------------------- #
+def _port(**kw):
+    cfg = SwitchConfig(port_buffer_bytes=1 << 20, **kw)
+    return OutputPort(topology.Link("a", "b", 80.0), cfg)
+
+
+def test_port_per_class_buffer_partition():
+    """Each class owns a full port_buffer_bytes partition: one class
+    filling its FIFO drops, the others still have room."""
+    p = _port()
+    assert p.enqueue(0, 3 << 20, 0.0, None, tc=2) == pytest.approx(2 << 20)
+    assert p.tc_bytes(2) == pytest.approx(1 << 20)
+    # LOW is full; HIGH still takes a full buffer without dropping
+    assert p.enqueue(1, 1 << 20, 0.0, None, tc=0) == 0.0
+    assert p.queued_bytes == pytest.approx(2 << 20)
+
+
+def test_port_strict_priority_drain():
+    p = _port()
+    p.enqueue(0, 500 << 10, 0.0, None, tc=2)      # LOW
+    p.enqueue(1, 500 << 10, 0.0, None, tc=0)      # HIGH
+    out = dict((fid, b) for fid, b, _ in p.drain(10.0))
+    # 80 Gbps * 10 us = 100 KB: all of it goes to HIGH
+    assert out[1] == pytest.approx(1e5)
+    assert 0 not in out
+
+
+def test_port_paused_class_keeps_bytes_others_drain():
+    p = _port()
+    p.enqueue(0, 500 << 10, 0.0, None, tc=0)      # HIGH
+    p.enqueue(1, 500 << 10, 0.0, None, tc=2)      # LOW
+    p.paused_tcs = frozenset({0})                 # downstream paused HIGH
+    out = dict((fid, b) for fid, b, _ in p.drain(10.0))
+    assert 0 not in out                           # HIGH held back
+    assert out[1] == pytest.approx(1e5)           # LOW unaffected
+    assert p.pause_us == 10.0
+
+
+def test_port_per_tc_knee_and_watermark_overrides():
+    p = _port(ecn_kmin_frac=0.5,
+              tc_ecn_kmin_frac=(0.5, 0.1, 0.5),
+              pfc_enabled=True, pfc_xoff_frac=0.9,
+              tc_pfc_xoff_frac=(0.9, 0.2, 0.9),
+              tc_pfc_xon_frac=(0.45, 0.1, 0.45))
+    # 300 KB on NORMAL: past its 0.1 knee (102 KB), under the others'
+    p.enqueue(0, 300 << 10, 0.0, ("x", "a"), tc=1)
+    p.enqueue(0, 300 << 10, 0.0, ("x", "a"), tc=1)
+    assert p.marked_bytes == pytest.approx(300 << 10)
+    p.enqueue(1, 300 << 10, 0.0, ("y", "a"), tc=0)
+    p.enqueue(1, 300 << 10, 0.0, ("y", "a"), tc=0)
+    assert p.marked_bytes == pytest.approx(300 << 10)   # HIGH knee not hit
+    p.update_pfc()
+    assert p.tc_asserted == [False, True, False]
+    assert p.pause_targets() == {(("x", "a"), 1)}
+
+
+# --------------------------------------------------------------------------- #
+# isolation acceptance: per-TC pause vs legacy per-link pause
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def qos_mixed_pair():
+    per_tc = SC.qos_mixed_storage(per_tc=True).run()
+    legacy = SC.qos_mixed_storage(per_tc=False).run()
+    return per_tc, legacy
+
+
+def test_qos_mixed_per_tc_isolates_victim_classes(qos_mixed_pair):
+    """ISSUE 4 acceptance: the non-incast classes keep >= 2x the goodput
+    per-priority pause grants them vs the legacy whole-link pause."""
+    per_tc, legacy = qos_mixed_pair
+    for tag in ("oltp", "olap"):
+        assert per_tc.has_tag(tag) and legacy.has_tag(tag)
+        assert per_tc.tagged_goodput(tag) >= 2.0 * legacy.tagged_goodput(tag)
+    # the bulk class itself is pause-bound either way, not helped
+    assert per_tc.tagged_goodput("incast") == \
+        pytest.approx(legacy.tagged_goodput("incast"), rel=0.2)
+
+
+def test_qos_mixed_pause_stays_on_the_bulk_class(qos_mixed_pair):
+    per_tc, legacy = qos_mixed_pair
+    assert {tc for _, tc in per_tc.pause_tc_us} == {int(QoS.LOW)}
+    assert {tc for _, tc in legacy.pause_tc_us} == {0}
+    assert sum(per_tc.pause_tc_us.values()) > 0
+
+
+def test_qos_mixed_low_spill_at_fleet_scale(qos_mixed_pair):
+    """The squeezed Jet receiver pushes the LOW bulk class through the
+    §5 DRAM spill path while per-TC pause keeps the fabric classes
+    isolated — admission QoS and switch QoS working together."""
+    per_tc, _ = qos_mixed_pair
+    assert per_tc.per_host["h1_0"].mem_fallback_bytes > 0
+
+
+def test_qos_mixed_grid_vector_matches_scalar(qos_mixed_pair):
+    per_tc, legacy = qos_mixed_pair
+    scens, pts = SC.qos_mixed_grid()        # per_tc x pool grid
+    order = [pt["per_tc"] for pt in pts]
+    ref = {True: per_tc, False: legacy}
+    F = len(scens[0].flows)
+    gp = np.array([[ref[o].flow_goodput_gbps[f] for f in range(F)]
+                   for o in order])
+    out_np = run_fabric_sweep(scens, backend="numpy")
+    out_jx = run_fabric_sweep(scens, backend="jax")
+    assert _maxrel(out_np["flow_goodput_gbps"], gp) <= 1e-12
+    assert _maxrel(out_jx["flow_goodput_gbps"], gp) <= 5e-4
+    for i, o in enumerate(order):
+        per_cls = [sum(v for (lk, tc), v in ref[o].pause_tc_us.items()
+                       if tc == q) for q in range(N_TC)]
+        np.testing.assert_allclose(out_np["pause_tc_total_us"][i], per_cls)
+
+
+# --------------------------------------------------------------------------- #
+# property: HoL isolation on random fabrics
+# --------------------------------------------------------------------------- #
+def _hol_isolation_case(n_bulk, bulk_gbps, vic_gbps, cls_pick, buf_kb):
+    """Pausing the bulk class must not pull an uncongested victim class
+    below its no-incast baseline (HoL-isolation invariant)."""
+    pairs = [(a, b) for a in range(N_TC) for b in range(N_TC) if a != b]
+    bulk_cls, vic_cls = pairs[cls_pick % len(pairs)]
+    topo = topology.incast_fabric(n_bulk + 1, host_gbps=100.0,
+                                  uplink_gbps=800.0)
+
+    def flows(bulk_start):
+        fl = [Flow(src=f"h0_{i}", dst="h1_0", offered_gbps=bulk_gbps,
+                   start_us=bulk_start, qos=QoS(bulk_cls), tag="incast")
+              for i in range(n_bulk)]
+        # the victim rides its own source host and receiver: only the
+        # fabric links (and their pause state) couple it to the incast
+        fl.append(Flow(src=f"h0_{n_bulk}", dst="h1_1",
+                       offered_gbps=vic_gbps, qos=QoS(vic_cls),
+                       tag="victim"))
+        return fl
+
+    sim_s = 0.0015
+    fcfg = FabricConfig(
+        sim_time_s=sim_s,
+        switch=SwitchConfig(pfc_enabled=True, ecn_enabled=False,
+                            port_buffer_bytes=buf_kb << 10))
+    mk = lambda start: SC.Scenario(        # noqa: E731
+        name="hol", topology=topo, flows=flows(start), fabric=fcfg)
+    # baseline grid point: the bulk class never starts
+    out = run_fabric_sweep([mk(0.0), mk(sim_s * 1e6 + 1.0)],
+                           backend="numpy")
+    incast_run, baseline = (out["victim_goodput_gbps"][i] for i in (0, 1))
+    # the incast point must actually engage PFC, else this is vacuous
+    assert out["pause_fanout"][0] >= 1
+    assert out["pause_tc_total_us"][0, bulk_cls] > 0
+    # ...but never by pausing the victim's class...
+    assert out["pause_tc_total_us"][0, vic_cls] == 0.0
+    # ...so the victim keeps its baseline goodput (8% tolerance for
+    # shared-link scheduling noise)
+    assert incast_run >= baseline * 0.92
+    assert baseline > 0
+
+
+@settings(max_examples=EXAMPLES, deadline=None)
+@given(st.integers(3, 5), st.integers(50, 70), st.integers(5, 35),
+       st.integers(0, 5), st.integers(256, 640))
+def test_hol_isolation_property(n_bulk, bulk_gbps, vic_gbps, cls_pick,
+                                buf_kb):
+    _hol_isolation_case(n_bulk, float(bulk_gbps), float(vic_gbps),
+                        cls_pick, buf_kb)
+
+
+@pytest.mark.slow
+@settings(max_examples=DEEP_EXAMPLES, deadline=None)
+@given(st.integers(3, 5), st.integers(50, 70), st.integers(5, 35),
+       st.integers(0, 5), st.integers(256, 640))
+def test_hol_isolation_property_deep(n_bulk, bulk_gbps, vic_gbps,
+                                     cls_pick, buf_kb):
+    _hol_isolation_case(n_bulk, float(bulk_gbps), float(vic_gbps),
+                        cls_pick, buf_kb)
+
+
+# --------------------------------------------------------------------------- #
+# property: classed engines agree on random multi-class fabrics
+# --------------------------------------------------------------------------- #
+def _equivalence_case(n_leaves, per_leaf, n_spines, flow_specs):
+    topo = topology.clos(n_leaves=n_leaves, hosts_per_leaf=per_leaf,
+                         n_spines=n_spines, host_gbps=100.0,
+                         uplink_gbps=200.0)
+    hosts = topo.hosts
+    flows = []
+    for si, di, load, qos in flow_specs:
+        src, dst = hosts[si % len(hosts)], hosts[di % len(hosts)]
+        if src == dst:
+            dst = hosts[(di + 1) % len(hosts)]
+            if src == dst:
+                continue
+        flows.append(Flow(src=src, dst=dst,
+                          offered_gbps=None if load == 0 else 25.0 * load,
+                          qos=QoS(qos % N_TC), tag="t"))
+    if not flows:
+        return
+    fcfg = FabricConfig(sim_time_s=0.0006,
+                        switch=SwitchConfig(pfc_enabled=True,
+                                            port_buffer_bytes=1 << 18))
+    ref = run_fabric(topo, flows, fcfg)
+    sc = SC.Scenario(name="rand", topology=topo, flows=flows, fabric=fcfg)
+    out = run_fabric_sweep([sc], backend="numpy")
+    F = len(flows)
+    gp_ref = np.array([ref.flow_goodput_gbps[f] for f in range(F)])
+    assert np.allclose(out["flow_goodput_gbps"][0], gp_ref,
+                       rtol=1e-9, atol=1e-9)
+    assert out["ecn_marked_bytes"][0] == pytest.approx(
+        ref.ecn_marked_bytes, rel=1e-9, abs=1e-6)
+    assert out["switch_dropped_bytes"][0] == pytest.approx(
+        ref.switch_dropped_bytes, rel=1e-9, abs=1e-6)
+    assert out["pause_fanout"][0] == ref.pause_fanout
+    per_cls = [sum(v for (lk, tc), v in ref.pause_tc_us.items()
+                   if tc == q) for q in range(N_TC)]
+    np.testing.assert_allclose(out["pause_tc_total_us"][0], per_cls)
+
+
+@settings(max_examples=EXAMPLES, deadline=None)
+@given(st.integers(1, 2), st.integers(2, 3), st.integers(1, 2),
+       st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
+                          st.integers(0, 4), st.integers(0, 2)),
+                min_size=1, max_size=4))
+def test_per_tc_vector_matches_scalar_on_random_fabrics(
+        n_leaves, per_leaf, n_spines, flow_specs):
+    _equivalence_case(n_leaves, per_leaf, n_spines, flow_specs)
+
+
+@pytest.mark.slow
+@settings(max_examples=DEEP_EXAMPLES, deadline=None)
+@given(st.integers(1, 2), st.integers(2, 3), st.integers(1, 2),
+       st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
+                          st.integers(0, 4), st.integers(0, 2)),
+                min_size=1, max_size=5))
+def test_per_tc_vector_matches_scalar_on_random_fabrics_deep(
+        n_leaves, per_leaf, n_spines, flow_specs):
+    _equivalence_case(n_leaves, per_leaf, n_spines, flow_specs)
