@@ -21,6 +21,12 @@ Four parts:
    loop vs the batched-numpy reference; acceptance: <=1e-3 max relative
    deviation on per-flow goodput / incast completion and >=5x warm
    speedup over the scalar loop.
+5. **Routing grid** — the dynamic-routing program: routing mode x
+   link-failure schedule over ``link_failure_incast`` as ONE vector
+   program (per-tick ``[G, F]`` route state, failure masks, spray
+   settling); records warm speedup vs the scalar loop and the
+   numpy-vs-scalar deviation, so the regression gate covers the
+   per-tick routing state too.
 
 Everything is also written machine-readable to
 ``experiments/bench/BENCH_fabric.json`` so the perf trajectory is
@@ -29,6 +35,7 @@ tracked across PRs.  ``--quick`` shrinks sim time and grids for CI.
 from __future__ import annotations
 
 import json
+import math
 import os
 import sys
 import time
@@ -216,6 +223,60 @@ def run_fabric_sweep_bench() -> List[Dict]:
     }]
 
 
+def run_routing_bench() -> List[Dict]:
+    # bursts must overflow the 4 MB downlink buffer partition or the
+    # whole incast teleports past the uplinks (cut-through) before the
+    # failure fires; 8 x 1 MB keeps uplink traffic alive for ms, and
+    # adaptive's post-failure FCT lands ~5 ms -> quick sim stays 8 ms
+    scens, pts = SC.routing_grid(
+        modes=("static_ecmp", "weighted_ecmp", "adaptive", "spray"),
+        fail_at_us=(math.inf, 150.0),
+        sim_time_s=0.008 if QUICK else 0.02, burst_mb=1.0)
+
+    t0 = time.time()
+    scalar = [sc.run() for sc in scens]
+    t_scalar = time.time() - t0
+    t0 = time.time()
+    run_fabric_sweep(scens, backend="jax")
+    t_cold = time.time() - t0
+    t0 = time.time()
+    jx = run_fabric_sweep(scens, backend="jax")
+    t_warm = time.time() - t0
+    t0 = time.time()
+    ref = run_fabric_sweep(scens, backend="numpy")
+    t_np = time.time() - t0
+
+    F = len(scens[0].flows)
+    gp_sc = np.array([[r.flow_goodput_gbps[f] for f in range(F)]
+                      for r in scalar])
+    dev_np = float(np.max(
+        np.abs(ref["flow_goodput_gbps"] - gp_sc)
+        / np.maximum(np.abs(gp_sc), 1e-9)))
+    rr_sc = np.array([r.reroute_count for r in scalar])
+    fct = {(p["routing"], math.isfinite(p["fail_at_us"])):
+           jx["incast_completion_us"][i] for i, p in enumerate(pts)}
+    return [{
+        "grid_points": len(scens),
+        "flows": F,
+        "scalar_run_fabric_s": t_scalar,
+        "numpy_batched_s": t_np,
+        "jax_cold_s": t_cold,
+        "jax_warm_s": t_warm,
+        "speedup_warm": t_scalar / t_warm,
+        # float64 reference vs scalar driver across every routing mode
+        # and failure schedule (routing decisions must agree exactly)
+        "dev_goodput_numpy_vs_scalar": dev_np,
+        "reroutes_match": bool(
+            (ref["reroute_count"] == rr_sc).all()),
+        "static_fail_stalls": bool(
+            not np.isfinite(fct[("static_ecmp", True)])),
+        "adaptive_fail_fct_us": float(fct[("adaptive", True)]),
+        "spray_fail_fct_us": float(fct[("spray", True)]),
+        "max_reroutes": int(ref["reroute_count"].max()),
+        "mean_uplink_util_max": float(ref["uplink_util_max"].mean()),
+    }]
+
+
 def _jsonable(obj):
     """Strict-JSON payload: non-finite floats become None (json.dump's
     Infinity/NaN literals break jq / JSON.parse on the CI artifact)."""
@@ -243,12 +304,15 @@ def main() -> None:
     emit(NAME + "_sweep", sw, quiet=True)
     fs = run_fabric_sweep_bench()
     emit(NAME + "_vector", fs)
+    rt = run_routing_bench()
+    emit(NAME + "_routing", rt)
 
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(JSON_PATH, "w") as f:
         json.dump(_jsonable({"quick": QUICK, "incast": rows,
                              "equivalence": eq, "sweep": sw[0],
-                             "fabric_sweep": fs[0]}), f, indent=2)
+                             "fabric_sweep": fs[0],
+                             "routing": rt[0]}), f, indent=2)
 
     worst_eq = max(r["rel_err"] for r in eq)
     s, v = sw[0], fs[0]
@@ -265,6 +329,12 @@ def main() -> None:
           f"vs scalar run_fabric (acceptance >=5x warm); goodput dev "
           f"{v['dev_goodput_vs_scalar']:.2e}, incast-FCT dev "
           f"{v['dev_incast_fct_vs_scalar']:.2e} (acceptance <=1e-3)")
+    r = rt[0]
+    print(f"# routing grid {r['grid_points']} pts (mode x failure, one "
+          f"program): x{r['speedup_warm']:.1f} warm vs scalar; numpy dev "
+          f"{r['dev_goodput_numpy_vs_scalar']:.2e}; static stalls on "
+          f"failure: {r['static_fail_stalls']}, adaptive FCT "
+          f"{r['adaptive_fail_fct_us']:.0f} us")
     print(f"# machine-readable: {os.path.abspath(JSON_PATH)}")
 
 

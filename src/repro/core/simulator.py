@@ -28,7 +28,7 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
-from .datapath import (ClassBytes, HostDatapath,  # noqa: F401
+from .datapath import (ClassBytes, HostDatapath, N_QOS,  # noqa: F401
                        hold_us_baseline, hold_us_jet)
 from .dcqcn import DcqcnConfig, DcqcnRate
 from .recycle import RecycleModel, paper_default
@@ -67,6 +67,14 @@ class SimConfig:
     rnic_buffer_bytes: int = 2 << 20
     pfc_xoff: float = 0.80
     pfc_xon: float = 0.50
+    # per-class receiver PFC: evaluate the xoff/xon watermarks on each
+    # admission class's occupancy of its 1/N_QOS buffer partition and
+    # pause only that class on the access link (mirrors the switch's
+    # 802.1Qbb per-priority pause, whose watermarks are also fractions
+    # of a per-class partition — evaluating against the *full* shared
+    # buffer would assert too late and forfeit losslessness).  False =
+    # legacy whole-link gate on total occupancy.
+    host_pfc_per_tc: bool = False
     ecn_threshold: float = 0.15
     cnp_interval_us: float = 50.0
     # ConnectX-6 DX marks CNPs on an RNIC-buffer watermark (§2.1); older
@@ -173,6 +181,7 @@ class ReceiverHost:
         self.dp = HostDatapath(c, ticks, dt_us=self.dt)
 
         self.pfc_paused = False
+        self.pfc_paused_cls = [False] * N_QOS  # per-class pause state
         self.pfc_pause_us = 0.0
         self.cnp_count = 0.0
         self.cnp_accum_us = c.cnp_interval_us  # allow an immediate first CNP
@@ -199,6 +208,16 @@ class ReceiverHost:
     @property
     def rnic_q(self) -> float:
         return self.dp.rnic_q
+
+    @property
+    def paused_classes(self) -> frozenset:
+        """QoS classes currently paused on the access link.  Legacy
+        whole-link mode reports every class while paused — the gate
+        stalls them all."""
+        if self.cfg.host_pfc_per_tc:
+            return frozenset(i for i, p in enumerate(self.pfc_paused_cls)
+                             if p)
+        return frozenset(range(N_QOS)) if self.pfc_paused else frozenset()
 
     @property
     def resident(self) -> float:
@@ -255,11 +274,29 @@ class ReceiverHost:
         # ---- congestion signalling ---------------------------------------- #
         q_frac = self.dp.rnic_q / c.rnic_buffer_bytes
         if c.pfc_enabled:
-            if self.pfc_paused:
-                if q_frac < c.pfc_xon:
-                    self.pfc_paused = False
-            elif q_frac > c.pfc_xoff:
-                self.pfc_paused = True
+            if c.host_pfc_per_tc:
+                # per-class watermarks on each class's 1/N_QOS buffer
+                # partition: the congested class pauses without stalling
+                # the others, and the summed assert points leave the
+                # same headroom as the legacy whole-buffer gate (pausing
+                # on fractions of the *total* buffer would fire too late
+                # and drop — the receiver-side twin of the switch's
+                # partitioned per-priority watermarks)
+                share = c.rnic_buffer_bytes / N_QOS
+                for i in range(N_QOS):
+                    fr = self.dp.qos_q[i] / share
+                    if self.pfc_paused_cls[i]:
+                        if fr < c.pfc_xon:
+                            self.pfc_paused_cls[i] = False
+                    elif fr > c.pfc_xoff:
+                        self.pfc_paused_cls[i] = True
+                self.pfc_paused = any(self.pfc_paused_cls)
+            else:
+                if self.pfc_paused:
+                    if q_frac < c.pfc_xon:
+                        self.pfc_paused = False
+                elif q_frac > c.pfc_xoff:
+                    self.pfc_paused = True
             if self.pfc_paused:
                 self.pfc_pause_us += dt
         # RNIC-watermark CNPs (ConnectX-6 DX feature, §2.1)

@@ -1,6 +1,12 @@
 """Multi-host RDCA fabric: Clos topologies, switches, hosts, driver, sweeps.
 
 - topology:  leaf–spine Clos graphs + presets (jet_testbed, incast_fabric)
+             with per-link up/down state and scheduled failure events
+             (`Topology.fail_link`)
+- routing:   first-class per-tick path selection (`RoutingConfig`):
+             static ECMP / flowlet-weighted ECMP / adaptive
+             least-congested / packet spray, with link-failure rerouting
+             — see "The routing layer" below
 - switch:    output-queued switch with per-traffic-class queues (one
              FIFO + buffer partition + ECN knee + PFC xoff/xon pair per
              TC; pause targets are `(ingress link, tc)` pairs, 802.1Qbb
@@ -63,6 +69,52 @@ Choosing an engine
     ``backend="numpy"``) and turns minutes-per-grid into seconds.  Grid
     points must share topology *structure* (same flows/routes/ticks).
 
+The routing layer
+-----------------
+Routing used to be construction-time metadata (`Topology.route` froze a
+`flow -> path` dict).  It is now a per-tick layer shared by every
+engine: `FabricConfig.routing` selects a :class:`~repro.fabric.routing
+.RoutingConfig` mode and the spine choice of each cross-leaf flow is
+resolved every tick from per-uplink queue depth and link up/down state.
+
+``static_ecmp`` (default)
+    `flow_id % n_spines`, frozen — bit-equal to the pre-routing-layer
+    driver (golden-tested in tests/test_routing.py) and the baseline
+    the dynamic modes are judged against.
+``weighted_ecmp``
+    Deterministic flowlet re-hash every `flowlet_us` (immediately on a
+    dead path), weighted by per-uplink free buffer space.
+``adaptive``
+    Per-tick least-congested uplink with a `hysteresis_frac` flap
+    guard.
+``spray``
+    Per-tick proportional byte split across all up spines; the reorder
+    cost is a `spray_settle_us` delay before sprayed arrivals reach
+    receiver admission.
+
+`Topology.fail_link(src, dst, at_us, restore_us)` schedules link
+failures: in-flight bytes on the dead link are dropped and re-credited
+(fluid go-back-N) and dynamic modes reroute around it, which is the
+`scenarios.link_failure_incast` / `routing_grid` experiment (adaptive
+and spray complete the incast after a failure that stalls static ECMP).
+Observability: `FabricResult.uplink_util` / `flow_reroutes` /
+`uplink_imbalance()`, and `uplink_util[_max/_mean]` + `reroute_count`
+in sweep outputs.
+
+The vector engines treat routing mode, failure schedules, WRR
+scheduling and per-TC host PFC as *per-point parameters*: the old
+"grid points must share routes" restriction is lifted (points must
+only share node/link structure and the flow set), so one
+`run_fabric_sweep` program can compare `static_ecmp` against
+`adaptive` under a mid-burst uplink failure (`scenarios.routing_grid`).
+Grids whose points are all static ECMP without failures keep the
+original single-path program, bit-for-bit.  One caveat: in a
+dynamic-routing grid, pause targeting is candidate-ingress-granular
+for every point (a rerouted flow's queued bytes have mixed
+provenance), matching the scalar driver's behaviour for dynamic
+scenarios — keep PFC'd static baselines in their own static grid when
+bit-parity with the frozen-route program matters.
+
 Per-TC queue support across engines
 -----------------------------------
 Every engine implements the classed switch identically (the test suite
@@ -82,9 +134,12 @@ pre-refactor switch for single-class traffic in every engine).
 from .fabric import (FabricConfig, FabricResult, Flow, burst_done_bytes,
                      run_fabric)
 from .hosts import HostFeedback, ReceiverHost, SenderHost
+from .routing import ROUTING_MODES, RoutingConfig
 from .scenarios import (Scenario, all_to_all, fabric_grid, incast,
-                        mixed_fleet, mixed_fleet_grid, qos_mixed_grid,
-                        qos_mixed_storage, single_pair, storage_mix)
+                        link_failure_incast, mixed_fleet,
+                        mixed_fleet_grid, olap_shuffle, qos_mixed_grid,
+                        qos_mixed_storage, routing_grid, single_pair,
+                        storage_mix)
 from .switch import OutputPort, Switch, SwitchConfig
 from .sweep import SweepParams, grid_configs, run_sweep
 from .topology import Link, Topology, clos, incast_fabric, jet_testbed
@@ -92,11 +147,12 @@ from .vector import FabricSweepParams, run_fabric_sweep
 
 __all__ = [
     "FabricConfig", "FabricResult", "FabricSweepParams", "Flow",
-    "HostFeedback", "Link", "OutputPort", "ReceiverHost", "Scenario",
-    "SenderHost", "Switch", "SwitchConfig", "SweepParams", "Topology",
-    "all_to_all", "burst_done_bytes", "clos", "fabric_grid",
-    "grid_configs", "incast", "incast_fabric", "jet_testbed",
-    "mixed_fleet", "mixed_fleet_grid", "qos_mixed_grid",
-    "qos_mixed_storage", "run_fabric", "run_fabric_sweep", "run_sweep",
-    "single_pair", "storage_mix",
+    "HostFeedback", "Link", "OutputPort", "ROUTING_MODES",
+    "ReceiverHost", "RoutingConfig", "Scenario", "SenderHost", "Switch",
+    "SwitchConfig", "SweepParams", "Topology", "all_to_all",
+    "burst_done_bytes", "clos", "fabric_grid", "grid_configs", "incast",
+    "incast_fabric", "jet_testbed", "link_failure_incast", "mixed_fleet",
+    "mixed_fleet_grid", "olap_shuffle", "qos_mixed_grid",
+    "qos_mixed_storage", "routing_grid", "run_fabric",
+    "run_fabric_sweep", "run_sweep", "single_pair", "storage_mix",
 ]

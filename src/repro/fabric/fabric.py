@@ -2,6 +2,12 @@
 
 Per 1 us fluid tick (same timebase as the single-host simulator):
 
+0. scheduled link failures fire (in-flight bytes on a dead link are
+   dropped and re-credited — fluid go-back-N) and the routing layer
+   resolves each cross-leaf flow's spine choice / spray split from
+   per-uplink queue depth and link up/down state
+   (:mod:`repro.fabric.routing`; ``static_ecmp`` keeps the frozen
+   pre-routing-layer next hops, bit-for-bit);
 1. every flow's DCQCN machine offers bytes into its host NIC queue;
 2. queues forward in tier order (host->leaf, leaf->spine, spine->leaf,
    leaf->host), so an uncongested byte traverses the fabric in one tick —
@@ -44,6 +50,8 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 from ..core.datapath import N_QOS, QoS
 from ..core.simulator import SimConfig, SimResult, testbed_100g
 from .hosts import ReceiverHost, SenderHost
+from .routing import (RoutingConfig, adaptive_pick, flowlet_hash,
+                      spray_weights, weighted_pick)
 from .switch import OutputPort, PauseKey, Switch, SwitchConfig
 from .topology import LinkKey, Topology
 
@@ -95,6 +103,11 @@ class FabricConfig:
     # switch marks) cuts its sender's DCQCN rate this many microseconds
     # later.  0.0 = same-tick delivery (the pre-delay behaviour).
     cnp_delay_us: float = 0.0
+    # per-tick path selection over the spine candidates (static ECMP,
+    # flowlet-weighted ECMP, adaptive least-congested, packet spray) —
+    # see repro.fabric.routing.  static_ecmp reproduces the pre-routing-
+    # layer driver bit-for-bit.
+    routing: RoutingConfig = dataclasses.field(default_factory=RoutingConfig)
 
 
 @dataclasses.dataclass
@@ -117,6 +130,26 @@ class FabricResult:
     # summing over links per tc gives the class-level pause budget.
     pause_tc_us: Dict[PauseKey, float] = \
         dataclasses.field(default_factory=dict)
+    # routing-layer observability: fraction of each leaf->spine uplink's
+    # capacity-time actually carried, and how often flows changed spine
+    # (0 everywhere under static_ecmp)
+    uplink_util: Dict[LinkKey, float] = \
+        dataclasses.field(default_factory=dict)
+    flow_reroutes: Dict[int, int] = dataclasses.field(default_factory=dict)
+    reroute_count: int = 0
+
+    def uplink_imbalance(self) -> float:
+        """Load-balance quality: max/mean utilization over ALL fabric
+        uplinks (an idle uplink is imbalance — perfect spraying scores
+        1.0, everything piled on one of N uplinks scores N).  0.0
+        (never NaN) when the fabric has no uplinks or carried nothing,
+        so sweep summaries can aggregate it unconditionally — same
+        contract as :meth:`tagged_goodput`."""
+        vals = list(self.uplink_util.values())
+        if not vals:
+            return 0.0
+        mean = sum(vals) / len(vals)
+        return max(vals) / mean if mean > 0.0 else 0.0
 
     def has_tag(self, tag: str) -> bool:
         return any(t == tag for t in self.flow_tags.values())
@@ -139,14 +172,50 @@ def run_fabric(topo: Topology, flows: List[Flow],
     ticks = int(fcfg.sim_time_s * 1e6 / dt)
 
     # -- build components ---------------------------------------------------
+    rcfg = fcfg.routing
+    spines = topo.spines
+    n_sp = len(spines)
+    F = len(flows)
+    fail_ticks = topo.failure_ticks(dt)
+    if any(fcfg.receiver_cfg(h).host_pfc_per_tc
+           for h in sorted({f.dst for f in flows})) \
+            and not fcfg.switch.per_tc:
+        # the receiver's per-class gate pauses (access link, tc) pairs;
+        # with a single-queue legacy switch those classes don't exist on
+        # the wire, and silently falling back to the whole-link gate
+        # would diverge from the per-class watermark arithmetic
+        raise ValueError("host_pfc_per_tc requires SwitchConfig.per_tc")
+    # dynamic-routing land: per-tick spine selection and/or link-failure
+    # events.  Static ECMP without failures takes the frozen next_hop
+    # fast path below, bit-equal to the pre-routing-layer driver.
+    dyn = rcfg.is_dynamic or bool(fail_ticks)
+
     senders: Dict[int, SenderHost] = {}
     next_hop: Dict[Tuple[str, int], str] = {}      # (node, fid) -> next node
-    flow_path: Dict[int, List[str]] = {}
+    cross_flows: List[int] = []                    # rerouteable flow ids
+    flow_leaves: Dict[int, Tuple[str, str]] = {}   # fid -> (src, dst leaf)
+    cur_spine: Dict[int, int] = {}                 # current spine index
+    route_frac: Dict[int, Dict[str, float]] = {}   # fid -> {spine: frac}
+    flow_reroutes: Dict[int, int] = {fid: 0 for fid in range(F)}
     for fid, f in enumerate(flows):
-        nodes = topo.route(f.src, f.dst, fid)
-        flow_path[fid] = nodes
-        for a, b in zip(nodes, nodes[1:]):
-            next_hop[(a, fid)] = b
+        nodes = topo.route(f.src, f.dst, fid)      # validates + static path
+        sl, dl = topo.host_leaf[f.src], topo.host_leaf[f.dst]
+        flow_leaves[fid] = (sl, dl)
+        next_hop[(f.src, fid)] = sl
+        if sl == dl:
+            next_hop[(sl, fid)] = f.dst
+        else:
+            next_hop[(dl, fid)] = f.dst
+            for s in spines:                       # any spine forwards down
+                next_hop[(s, fid)] = dl
+            if dyn:
+                # the leaf->spine hop is resolved per tick: no frozen
+                # next_hop entry; the drain falls through to route_frac
+                cross_flows.append(fid)
+                cur_spine[fid] = fid % n_sp
+                route_frac[fid] = {spines[fid % n_sp]: 1.0}
+            else:
+                next_hop[(sl, fid)] = nodes[2]
         senders[fid] = SenderHost(
             line_rate_gbps=topo.access_gbps(f.src),
             offered_gbps=f.offered_gbps, burst_bytes=f.burst_bytes,
@@ -169,6 +238,56 @@ def run_fabric(topo: Topology, flows: List[Flow],
     for name in topo.leaves + topo.spines:
         out = [l for l in topo.links.values() if l.src == name]
         switches[name] = Switch(name, out, fcfg.switch)
+    port_by_link: Dict[LinkKey, OutputPort] = {
+        p.link.key: p for p in nic_ports.values()}
+    for sw in switches.values():
+        for p in sw.ports.values():
+            port_by_link[p.link.key] = p
+
+    if dyn:
+        # pause targeting in dynamic-routing land covers the whole
+        # candidate ingress set of every queued flow (mixed provenance
+        # under spraying/rerouting; see OutputPort.static_ingress)
+        ingress: Dict[LinkKey, Dict[int, Tuple[LinkKey, ...]]] = {}
+        for fid, f in enumerate(flows):
+            sl, dl = flow_leaves[fid]
+            acc = (f.src, sl)
+            if sl == dl:
+                ingress.setdefault((sl, f.dst), {})[fid] = (acc,)
+            else:
+                for s in spines:
+                    ingress.setdefault((sl, s), {})[fid] = (acc,)
+                    ingress.setdefault((s, dl), {})[fid] = ((sl, s),)
+                ingress.setdefault((dl, f.dst), {})[fid] = tuple(
+                    (s, dl) for s in spines)
+        for lk, m in ingress.items():
+            port_by_link[lk].static_ingress = m
+
+    # spray reorder settling: sprayed arrivals wait settle_ticks before
+    # entering receiver admission (per-flow ring, 0 = pass-through)
+    settle_ticks = int(round(rcfg.spray_settle_us / dt)) \
+        if rcfg.mode == "spray" else 0
+    Hs = settle_ticks + 1
+    if settle_ticks:
+        cross_set = set(cross_flows)
+        settle_f = [settle_ticks if fid in cross_set else 0
+                    for fid in range(F)]
+        ring_b = [[0.0] * Hs for _ in range(F)]
+        ring_m = [[0.0] * Hs for _ in range(F)]
+
+    # per-uplink carried bytes (load-balance observability)
+    uplink_tx: Dict[LinkKey, float] = {
+        l.key: 0.0 for leaf in topo.leaves for l in topo.uplinks(leaf)}
+
+    # routing-step invariants: decision constants and the cross-leaf
+    # flows grouped by (source leaf, dest leaf) — uplink occupancy is a
+    # per-source-leaf read and the up-mask a per-pair read, not per-flow
+    route_buf = float(fcfg.switch.port_buffer_bytes)
+    route_hyst = rcfg.hysteresis_frac * route_buf
+    route_flet = max(1, int(round(rcfg.flowlet_us / dt)))
+    leaf_pairs: Dict[Tuple[str, str], List[int]] = {}
+    for fid in cross_flows:
+        leaf_pairs.setdefault(flow_leaves[fid], []).append(fid)
 
     # switch traffic class of each flow: the QoS class selects the
     # per-TC queue along the route; legacy per-link mode collapses
@@ -219,27 +338,50 @@ def run_fabric(topo: Topology, flows: List[Flow],
                     .enqueue_batch(items).items():
                 senders[fid].injected -= lost
 
-    def drain_stage(ports, arrivals, batches: Batches) -> None:
+    def drain_stage(ports, arrivals, batches: Batches,
+                    down_now: frozenset) -> None:
         """Drain ``ports`` [(owner switch or None, port)]; forwarded bytes
-        land in next-hop ``batches``, host-bound bytes in ``arrivals``."""
+        land in next-hop ``batches``, host-bound bytes in ``arrivals``.
+        Dead links forward nothing; a cross-leaf flow without a frozen
+        next hop is split over ``route_frac`` (this tick's routing)."""
         for owner, port in ports:
+            lk = port.link.key
+            if lk in down_now:
+                continue
             dst = port.link.dst
             to_host = dst in hosts_set
             # switch-side PFC is per (link, tc); the receiver-side RNIC
-            # gate pauses its whole access link (host PFC is not classed)
-            port.paused_tcs = paused_by_link.get(port.link.key, _no_tcs)
-            port.paused = (to_host and dst in receivers and
-                           receivers[dst].cfg.pfc_enabled and
-                           receivers[dst].pfc_paused)
+            # gate pauses its whole access link, or — with
+            # host_pfc_per_tc — only the congested admission classes
+            port.paused_tcs = paused_by_link.get(lk, _no_tcs)
+            port.paused = False
+            if to_host and dst in receivers:
+                rx = receivers[dst]
+                if rx.cfg.pfc_enabled:
+                    if rx.cfg.host_pfc_per_tc:   # implies switch.per_tc
+                        port.paused_tcs = \
+                            port.paused_tcs | rx.paused_classes
+                    else:
+                        port.paused = rx.pfc_paused
+            track = lk in uplink_tx
             for fid, b, m in port.drain(dt):
+                if track:
+                    uplink_tx[lk] += b
                 if to_host:
                     cur = arrivals.setdefault(dst, {}) \
                         .setdefault(fid, [0.0, 0.0])
                     cur[0] += b
                     cur[1] += m
                 else:
-                    batches.setdefault((dst, next_hop[(dst, fid)]), []) \
-                        .append((fid, b, m, port.link.key, tc_of[fid]))
+                    nh = next_hop.get((dst, fid))
+                    if nh is not None:
+                        batches.setdefault((dst, nh), []) \
+                            .append((fid, b, m, lk, tc_of[fid]))
+                    else:
+                        for sp_name, fr in route_frac[fid].items():
+                            batches.setdefault((dst, sp_name), []) \
+                                .append((fid, b * fr, m * fr, lk,
+                                         tc_of[fid]))
 
     # the four forwarding stages of one tick, in traversal order; a port
     # drains once per tick, after every same-tick upstream stage has
@@ -255,8 +397,23 @@ def run_fabric(topo: Topology, flows: List[Flow],
                   for p in switches[leaf].ports.values()
                   if p.link.dst in hosts_set]
 
+    _no_links: frozenset = frozenset()
     for t in range(ticks):
         now_us = (t + 1) * dt
+        # ---- 0. link failure events --------------------------------------- #
+        down_now = _no_links
+        if fail_ticks:
+            down_now = frozenset(lk for lk, (a, u) in fail_ticks.items()
+                                 if a <= t < u)
+            for lk, (a, _) in fail_ticks.items():
+                if a == t:
+                    port = port_by_link.get(lk)
+                    if port is not None:
+                        # in-flight bytes die with the link; fluid
+                        # go-back-N re-credits them for retransmission
+                        for fid, lost in port.drop_all().items():
+                            senders[fid].injected -= lost
+
         # ---- 1. senders inject into their NIC queue ----------------------- #
         # one batch per NIC port: each class's buffer partition is split
         # proportionally over that class's flows (source-side
@@ -284,12 +441,68 @@ def run_fabric(topo: Topology, flows: List[Flow],
                     batch.append((fid, take, 0.0, None, tc))
             port.enqueue_batch(batch)
 
+        # ---- 1.5 routing layer: per-tick spine selection ------------------ #
+        if rcfg.is_dynamic and n_sp and cross_flows:
+            occ_of_leaf: Dict[str, List[float]] = {}
+            for (sl, dl), pair_fids in leaf_pairs.items():
+                occ = occ_of_leaf.get(sl)
+                if occ is None:
+                    up_ports = switches[sl].ports
+                    occ = occ_of_leaf[sl] = [up_ports[s].queued_bytes
+                                             for s in spines]
+                up = [(sl, s) not in down_now and (s, dl) not in down_now
+                      for s in spines]
+                for fid in pair_fids:
+                    cur = cur_spine[fid]
+                    if rcfg.mode == "adaptive":
+                        new = adaptive_pick(occ, up, cur, route_hyst)
+                    elif rcfg.mode == "weighted_ecmp":
+                        # flowlet boundary (or a dead current path)
+                        # re-hashes onto the free-space-weighted
+                        # candidate distribution
+                        new = cur
+                        if t % route_flet == 0 or not up[cur]:
+                            w = [max(route_buf - occ[i], 0.0)
+                                 if up[i] else 0.0 for i in range(n_sp)]
+                            if sum(w) > 0.0:
+                                new = weighted_pick(
+                                    w, flowlet_hash(fid, t // route_flet))
+                    else:                                   # spray
+                        new = cur
+                        fr = spray_weights(occ, up, route_buf, cur)
+                        route_frac[fid] = {spines[i]: fr[i]
+                                           for i in range(n_sp)
+                                           if fr[i] > 0.0}
+                    if new != cur:
+                        flow_reroutes[fid] += 1
+                        cur_spine[fid] = new
+                    if rcfg.mode != "spray":
+                        route_frac[fid] = {spines[new]: 1.0}
+
         # ---- 2. tier-ordered forwarding ----------------------------------- #
         arrivals: Dict[str, Dict[int, List[float]]] = {}
         for stage in (stage_nic, stage_up, stage_spine, stage_down):
             batches: Batches = {}
-            drain_stage(stage, arrivals, batches)
+            drain_stage(stage, arrivals, batches, down_now)
             flush(batches)
+
+        # ---- 2.5 spray reorder settling ----------------------------------- #
+        if settle_ticks:
+            slot = t % Hs
+            for fid in range(F):
+                ring_b[fid][slot] = 0.0
+                ring_m[fid][slot] = 0.0
+            for host, arr in arrivals.items():
+                for fid, (b, m) in arr.items():
+                    ring_b[fid][slot] = b
+                    ring_m[fid][slot] = m
+            arrivals = {}
+            for fid, f in enumerate(flows):
+                rs = (t - settle_f[fid]) % Hs
+                b = ring_b[fid][rs]
+                if b > 0.0:
+                    arrivals.setdefault(f.dst, {})[fid] = \
+                        [b, ring_m[fid][rs]]
 
         # ---- 3. receivers advance; CNPs route back ------------------------ #
         for host, rx in receivers.items():
@@ -377,6 +590,10 @@ def run_fabric(topo: Topology, flows: List[Flow],
               if f.tag == "incast" and f.burst_bytes is not None]
     victims = [goodput[fid] for fid, f in enumerate(flows)
                if f.tag == "victim"]
+    uplink_util = {}
+    for lk, tx in uplink_tx.items():
+        cap = topo.links[lk].gbps * 1e9 / 8.0 * (sim_us * 1e-6)
+        uplink_util[lk] = tx / cap if cap > 0.0 else 0.0
     return FabricResult(
         per_host=per_host,
         flow_goodput_gbps=goodput,
@@ -394,4 +611,7 @@ def run_fabric(topo: Topology, flows: List[Flow],
         switch_dropped_bytes=sum(s.dropped_bytes()
                                  for s in switches.values())
         + sum(p.dropped_bytes for p in nic_ports.values()),
+        uplink_util=uplink_util,
+        flow_reroutes=dict(flow_reroutes),
+        reroute_count=sum(flow_reroutes.values()),
     )

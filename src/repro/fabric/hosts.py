@@ -6,7 +6,12 @@
 layer; the fabric composes N of them) and is re-exported here alongside
 the fabric-only :class:`SenderHost`.  Fabric arrivals enter its QoS
 admission classes (``Flow.qos``) and its escape-ladder ECN comes back as
-CNPs that the driver routes to the offending DCQCN senders.
+CNPs that the driver routes to the offending DCQCN senders.  Its RNIC
+PFC gate pauses the whole access link by default, or — with
+``SimConfig.host_pfc_per_tc`` — only the congested admission classes
+(``ReceiverHost.paused_classes``), mirroring the switch's per-priority
+pause so a bulk class filling the RNIC buffer no longer stalls OLTP
+traffic sharing the link.
 
 :class:`SenderHost` wraps one DCQCN rate machine per flow, adding burst
 (closed-flow) bookkeeping for the fabric driver.  PFC pause gating is the

@@ -1,0 +1,142 @@
+"""Routing as a first-class layer: per-tick path selection over the Clos.
+
+Before this module, routing was construction-time metadata: ``Topology
+.route`` hashed every flow onto one spine at setup and the drivers froze
+the resulting ``flow -> path`` dict.  That cannot express what hyperscale
+fabrics actually run against incast/PFC pathologies — load-aware path
+selection (adaptive routing, packet spraying; Hoefler et al., "Datacenter
+Ethernet and RDMA: Issues at Hyperscale") — nor link-failure rerouting
+under load.  Now the *spine choice* of every cross-leaf flow is resolved
+per tick from a :class:`RoutingConfig`:
+
+``static_ecmp``
+    The pre-refactor behaviour: spine = ``flow_id % n_spines``, frozen
+    for the whole run (golden-tested bit-equal to the old driver).
+``weighted_ecmp``
+    Flowlet-level re-hash: every ``flowlet_us`` (or immediately when the
+    current path dies) the flow re-picks a spine by a deterministic hash
+    weighted by per-uplink *free* buffer space, so emptier uplinks
+    attract proportionally more flowlets.
+``adaptive``
+    Per-tick least-congested-uplink selection with a hysteresis flap
+    guard: the flow moves only when the best candidate's queue is more
+    than ``hysteresis_frac * port_buffer`` bytes shorter than the
+    current one's (or the current path is down).
+``spray``
+    Per-tick proportional byte split across *all* up spines (weights =
+    free buffer space), i.e. packet-level spraying; the reorder cost is
+    modeled as a ``spray_settle_us`` delay before sprayed arrivals reach
+    receiver admission (delivery only counts after the settling window).
+
+All decision helpers here are pure and deterministic — integer hashing,
+first-minimum tie-breaks — so the scalar driver (float64 Python), the
+batched-numpy reference and the jax engine reproduce each other's
+choices; :mod:`repro.fabric.vector` implements the same arithmetic in
+stacked ``[G, S, F]`` form as per-tick carry state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence
+
+ROUTING_MODES = ("static_ecmp", "weighted_ecmp", "adaptive", "spray")
+
+
+@dataclasses.dataclass
+class RoutingConfig:
+    """Per-fabric routing policy (one mode per scenario / grid point)."""
+    mode: str = "static_ecmp"
+    # weighted_ecmp: re-hash period (a fluid stand-in for flowlet gaps)
+    flowlet_us: float = 50.0
+    # adaptive: move only when the best uplink queue is this fraction of
+    # the port buffer shorter than the current one (flap guard)
+    hysteresis_frac: float = 0.05
+    # spray: reorder-settling delay before sprayed arrivals count as
+    # delivered at the receiver
+    spray_settle_us: float = 8.0
+
+    def __post_init__(self) -> None:
+        if self.mode not in ROUTING_MODES:
+            raise ValueError(f"unknown routing mode {self.mode!r}; "
+                             f"pick one of {ROUTING_MODES}")
+        if self.flowlet_us <= 0.0:
+            raise ValueError("flowlet_us must be positive")
+        if self.hysteresis_frac < 0.0:
+            raise ValueError("hysteresis_frac must be >= 0")
+        if self.spray_settle_us < 0.0:
+            raise ValueError("spray_settle_us must be >= 0")
+
+    @property
+    def is_dynamic(self) -> bool:
+        return self.mode != "static_ecmp"
+
+    def mode_code(self) -> int:
+        """Integer code for stacked per-point parameters (vector engine)."""
+        return ROUTING_MODES.index(self.mode)
+
+
+def flowlet_hash(fid: int, k: int) -> float:
+    """Deterministic hash of (flow id, flowlet index) into [0, 1).
+
+    Kept in int32-safe arithmetic (products stay < 2^31 for any
+    realistic flow count / tick count) so the jax engine computes the
+    identical value; x / 65536 is a power-of-two scale, hence exact in
+    both float32 and float64.
+    """
+    return (((fid + 1) * 40503 + k * 9973) % 65536) / 65536.0
+
+
+def weighted_pick(weights: Sequence[float], h: float) -> int:
+    """First index whose cumulative weight exceeds ``h * total``.
+
+    ``h`` must be in [0, 1); the sequential cumulative sum guarantees a
+    hit on the last positively-weighted index even under float rounding
+    (the vector engine thresholds against the cumsum's own final element
+    for the same reason).  Caller guarantees ``sum(weights) > 0``.
+    """
+    tot = 0.0
+    for w in weights:
+        tot += w
+    thresh = h * tot
+    acc = 0.0
+    for i, w in enumerate(weights):
+        acc += w
+        if acc > thresh:
+            return i
+    return len(weights) - 1
+
+
+def adaptive_pick(occ: Sequence[float], up: Sequence[bool], cur: int,
+                  hyst_bytes: float) -> int:
+    """Least-congested up candidate, with hysteresis against flapping.
+
+    Stays on ``cur`` unless it is down or the best candidate's queue is
+    more than ``hyst_bytes`` shorter.  First-minimum tie-break matches
+    ``argmin`` in the vector engines.
+    """
+    best, bocc = -1, math.inf
+    for i, o in enumerate(occ):
+        if up[i] and o < bocc:
+            best, bocc = i, o
+    if best < 0:                       # every candidate is down: stuck
+        return cur
+    if up[cur] and not (bocc < occ[cur] - hyst_bytes):
+        return cur
+    return best
+
+
+def spray_weights(occ: Sequence[float], up: Sequence[bool],
+                  buffer_bytes: float, cur: int) -> List[float]:
+    """Proportional byte split across up candidates by free buffer space;
+    falls back to the current path when nothing is up (or nothing has
+    room — the flow then keeps hammering its last spine, as a real
+    sprayer with every queue full would)."""
+    w = [max(buffer_bytes - occ[i], 0.0) if up[i] else 0.0
+         for i in range(len(occ))]
+    tot = 0.0
+    for x in w:
+        tot += x
+    if tot <= 0.0:
+        return [1.0 if i == cur else 0.0 for i in range(len(occ))]
+    return [x / tot for x in w]

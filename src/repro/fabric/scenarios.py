@@ -8,11 +8,13 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.datapath import QoS
 from ..core.simulator import SimConfig, testbed_100g
 from .fabric import FabricConfig, Flow
+from .routing import RoutingConfig
 from .switch import SwitchConfig
 from .topology import Topology, clos, incast_fabric, jet_testbed
 
@@ -253,6 +255,87 @@ def qos_mixed_grid(per_tc: Sequence[bool] = (False, True),
         lambda per_tc, pool_mb: qos_mixed_storage(
             per_tc=per_tc, pool_mb=pool_mb, **kw),
         per_tc=list(per_tc), pool_mb=list(pool_mb))
+
+
+def olap_shuffle(n_mappers: int = 4, n_reducers: int = 4,
+                 shuffle_mb: float = 2.0, routing: str = "static_ecmp",
+                 pfc: bool = False, n_spines: int = 2,
+                 sim_time_s: float = 0.02) -> Scenario:
+    """Multi-receiver OLAP shuffle (ROADMAP "scenario breadth"): every
+    mapper on leaf 0 streams one partition to every reducer on leaf 1 —
+    an all-to-all *across* the spine tier, so the uplink choice (not one
+    congested receiver) decides completion time.  The natural stress
+    test for the routing layer: static ECMP piles the ``n_mappers x
+    n_reducers`` partition bursts onto ``flow_id % n_spines`` uplinks
+    while ``weighted_ecmp``/``adaptive``/``spray`` spread them by load.
+    """
+    per_leaf = max(n_mappers, n_reducers)
+    topo = clos(n_leaves=2, hosts_per_leaf=per_leaf, n_spines=n_spines,
+                host_gbps=100.0, uplink_gbps=200.0)
+    flows = [Flow(src=f"h0_{i}", dst=f"h1_{j}",
+                  burst_bytes=shuffle_mb * 1e6 / n_reducers,
+                  qos=QoS.NORMAL, tag="shuffle")
+             for i in range(n_mappers) for j in range(n_reducers)]
+    sw = SwitchConfig(pfc_enabled=pfc)
+    return Scenario(
+        name=f"shuffle{n_mappers}x{n_reducers}_{routing}",
+        topology=topo, flows=flows,
+        fabric=FabricConfig(sim_time_s=sim_time_s, switch=sw,
+                            receiver_cfg=_recv_factory("ddio", pfc),
+                            routing=RoutingConfig(mode=routing)))
+
+
+def link_failure_incast(n_senders: int = 8, mode: str = "ddio",
+                        routing: str = "adaptive", burst_mb: float = 2.0,
+                        fail_at_us: float = 150.0,
+                        restore_us: float = math.inf,
+                        fail_spine: int = 0, pfc: bool = False,
+                        with_victim: bool = True,
+                        uplink_gbps: float = 400.0,
+                        sim_time_s: float = 0.02) -> Scenario:
+    """Failure injection under load (ROADMAP "failure injection"): the
+    incast-N burst is mid-flight when the ``leaf0 -> spine{fail_spine}``
+    uplink dies at ``fail_at_us`` (both directions; back at
+    ``restore_us``, never by default).  Static ECMP keeps hashing half
+    the flows onto the dead spine — their bursts stall until the link
+    returns — while ``adaptive``/``spray`` reroute onto the surviving
+    uplinks, which is exactly the post-failure FCT gap the routing layer
+    exists to show.  ``fail_at_us=inf`` schedules no failure (baseline
+    grid points)."""
+    topo = incast_fabric(n_senders, uplink_gbps=uplink_gbps)
+    if math.isfinite(fail_at_us):
+        topo.fail_link("leaf0", f"spine{fail_spine}", at_us=fail_at_us,
+                       restore_us=restore_us)
+    flows = [Flow(src=f"h0_{i}", dst="h1_0",
+                  burst_bytes=burst_mb * 1e6, tag="incast")
+             for i in range(n_senders)]
+    if with_victim:
+        flows.append(Flow(src=f"h0_{n_senders - 1}", dst="h1_1",
+                          tag="victim"))
+    sw = SwitchConfig(pfc_enabled=pfc)
+    fa = "nofail" if not math.isfinite(fail_at_us) else f"f{fail_at_us:g}"
+    return Scenario(
+        name=f"linkfail{n_senders}_{routing}_{fa}",
+        topology=topo, flows=flows,
+        fabric=FabricConfig(sim_time_s=sim_time_s, switch=sw,
+                            receiver_cfg=_recv_factory(mode, pfc),
+                            routing=RoutingConfig(mode=routing)))
+
+
+def routing_grid(modes: Sequence[str] = ("static_ecmp", "adaptive",
+                                         "spray"),
+                 fail_at_us: Sequence[float] = (math.inf, 150.0),
+                 **kw) -> Tuple[List[Scenario], List[dict]]:
+    """Routing mode x link-failure schedule grid over
+    :func:`link_failure_incast` for :func:`repro.fabric.vector
+    .run_fabric_sweep` — one vector program covers every (mode, failure)
+    combination, which is what the lifted shared-routes restriction
+    buys: routing mode and failure schedules are per-point parameters,
+    not structure."""
+    return fabric_grid(
+        lambda routing, fail_at_us: link_failure_incast(
+            routing=routing, fail_at_us=fail_at_us, **kw),
+        routing=list(modes), fail_at_us=list(fail_at_us))
 
 
 def single_pair(mode: str = "jet", sim_time_s: float = 0.01,

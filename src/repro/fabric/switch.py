@@ -11,8 +11,12 @@ classes, so ``N_TC == N_QOS``), with
   class no longer stalls LOW traffic sharing the same ingress link — the
   per-priority pause granularity real Clos fabrics run (802.1Qbb), which
   the paper's PFC fan-out / HoL measurements assume (§2, §6);
-* strict-priority scheduling across classes on the shared link budget
-  (HIGH drains first), pro rata across flows within a class (fluid
+* inter-class scheduling on the shared link budget: strict priority
+  (HIGH drains first — the default) or deficit-weighted round robin
+  (``SwitchConfig.scheduler="wrr"``): the budget is water-filled across
+  backlogged classes proportionally to per-TC quanta, so a saturated
+  port can no longer starve LOW — at the cost of HIGH's absolute
+  priority.  Both are pro rata across flows within a class (fluid
   approximation of per-class FIFO);
 * per-class buffer space: every class owns a full ``port_buffer_bytes``
   worth of queue memory (the static per-priority-group partition real
@@ -54,10 +58,29 @@ class SwitchConfig:
     # legacy per-link behaviour: every flow rides TC 0, one knee, one
     # watermark pair, and a pause stalls the whole ingress link.
     per_tc: bool = True
+    # inter-class drain discipline: "strict" (priority ladder, HIGH
+    # first — the default and the pre-WRR behaviour) or "wrr" (deficit-
+    # weighted round robin by ``wrr_quanta``, so LOW keeps a weighted
+    # share of a saturated port instead of starving)
+    scheduler: str = "strict"
+    wrr_quanta: Optional[Sequence[float]] = None   # len N_TC; default 4:2:1
     # optional per-TC overrides (len N_TC), falling back to the scalars
     tc_ecn_kmin_frac: Optional[Sequence[float]] = None
     tc_pfc_xoff_frac: Optional[Sequence[float]] = None
     tc_pfc_xon_frac: Optional[Sequence[float]] = None
+
+    def __post_init__(self) -> None:
+        if self.scheduler not in ("strict", "wrr"):
+            raise ValueError(f"unknown scheduler {self.scheduler!r}")
+        if self.wrr_quanta is not None and (
+                len(self.wrr_quanta) != N_TC
+                or any(q <= 0.0 for q in self.wrr_quanta)):
+            raise ValueError(f"wrr_quanta needs {N_TC} positive weights")
+
+    def quanta(self) -> Tuple[float, ...]:
+        q = self.wrr_quanta if self.wrr_quanta is not None \
+            else (4.0, 2.0, 1.0)
+        return tuple(float(x) for x in q)
 
     def kmin_frac(self, tc: int) -> float:
         return (self.tc_ecn_kmin_frac[tc]
@@ -93,6 +116,13 @@ class OutputPort:
         self.tcq: List[Dict[int, _FlowQ]] = [{} for _ in range(N_TC)]
         # which ingress link each queued flow arrived on (pause targeting)
         self.flow_ingress: Dict[int, Optional[LinkKey]] = {}
+        # candidate-ingress override (dynamic routing): flow -> every
+        # ingress link that may feed it here.  When set, pause targets
+        # cover the whole candidate set — a sprayed/rerouted flow's
+        # queued bytes have mixed provenance, so per-arrival tracking
+        # would under-pause; the vector engine's static prev-port
+        # incidence implements the same semantics.
+        self.static_ingress: Optional[Dict[int, Tuple[LinkKey, ...]]] = None
         self.paused = False           # whole-link pause (receiver gate)
         self.paused_tcs: frozenset = _NO_TCS   # downstream per-TC pause
         self.tc_asserted = [False] * N_TC      # this port's per-TC xoff
@@ -189,10 +219,45 @@ class OutputPort:
         self.peak_bytes = max(self.peak_bytes, self._total_bytes)
         return dropped
 
+    def _wrr_fracs(self, budget: float) -> List[float]:
+        """Per-class drained fraction under deficit-weighted round robin:
+        the link budget is water-filled over backlogged unpaused classes
+        proportionally to ``wrr_quanta`` (a class that drains fully
+        releases its leftover to the others).  Unrolled to ``N_TC``
+        rounds with the exact op order of the vector engines, so the
+        float64 reference and this driver make identical grants."""
+        quanta = self.cfg.quanta()
+        rem = list(self._tc_bytes)
+        for tc in self.paused_tcs:
+            rem[tc] = 0.0
+        alloc = [0.0] * N_TC
+        budget_left = budget
+        for _ in range(N_TC):
+            act = [tc for tc in range(N_TC) if rem[tc] > 0.0]
+            if budget_left <= 0.0 or not act:
+                break
+            wsum = 0.0
+            for tc in act:
+                wsum += quanta[tc]
+            b0 = budget_left
+            spent = 0.0
+            for tc in act:
+                take = min(b0 * quanta[tc] / wsum, rem[tc])
+                alloc[tc] += take
+                rem[tc] -= take
+                spent += take
+            budget_left = b0 - spent
+            if budget_left < 1e-6 * budget:   # relative crumb clamp, as
+                budget_left = 0.0             # in the strict ladder
+        return [alloc[tc] / self._tc_bytes[tc]
+                if self._tc_bytes[tc] > 0.0 else 0.0
+                for tc in range(N_TC)]
+
     def drain(self, dt_us: float) -> List[Tuple[int, float, float]]:
         """Forward up to rate*dt bytes; returns [(fid, bytes, marked)].
 
-        Strict priority across classes (TC 0 first), pro rata across
+        Inter-class discipline per ``SwitchConfig.scheduler`` — strict
+        priority (TC 0 first) or weighted round robin — pro rata across
         flows within a class; paused classes keep their bytes and do not
         consume link budget."""
         if self.paused or self.paused_tcs:
@@ -203,12 +268,15 @@ class OutputPort:
             return []
         budget = self.link.gbps * 1e9 / 8.0 * dt_us * 1e-6
         budget_left = budget
+        wrr = self._wrr_fracs(budget) \
+            if self.cfg.scheduler == "wrr" else None
         out: List[Tuple[int, float, float]] = []
         for tc in range(N_TC):
             total = self._tc_bytes[tc]
             if total <= 0.0 or tc in self.paused_tcs:
                 continue
-            frac = min(1.0, budget_left / total)
+            frac = min(1.0, budget_left / total) if wrr is None \
+                else wrr[tc]
             q = self.tcq[tc]
             for fid, fq in list(q.items()):
                 b = fq.bytes * frac
@@ -238,6 +306,22 @@ class OutputPort:
         self._total_bytes = max(0.0, self._total_bytes)
         return out
 
+    def drop_all(self) -> Dict[int, float]:
+        """Drop everything queued (the link just died): clears every
+        class, counts the bytes as drops and returns ``{fid: bytes}`` so
+        the caller can re-credit senders (fluid go-back-N retransmission
+        over whatever path routing picks next)."""
+        lost: Dict[int, float] = {}
+        for q in self.tcq:
+            for fid, fq in q.items():
+                if fq.bytes > 0.0:
+                    lost[fid] = lost.get(fid, 0.0) + fq.bytes
+                    self.dropped_bytes += fq.bytes
+            q.clear()
+        self._tc_bytes = [0.0] * N_TC
+        self._total_bytes = 0.0
+        return lost
+
     def update_pfc(self) -> None:
         if not self.cfg.pfc_enabled:
             return
@@ -253,15 +337,21 @@ class OutputPort:
     def pause_targets(self) -> Set[PauseKey]:
         """``(ingress link, tc)`` pairs this port wants paused: only the
         ingress links of flows actually queued in an over-watermark
-        class — PFC's per-priority granularity (802.1Qbb)."""
+        class — PFC's per-priority granularity (802.1Qbb).  With a
+        ``static_ingress`` candidate map (dynamic routing), every
+        ingress link that may feed a queued flow is targeted."""
         out: Set[PauseKey] = set()
         for tc in range(N_TC):
             if not self.tc_asserted[tc]:
                 continue
             for fid in self.tcq[tc]:
-                lk = self.flow_ingress.get(fid)
-                if lk is not None:
-                    out.add((lk, tc))
+                if self.static_ingress is not None:
+                    for lk in self.static_ingress.get(fid, ()):
+                        out.add((lk, tc))
+                else:
+                    lk = self.flow_ingress.get(fid)
+                    if lk is not None:
+                        out.add((lk, tc))
         return out
 
 

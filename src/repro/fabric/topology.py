@@ -1,17 +1,25 @@
 """Leaf–spine Clos topologies for the multi-host RDCA fabric.
 
 A topology is a set of hosts, leaf switches and spine switches joined by
-unidirectional capacity-annotated links.  Routing is deterministic ECMP:
-a flow hashes onto one spine (cross-leaf) or short-circuits through its
-leaf (intra-leaf), mirroring the paper's testbed where all hosts hang off
-a Clos fabric (§2.1, §6.1).
+unidirectional capacity-annotated links.  :meth:`Topology.route` gives
+the *static ECMP* path (flow hashes onto one spine, cross-leaf; or
+short-circuits through its leaf, intra-leaf) — the pre-routing-layer
+behaviour and still the ``static_ecmp`` baseline.  Dynamic path
+selection lives in :mod:`repro.fabric.routing`; this module contributes
+the *candidate* structure (:meth:`candidate_spines`) and per-link
+up/down state with scheduled failure events (:meth:`fail_link`), which
+the drivers turn into per-tick reroutes under load.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Tuple
 
 LinkKey = Tuple[str, str]                  # (src node, dst node)
+
+# failure-schedule sentinel for "never" in integer tick space
+NEVER_TICK = 1 << 30
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +40,10 @@ class Topology:
     spines: List[str]
     links: Dict[LinkKey, Link]             # both directions present
     host_leaf: Dict[str, str]              # host -> its leaf
+    # scheduled failure windows: link key -> (down_at_us, restore_us);
+    # a link is down while down_at_us <= t < restore_us
+    link_down: Dict[LinkKey, Tuple[float, float]] = \
+        dataclasses.field(default_factory=dict)
 
     # -- queries ------------------------------------------------------------
     def link(self, src: str, dst: str) -> Link:
@@ -75,6 +87,48 @@ class Topology:
         nodes = self.route(src_host, dst_host, flow_id)
         return [self.links[(a, b)] for a, b in zip(nodes, nodes[1:])]
 
+    def candidate_spines(self, src_host: str, dst_host: str) -> List[str]:
+        """Spines that can carry this pair's traffic (the ECMP candidate
+        set a dynamic routing mode chooses from); empty for intra-leaf
+        pairs, which never transit a spine."""
+        if self.host_leaf[src_host] == self.host_leaf[dst_host]:
+            return []
+        return list(self.spines)
+
+    # -- link failure schedule ----------------------------------------------
+    def fail_link(self, src: str, dst: str, at_us: float,
+                  restore_us: float = math.inf,
+                  bidi: bool = True) -> "Topology":
+        """Schedule a link failure: ``(src, dst)`` goes down at ``at_us``
+        and comes back at ``restore_us`` (default: never).  ``bidi``
+        fails the reverse direction too — the physical-link semantics.
+        Returns ``self`` for chaining."""
+        if (src, dst) not in self.links:
+            raise ValueError(f"no link {src}->{dst} to fail")
+        if at_us < 0.0 or restore_us <= at_us:
+            raise ValueError("need 0 <= at_us < restore_us")
+        self.link_down[(src, dst)] = (at_us, restore_us)
+        if bidi:
+            self.link_down[(dst, src)] = (at_us, restore_us)
+        return self
+
+    def link_up_at(self, key: LinkKey, now_us: float) -> bool:
+        w = self.link_down.get(key)
+        return w is None or not (w[0] <= now_us < w[1])
+
+    def failure_ticks(self, dt_us: float) -> Dict[LinkKey,
+                                                  Tuple[int, int]]:
+        """Failure windows as integer tick indices (down while
+        ``at <= t < until``); ``NEVER_TICK`` encodes +inf so every
+        engine compares the same int32-safe values."""
+        out = {}
+        for key, (a, u) in self.link_down.items():
+            at = max(0, int(round(a / dt_us)))
+            until = NEVER_TICK if math.isinf(u) \
+                else max(at + 1, int(round(u / dt_us)))
+            out[key] = (at, until)
+        return out
+
     # -- invariants ----------------------------------------------------------
     def validate(self) -> None:
         names = self.hosts + self.leaves + self.spines
@@ -102,6 +156,10 @@ class Topology:
         # every host pair must be routable
         if len(self.leaves) > 1 and not self.spines:
             raise ValueError("multi-leaf topology requires spines")
+        for key in self.link_down:
+            if key not in self.links:
+                raise ValueError(f"failure scheduled on unknown link "
+                                 f"{key[0]}->{key[1]}")
 
 
 def _bidi(links: Dict[LinkKey, Link], a: str, b: str, gbps: float) -> None:

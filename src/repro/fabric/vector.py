@@ -21,8 +21,16 @@ tick body into stacked arrays and advances all grid points at once:
   stacked ``[G, Q, R]`` block (``Q = 3`` service classes, priority-order
   space/drain grants, §5 low-QoS DRAM spill) — plus ``[R, H]`` circular
   release rings (the ``sweep.py`` ring trick);
-* static routing from :meth:`Topology.route` precomputed into flow->port
-  incidence one-hots, so each forwarding stage is a gather, a batch
+* routing as per-tick state: on the static fast path (every point
+  ``static_ecmp`` with no failure schedule) :meth:`Topology.route` is
+  precomputed into flow->port incidence one-hots exactly as before; in
+  dynamic-routing land the port set covers every *candidate* uplink/
+  downlink (``[S, F, P]`` one-hots), the spine choice is a ``[G, F]``
+  scan carry updated each tick (argmin/hash/softmax-free weight
+  arithmetic identical to :mod:`repro.fabric.routing`), link failures
+  are per-point ``[G, P]`` tick windows that zero budgets and drop
+  in-flight bytes, and spray's reorder settling is one more slot-major
+  ring.  Either way each forwarding stage stays a gather, a batch
   enqueue and a scatter — no data-dependent control flow.
 
 One ``jax.vmap`` over the scenario grid x one ``jax.lax.scan`` over ticks
@@ -41,25 +49,34 @@ in over-watermark classes.  A
 1-sender/1-receiver grid therefore reproduces ``run_sim`` goodput, and
 small incast grids match the scalar driver per flow.
 
-Grid points must share the topology *structure* (same flows, same
-routes, same receiver set, same tick count); everything numeric may vary
-per point: receiver ``SimConfig`` knobs, ``SwitchConfig`` scalars, link
-rates, per-flow offered load / burst size / start time.
+Grid points must share the topology *structure* (same node/link graph,
+same flows, same receiver set, same tick count); everything numeric may
+vary per point: receiver ``SimConfig`` knobs, ``SwitchConfig`` scalars
+(including the strict/WRR scheduler and per-TC host PFC), link rates,
+per-flow offered load / burst size / start time, and — the PR 5 lift —
+routing mode and link-failure schedules.  The former "grid points must
+share routes" restriction only survives on the static fast path, where
+frozen routes *are* the structure.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.datapath import N_QOS
 from ..core.dcqcn import DcqcnConfig
 from .hosts import hold_us_baseline, hold_us_jet
+from .topology import NEVER_TICK
 from ._scan import pick_unroll
 
 _STAGES = 4          # NIC egress, leaf uplink, spine, leaf downlink
+
+# pvals entries that stay integer (tick indices, codes, ring offsets)
+_INT_KEYS = frozenset(["d_base", "d_strag", "cnp_dly", "fail_at",
+                       "fail_until", "rmode", "flet", "settle", "sched"])
 
 
 # --------------------------------------------------------------------------- #
@@ -142,6 +159,21 @@ class FabricSweepParams:
     ring_len: int
     cnp_ring: int                        # CNP propagation ring length
     structure_key: str
+    # -- dynamic-routing structure (None on the static fast path) -----------
+    # With any point in dynamic-routing land (mode != static_ecmp or a
+    # failure schedule), ports cover every *candidate* uplink/downlink
+    # and the spine choice becomes per-tick carry state [G, F].
+    upP: Optional[np.ndarray] = None     # [S, F, P] candidate uplink 1-hot
+    dnP: Optional[np.ndarray] = None     # [S, F, P] candidate downlink
+    candS: Optional[np.ndarray] = None   # [S, F] bool candidacy
+    crossF: Optional[np.ndarray] = None  # [F] bool: cross-leaf flow
+    T1: Optional[np.ndarray] = None      # [P, F, P] uplink->downlink map
+    init_spine: Optional[np.ndarray] = None   # [F] int32 (fid % S)
+    dyn_route: bool = False
+    any_wrr: bool = False                # any point schedules WRR drain
+    host_tc: bool = False                # any point runs per-TC host PFC
+    settle_ring: int = 1                 # Hs (spray reorder settling)
+    n_spines: int = 0
 
     @classmethod
     def from_scenarios(cls, scens: Sequence) -> "FabricSweepParams":
@@ -154,8 +186,15 @@ class FabricSweepParams:
         dt = s0.fabric.dt_us
         ticks = int(s0.fabric.sim_time_s * 1e6 / dt)
         F = len(flows0)
-        routes = [topo0.route(f.src, f.dst, fid)
-                  for fid, f in enumerate(flows0)]
+        # engine-level capability flags: shared *structure*, selected per
+        # point by plain parameters (rmode / sched / hpfc)
+        dyn = any(s.fabric.routing.is_dynamic or bool(s.topology.link_down)
+                  for s in scens)
+        any_wrr = any(s.fabric.switch.scheduler == "wrr" for s in scens)
+        recv_hosts = sorted({f.dst for f in flows0})
+        host_tc = any(s.fabric.switch.per_tc
+                      and s.fabric.receiver_cfg(h).host_pfc_per_tc
+                      for s in scens for h in recv_hosts)
         for s in scens:
             s.topology.validate()
             if s.fabric.dt_us != dt or \
@@ -168,10 +207,29 @@ class FabricSweepParams:
                 raise ValueError("grid points must share the flow set "
                                  "(src/dst/tag/qos); offered/burst/start "
                                  "may vary")
-            if any(s.topology.route(f.src, f.dst, fid) != routes[fid]
-                   for fid, f in enumerate(s.flows)):
-                raise ValueError("grid points must share routes (same "
-                                 "topology structure)")
+        if not dyn:
+            # static fast path: routes are frozen structure and must agree
+            routes = [topo0.route(f.src, f.dst, fid)
+                      for fid, f in enumerate(flows0)]
+            for s in scens:
+                if any(s.topology.route(f.src, f.dst, fid) != routes[fid]
+                       for fid, f in enumerate(s.flows)):
+                    raise ValueError("grid points must share routes (same "
+                                     "topology structure)")
+        else:
+            # dynamic-routing land: routes are per-tick state, so only the
+            # node/link *structure* must agree; routing mode and failure
+            # schedules are per-point parameters
+            for s in scens:
+                tt = s.topology
+                if (sorted(tt.links) != sorted(topo0.links)
+                        or tt.host_leaf != topo0.host_leaf
+                        or tt.spines != topo0.spines
+                        or tt.leaves != topo0.leaves):
+                    raise ValueError(
+                        "grid points must share topology structure "
+                        "(nodes and links); link rates, failure "
+                        "schedules and routing mode may vary")
 
         # ---- ports on some flow's path, tagged with their stage ---------- #
         port_id: Dict[Tuple[str, str], int] = {}
@@ -185,56 +243,124 @@ class FabricSweepParams:
                 raise ValueError(f"port {key} used in two stages")
             return pid
 
-        stage_ports = np.full((_STAGES, F), -1, np.int32)
-        prev_port = np.full((_STAGES, F), -1, np.int32)
-        for fid, nodes in enumerate(routes):
-            if len(nodes) == 3:                       # intra-leaf
-                src, leaf, dst = nodes
-                p0 = add((src, leaf), 0)
-                p3 = add((leaf, dst), 3)
-                stage_ports[0, fid], stage_ports[3, fid] = p0, p3
-                prev_port[3, fid] = p0
-            else:                                     # via one spine
-                src, sl, spine, dl, dst = nodes
-                p0 = add((src, sl), 0)
-                p1 = add((sl, spine), 1)
-                p2 = add((spine, dl), 2)
-                p3 = add((dl, dst), 3)
-                stage_ports[:, fid] = (p0, p1, p2, p3)
-                prev_port[1, fid], prev_port[2, fid], prev_port[3, fid] = \
-                    p0, p1, p2
-        P = len(port_id)
-        port_keys = list(port_id)
+        Sn = len(topo0.spines)
+        cols = np.arange(F)
+        upP = dnP = candS = crossF = T1 = init_spine = None
+        if not dyn:
+            stage_ports = np.full((_STAGES, F), -1, np.int32)
+            prev_port = np.full((_STAGES, F), -1, np.int32)
+            for fid, nodes in enumerate(routes):
+                if len(nodes) == 3:                   # intra-leaf
+                    src, leaf, dst = nodes
+                    p0 = add((src, leaf), 0)
+                    p3 = add((leaf, dst), 3)
+                    stage_ports[0, fid], stage_ports[3, fid] = p0, p3
+                    prev_port[3, fid] = p0
+                else:                                 # via one spine
+                    src, sl, spine, dl, dst = nodes
+                    p0 = add((src, sl), 0)
+                    p1 = add((sl, spine), 1)
+                    p2 = add((spine, dl), 2)
+                    p3 = add((dl, dst), 3)
+                    stage_ports[:, fid] = (p0, p1, p2, p3)
+                    prev_port[1, fid], prev_port[2, fid], \
+                        prev_port[3, fid] = p0, p1, p2
+            P = len(port_id)
+            port_keys = list(port_id)
 
-        recv_hosts = sorted({f.dst for f in flows0})
+            def onehot(idx):                          # [P, F] from [F] ids
+                oh = np.zeros((P, F))
+                valid = idx >= 0
+                oh[idx[valid], cols[valid]] = 1.0
+                return oh
+
+            occ = [onehot(stage_ports[k]) for k in range(_STAGES)]
+            # destination port after stages 0..2 (stage 3 -> receivers)
+            d0 = np.where(stage_ports[1] >= 0, stage_ports[1],
+                          stage_ports[3])
+            dest = [onehot(d0), onehot(stage_ports[2]),
+                    onehot(stage_ports[3])]
+            prev_onehot = np.zeros((P, F, P))
+            for k in range(1, _STAGES):
+                for fid in range(F):
+                    p, pr = stage_ports[k, fid], prev_port[k, fid]
+                    if p >= 0 and pr >= 0:
+                        prev_onehot[p, fid, pr] = 1.0
+        else:
+            # every candidate uplink/downlink joins the port set; the
+            # per-tick routing weights decide where bytes actually go
+            hl = topo0.host_leaf
+            stage0 = np.full(F, -1, np.int64)
+            stage3 = np.full(F, -1, np.int64)
+            up_ids = np.full((Sn, F), -1, np.int64)
+            dn_ids = np.full((Sn, F), -1, np.int64)
+            for fid, f in enumerate(flows0):
+                sl, dl = hl[f.src], hl[f.dst]
+                if f.src == f.dst:
+                    raise ValueError("flow endpoints must differ")
+                stage0[fid] = add((f.src, sl), 0)
+                if sl == dl:
+                    stage3[fid] = add((sl, f.dst), 3)
+                else:
+                    if not Sn:
+                        raise ValueError(f"no spine connects {sl}->{dl}")
+                    for si, sp in enumerate(topo0.spines):
+                        up_ids[si, fid] = add((sl, sp), 1)
+                        dn_ids[si, fid] = add((sp, dl), 2)
+                    stage3[fid] = add((dl, f.dst), 3)
+            P = len(port_id)
+            port_keys = list(port_id)
+
+            def onehot(idx):
+                oh = np.zeros((P, F))
+                valid = idx >= 0
+                oh[idx[valid], cols[valid]] = 1.0
+                return oh
+
+            candS = up_ids >= 0
+            crossF = candS.any(0) if Sn else np.zeros(F, bool)
+            occ1 = np.zeros((P, F))
+            occ2 = np.zeros((P, F))
+            upP = np.zeros((Sn, F, P))
+            dnP = np.zeros((Sn, F, P))
+            T1 = np.zeros((P, F, P))
+            prev_onehot = np.zeros((P, F, P))
+            for fid in range(F):
+                p0, p3 = stage0[fid], stage3[fid]
+                if crossF[fid]:
+                    for si in range(Sn):
+                        pu, pd = up_ids[si, fid], dn_ids[si, fid]
+                        occ1[pu, fid] = occ2[pd, fid] = 1.0
+                        upP[si, fid, pu] = dnP[si, fid, pd] = 1.0
+                        T1[pu, fid, pd] = 1.0
+                        prev_onehot[pu, fid, p0] = 1.0
+                        prev_onehot[pd, fid, pu] = 1.0
+                        # a rerouted/sprayed flow's bytes at the host
+                        # port have mixed provenance: pause targeting
+                        # covers the whole candidate set (same contract
+                        # as OutputPort.static_ingress in the scalar
+                        # driver)
+                        prev_onehot[p3, fid, pd] = 1.0
+                else:
+                    prev_onehot[p3, fid, p0] = 1.0
+            occ = [onehot(stage0), occ1, occ2, onehot(stage3)]
+            # dest[0] covers only intra-leaf flows (cross-leaf stage-0
+            # output is routed by the per-tick weights); dest[1] is
+            # replaced by the T1 map
+            dest = [onehot(np.where(crossF, -1, stage3)),
+                    np.zeros((P, F)), onehot(stage3)]
+            init_spine = np.where(crossF, cols % max(Sn, 1), 0) \
+                .astype(np.int32)
+
         R = len(recv_hosts)
         ridx = {h: i for i, h in enumerate(recv_hosts)}
         recv_of = np.array([ridx[f.dst] for f in flows0], np.int32)
         qos_of = np.array([int(f.qos) for f in flows0], np.int32)
-
         stage_mask = np.zeros((_STAGES, P), bool)
         for p, st in enumerate(port_stage):
             stage_mask[st, p] = True
-        cols = np.arange(F)
-
-        def onehot(idx):                              # [P, F] from [F] ids
-            oh = np.zeros((P, F))
-            valid = idx >= 0
-            oh[idx[valid], cols[valid]] = 1.0
-            return oh
-
-        occ = [onehot(stage_ports[k]) for k in range(_STAGES)]
-        # destination port after stages 0..2 (stage 3 routes to receivers)
-        d0 = np.where(stage_ports[1] >= 0, stage_ports[1], stage_ports[3])
-        dest = [onehot(d0), onehot(stage_ports[2]), onehot(stage_ports[3])]
         recv_onehot = np.zeros((R, F))
         recv_onehot[recv_of, cols] = 1.0
-        prev_onehot = np.zeros((P, F, P))
-        for k in range(1, _STAGES):
-            for fid in range(F):
-                p, pr = stage_ports[k, fid], prev_port[k, fid]
-                if p >= 0 and pr >= 0:
-                    prev_onehot[p, fid, pr] = 1.0
         owner_recv = np.full(P, -1, np.int32)
         for (a, b), pid in port_id.items():
             if port_stage[pid] == 3:
@@ -246,7 +372,9 @@ class FabricSweepParams:
                                ["gbps", "ecn_en", "can_assert",
                                 "line", "cap", "burst", "start", "cnp_iv_f",
                                 "d_base", "d_strag", "cnp_dly", "clsF",
-                                "on_us", "off_us"]}
+                                "on_us", "off_us", "fail_at", "fail_until",
+                                "rmode", "flet", "hystb", "settle",
+                                "sched", "quanta", "hpfc"]}
         for name, _ in _RECV_SCALARS + _DCQCN_SCALARS + _SWITCH_SCALARS \
                 + _SWITCH_TC:
             pv[name] = []
@@ -276,6 +404,11 @@ class FabricSweepParams:
                     raise ValueError("cpu_membw_schedule is not sweepable; "
                                      "use run_fabric for scheduled "
                                      "contention")
+                if c.host_pfc_per_tc and not sw.per_tc:
+                    # same contract as run_fabric: the per-class gate
+                    # needs classes to exist on the wire
+                    raise ValueError("host_pfc_per_tc requires "
+                                     "SwitchConfig.per_tc")
             for name, fn in _RECV_SCALARS:
                 pv[name].append([fn(rcfgs[h]) for h in recv_hosts])
             d_b, d_s = [], []
@@ -294,6 +427,28 @@ class FabricSweepParams:
                     (f.cnp_delay_us if f.cnp_delay_us is not None
                      else s.fabric.cnp_delay_us) / dt)))
                 for f in s.flows])
+            rc = s.fabric.routing
+            if dyn:
+                ft = s.topology.failure_ticks(dt)
+                nv = (NEVER_TICK, NEVER_TICK)
+                pv["fail_at"].append([ft.get(k, nv)[0] for k in port_keys])
+                pv["fail_until"].append([ft.get(k, nv)[1]
+                                         for k in port_keys])
+                pv["rmode"].append(rc.mode_code())
+                pv["flet"].append(max(1, int(round(rc.flowlet_us / dt))))
+                pv["hystb"].append(rc.hysteresis_frac
+                                   * sw.port_buffer_bytes)
+                stl = int(round(rc.spray_settle_us / dt)) \
+                    if rc.mode == "spray" else 0
+                pv["settle"].append([stl if crossF[fid] else 0
+                                     for fid in range(F)])
+            if any_wrr:
+                pv["sched"].append(1 if sw.scheduler == "wrr" else 0)
+                pv["quanta"].append(list(sw.quanta()))
+            if host_tc:
+                pv["hpfc"].append([
+                    1.0 if (sw.per_tc and rcfgs[h].host_pfc_per_tc)
+                    else 0.0 for h in recv_hosts])
             line = [s.topology.access_gbps(f.src) for f in s.flows]
             pv["line"].append(line)
             pv["cap"].append([np.inf if f.offered_gbps is None
@@ -310,17 +465,21 @@ class FabricSweepParams:
             dcq = [DcqcnConfig(line_rate_gbps=lr) for lr in line]
             for name, fn in _DCQCN_SCALARS:
                 pv[name].append([fn(d) for d in dcq])
-        pvals = {k: np.asarray(v, np.int32
-                               if k in ("d_base", "d_strag", "cnp_dly")
-                               else np.float64) for k, v in pv.items()}
+        pvals = {k: np.asarray(v, np.int32 if k in _INT_KEYS
+                               else np.float64)
+                 for k, v in pv.items() if v}
         H = int(max(pvals["d_base"].max(), pvals["d_strag"].max())) + 2
         Hc = int(pvals["cnp_dly"].max()) + 1
+        Hs = int(pvals["settle"].max()) + 1 if dyn else 1
 
         h = hashlib.sha1()
+        extras = [a for a in (upP, dnP, candS, crossF, T1, init_spine)
+                  if a is not None]
         for arr in (stage_mask, *occ, *dest, recv_onehot, recv_of, qos_of,
-                    prev_onehot, owner_recv):
+                    prev_onehot, owner_recv, *extras):
             h.update(np.ascontiguousarray(arr).tobytes())
-        h.update(repr((F, P, R, ticks, dt, H, Hc)).encode())
+        h.update(repr((F, P, R, ticks, dt, H, Hc, Hs, Sn, dyn, any_wrr,
+                       host_tc)).encode())
         return cls(port_keys=port_keys, recv_hosts=recv_hosts,
                    flow_tags=[f.tag for f in flows0],
                    stage_mask=stage_mask, occ=occ, dest=dest,
@@ -328,13 +487,18 @@ class FabricSweepParams:
                    prev_onehot=prev_onehot, owner_recv=owner_recv,
                    pvals=pvals, n_points=G, n_flows=F, n_ports=P, n_recv=R,
                    ticks=ticks, dt_us=dt, ring_len=H, cnp_ring=Hc,
-                   structure_key=h.hexdigest())
+                   structure_key=h.hexdigest(),
+                   upP=upP, dnP=dnP, candS=candS, crossF=crossF, T1=T1,
+                   init_spine=init_spine, dyn_route=dyn, any_wrr=any_wrr,
+                   host_tc=host_tc, settle_ring=Hs,
+                   n_spines=Sn if dyn else 0)
 
 
 # --------------------------------------------------------------------------- #
 # The shared per-tick step (numpy [G, ...] and jax vmapped [...])
 # --------------------------------------------------------------------------- #
-def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1):
+def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
+               opts: Optional[dict] = None):
     """Build ``step(state, t) -> state`` in array namespace ``xp``.
 
     ``st`` holds the static structure arrays (no grid axis), ``p`` the
@@ -348,7 +512,17 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1):
     dispatch dominates at these shapes, so halving the op count nearly
     halves the tick.  Per-point constants are hoisted out of the scan
     body for the same reason.
+
+    ``opts`` carries the trace-time capability flags from
+    :class:`FabricSweepParams` (``dyn`` routing, ``wrr`` scheduling,
+    ``host_tc`` receiver PFC, ``Hs`` spray-settle ring, ``Sn`` spines):
+    with everything off this builds exactly the pre-routing-layer
+    program, so static grids stay bit-identical and pay nothing.
     """
+    o = opts or {}
+    dyn, wrr = o.get("dyn", False), o.get("wrr", False)
+    host_tc, Hs = o.get("host_tc", False), o.get("Hs", 1)
+    Sn = o.get("Sn", 0)
     f = dtype
     bpt = f(1e9 / 8.0 * dt * 1e-6)       # bytes per (Gbps * tick)
     fdt = f(dt)
@@ -382,6 +556,18 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1):
     rx_pfc_en = p["pfc_en"] > 0.5
     wm_en = p["wm_cnp"] > 0.5
     linecap = xp.minimum(p["line"], p["cap"])
+    if wrr:
+        quantaQ = p["quanta"][..., None]            # [.., Q, 1]
+        is_wrr = (p["sched"] == 1)[..., None, None]  # [.., 1, 1]
+    if host_tc:
+        hpfc_b = (p["hpfc"] > half)[..., None, :]   # [.., 1, R]
+        rx_pfc_tc = rx_pfc_en[..., None, :]
+        xoffQ = p["xoff"][..., None, :]
+        xonQ = p["xon"][..., None, :]
+    if dyn and Sn:
+        bufSF = p["buf"][..., None, None]           # vs [.., S, F]
+        hystF = p["hystb"][..., None]               # vs [.., F]
+        arangeS = xp.arange(Sn, dtype=xp.int32)[:, None]
 
     def cut(s, fire):
         """DCQCN on_cnp for flows where ``fire`` holds."""
@@ -402,17 +588,19 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1):
         [.., P, F] — one small matmul with the class one-hot."""
         return xp.matmul(clsF, xp.swapaxes(q0, -1, -2))
 
-    def drain(s, k):
-        """Stage-k ports forward up to rate*dt: strict priority across
-        traffic classes (per-TC pause gating, priority-unrolled budget
-        grants as in the receiver block), pro rata across the flows of a
-        class."""
+    def drain(s, k, upf=None):
+        """Stage-k ports forward up to rate*dt: per-class budget grants
+        (strict priority unrolled over Q, or WRR water-filling where a
+        point schedules it), pro rata across the flows of a class.
+        ``upf`` zeroes the budget of dead links.  Returns the per-(port,
+        flow) drained tensor ``out`` [.., 2, P, F] — dynamic routing
+        needs the port-level provenance at the uplink stage."""
         qm = s["qm"]
         q0 = qm[..., 0, :, :]
         qtc = class_tot(q0)                       # [.., Q, P]
-        budget_left = budget
-        frac_pf = xp.zeros_like(q0)               # per-(port, flow) share
-        can_pf = xp.zeros_like(q0)                # class drained at port
+        budget0 = budget if upf is None else budget * upf
+        budget_left = budget0
+        fr, cans = [], []
         for qi in range(N_QOS):
             qsum = qtc[..., qi, :]
             can = st["stage"][k] & ~s["paused"][..., qi, :] & (qsum > zero)
@@ -420,9 +608,8 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1):
                             xp.minimum(one, budget_left /
                                        xp.where(qsum > zero, qsum, one)),
                             zero)
-            cls_row = clsF[..., qi, :][..., None, :]          # [.., 1, F]
-            frac_pf = frac_pf + frac[..., None] * cls_row
-            can_pf = can_pf + xp.where(can, one, zero)[..., None] * cls_row
+            fr.append(frac)
+            cans.append(can)
             # clamp leftover budget below 1e-6 of the link budget to
             # zero (rounding crumbs after a class eats the whole budget
             # must not become micro-byte trickles for the next class —
@@ -432,21 +619,46 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1):
             budget_left = budget_left - frac * qsum
             budget_left = xp.where(budget_left < budget_crumb, zero,
                                    budget_left)
+        frac_q = xp.stack(fr, -2)                 # [.., Q, P]
+        can_q = xp.stack(cans, -2)
+        if wrr:
+            # weighted water-filling over backlogged unpaused classes,
+            # unrolled Q rounds with the exact op order of
+            # OutputPort._wrr_fracs (float64 reference == scalar driver)
+            rem = xp.where(can_q, qtc, zero)
+            alloc = xp.zeros_like(qtc)
+            bl = budget0
+            for _ in range(N_QOS):
+                wq = xp.where(rem > zero, quantaQ, zero)
+                wsum = wq.sum(-2)                 # [.., P]
+                share = bl[..., None, :] * wq \
+                    / xp.maximum(wsum, tiny)[..., None, :]
+                take = xp.minimum(share, rem)
+                alloc = alloc + take
+                rem = rem - take
+                bl = bl - take.sum(-2)
+                bl = xp.where(bl < budget_crumb, zero, bl)
+            frac_wrr = xp.where(qtc > zero,
+                                alloc / xp.maximum(qtc, tiny), zero)
+            frac_q = xp.where(is_wrr, frac_wrr, frac_q)
+        # scatter per-class grants to (port, flow); one class per flow,
+        # so the matmul contraction has a single nonzero term
+        frac_pf = xp.matmul(xp.swapaxes(frac_q, -1, -2), clsF)
+        can_pf = xp.matmul(xp.swapaxes(xp.where(can_q, one, zero),
+                                       -1, -2), clsF)
         out = qm * frac_pf[..., None, :, :]
         qm = qm - out
         # sub-1e-9 residues vanish with their marks (the scalar driver's
         # dict-entry cleanup, per drained class)
         gone = (can_pf > half) & (qm[..., 0, :, :] < eps_q)
         s["qm"] = xp.where(gone[..., None, :, :], zero, qm)
-        # flow-level view of this stage's output: [.., 2, F]
-        fbm = (st["occ"][k] * out).sum(-2)
-        return s, fbm
+        return s, out
 
-    def enqueue(s, dest_oh, fbm):
-        """Batch-enqueue routed bytes: proportional split of each
-        class's buffer partition, one ECN knee decision per (port, TC)
-        against that class's pre-batch occupancy."""
-        A = dest_oh * fbm[..., None, :]           # [.., 2, P, F]
+    def enqueue(s, A):
+        """Batch-enqueue routed arrivals ``A`` [.., 2, P, F]:
+        proportional split of each class's buffer partition, one ECN
+        knee decision per (port, TC) against that class's pre-batch
+        occupancy."""
         q0 = s["qm"][..., 0, :, :]
         qtc = class_tot(q0)                       # [.., Q, P] pre-batch
         tot_q = class_tot(A[..., 0, :, :])
@@ -485,6 +697,72 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1):
         now = (xp.asarray(t, dtype) + one) * fdt
         fold(s, "injected", "inj_lo")
         fold(s, "delivered", "deliv_lo")
+
+        # ---- 0. link failure events + routing weights --------------------- #
+        upf = None
+        D0 = None
+        if dyn:
+            downP = (t >= p["fail_at"]) & (t < p["fail_until"])   # [.., P]
+            upf = xp.where(downP, zero, one)
+            failf = xp.where(t == p["fail_at"], one, zero)
+            # in-flight bytes die with the link; fluid go-back-N
+            # re-credits them for retransmission (run_fabric step 0)
+            lostF = (s["qm"][..., 0, :, :] * failf[..., :, None]).sum(-2)
+            s["inj_lo"] = s["inj_lo"] - lostF
+            s["sw_dropped"] = s["sw_dropped"] + lostF.sum(-1)
+            s["qm"] = s["qm"] * (one - failf)[..., None, :, None]
+            if Sn:
+                # per-tick spine selection (run_fabric step 1.5): uplink
+                # occupancy/up-state per candidate as [.., S, F] blocks
+                occP = s["qm"][..., 0, :, :].sum(-1)              # [.., P]
+                occS = xp.einsum('sfp,...p->...sf', st["upP"], occP)
+                up1 = xp.einsum('sfp,...p->...sf', st["upP"], upf)
+                up2 = xp.einsum('sfp,...p->...sf', st["dnP"], upf)
+                upS = st["candS"] & (up1 > half) & (up2 > half)
+                free = xp.where(upS, xp.maximum(bufSF - occS, zero), zero)
+                cur = s["route"]                                  # [.., F]
+                cur_oh = arangeS == cur[..., None, :]             # [.., S, F]
+                occ_cur = (occS * xp.where(cur_oh, one, zero)).sum(-2)
+                up_cur = (upS & cur_oh).any(-2)
+                any_up = upS.any(-2)
+                # adaptive: least-congested up candidate + hysteresis
+                occ_masked = xp.where(upS, occS, inf)
+                best = xp.argmin(occ_masked, -2).astype(xp.int32)
+                occ_best = occ_masked.min(-2)
+                adapt = xp.where(
+                    any_up & (~up_cur | (occ_best < occ_cur - hystF)),
+                    best, cur)
+                # weighted ECMP: flowlet-boundary (or dead-path) re-hash
+                # against the free-space-weighted cumulative distribution;
+                # thresholding against the cumsum's own last element keeps
+                # the pick identical to routing.weighted_pick
+                boundary = (t % p["flet"]) == 0                   # [..]
+                k_id = t // p["flet"]
+                hv = ((arangeF + 1) * 40503
+                      + k_id[..., None] * 9973) % 65536
+                hsh = hv.astype(dtype) / f(65536.0)               # [.., F]
+                cum = xp.cumsum(free, -2)
+                tot = cum[..., Sn - 1, :]                         # [.., F]
+                pick = xp.argmax(cum > (hsh * tot)[..., None, :],
+                                 -2).astype(xp.int32)
+                repick = boundary[..., None] | ~up_cur
+                wec = xp.where(repick & (tot > zero), pick, cur)
+                m = p["rmode"][..., None]                         # [.., 1]
+                choice = xp.where(m == 2, adapt,
+                                  xp.where(m == 1, wec, cur))
+                s["reroutes"] = s["reroutes"] + \
+                    xp.where(choice != cur, one, zero)
+                s["route"] = choice
+                ch_oh = xp.where(arangeS == choice[..., None, :],
+                                 one, zero)
+                totS = tot[..., None, :]
+                spray_w = xp.where(totS > zero,
+                                   free / xp.maximum(totS, tiny), ch_oh)
+                W = xp.where(m[..., None] == 3, spray_w, ch_oh)
+                D0 = st["dest"][0] + xp.einsum('...sf,sfp->...pf',
+                                               W, st["upP"])
+            else:
+                D0 = st["dest"][0]
 
         # ---- 1. senders: DCQCN advance + offer ---------------------------- #
         adv = now > p["start"]
@@ -538,13 +816,38 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1):
             * st["sel0"]
 
         # ---- 2. tier-ordered forwarding (cut-through within the tick) ---- #
-        s, fbm = drain(s, 0)
-        s = enqueue(s, st["dest"][0], fbm)
-        s, fbm = drain(s, 1)
-        s = enqueue(s, st["dest"][1], fbm)
-        s, fbm = drain(s, 2)
-        s = enqueue(s, st["dest"][2], fbm)
-        s, fbm = drain(s, 3)
+        s, out = drain(s, 0, upf)
+        fbm = (st["occ"][0] * out).sum(-2)
+        if dyn:
+            # cross-leaf stage-0 output follows this tick's routing
+            # weights; intra-leaf flows ride the static dest[0] part
+            s = enqueue(s, D0[..., None, :, :] * fbm[..., None, :])
+        else:
+            s = enqueue(s, st["dest"][0] * fbm[..., None, :])
+        s, out = drain(s, 1, upf)
+        if dyn:
+            # uplink-stage output keeps its port-level provenance: the
+            # static [P, F, P] map sends bytes drained at (leaf, spine)
+            # to that spine's downlink toward the flow's leaf
+            s["tx"] = s["tx"] + out[..., 0, :, :].sum(-1)
+            s = enqueue(s, xp.einsum('...cpf,pfq->...cqf',
+                                     out, st["T1"]))
+        else:
+            fbm = (st["occ"][1] * out).sum(-2)
+            s = enqueue(s, st["dest"][1] * fbm[..., None, :])
+        s, out = drain(s, 2, upf)
+        fbm = (st["occ"][2] * out).sum(-2)
+        s = enqueue(s, st["dest"][2] * fbm[..., None, :])
+        s, out = drain(s, 3, upf)
+        fbm = (st["occ"][3] * out).sum(-2)
+        if Hs > 1:
+            # spray reorder settling: sprayed arrivals wait settle ticks
+            # in a slot-major ring before receiver admission (per-flow
+            # read offset; 0 = read the slot just written = pass-through)
+            s["sring"] = ring_set(s["sring"], t % Hs, fbm)
+            sidx = (t - p["settle"]) % Hs
+            fbm = xp.take_along_axis(s["sring"], sidx[..., None, None, :],
+                                     -3)[..., 0, :, :]
         arr_b = fbm[..., 0, :]
         arr_m = fbm[..., 1, :]
 
@@ -660,9 +963,22 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1):
 
         # receiver congestion signalling
         q_frac = s["qos_q"].sum(-2) / p["rnic_buf"]
-        s["pfc"] = rx_pfc_en & xp.where(s["pfc"], q_frac >= p["xon"],
-                                        q_frac > p["xoff"])
-        s["pfc_us"] = s["pfc_us"] + xp.where(s["pfc"], fdt, zero)
+        if host_tc:
+            # per-class receiver gate ([.., Q, R] pause state): per-TC
+            # points watermark each class's occupancy of its 1/N_QOS
+            # buffer partition (ReceiverHost's arithmetic, op for op),
+            # legacy points see the total occupancy in every row —
+            # identical decisions to the scalar whole-link gate
+            frac_c = s["qos_q"] / (p["rnic_buf"] / f(N_QOS))[..., None, :]
+            sel = xp.where(hpfc_b, frac_c, q_frac[..., None, :])
+            s["pfc"] = rx_pfc_tc & xp.where(s["pfc"], sel >= xonQ,
+                                            sel > xoffQ)
+            pfc_any = s["pfc"].any(-2)
+        else:
+            s["pfc"] = rx_pfc_en & xp.where(s["pfc"], q_frac >= p["xon"],
+                                            q_frac > p["xoff"])
+            pfc_any = s["pfc"]
+        s["pfc_us"] = s["pfc_us"] + xp.where(pfc_any, fdt, zero)
         cnp_tus = s["cnp_tus"] + fdt
         wm_fire = wm_en & (q_frac > p["ecn_th"]) \
             & (cnp_tus >= p["cnp_iv"])
@@ -735,10 +1051,15 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1):
         s["pause_tc_us"] = s["pause_tc_us"] + \
             xp.where(link_paused, fdt, zero)
         s["ever_paused"] = s["ever_paused"] | link_any
-        # the receiver RNIC gate pauses its whole access link (host PFC
-        # is not classed), so it broadcasts across the class axis
-        rx_gate = s["pfc"][..., st["owner_clamp"]] & st["owner_valid"]
-        s["paused"] = link_paused | rx_gate[..., None, :]
+        # the receiver RNIC gate: whole access link (legacy — broadcast
+        # across the class axis) or per admission class (host_pfc_per_tc,
+        # [.., Q, R] state gathered per stage-3 port)
+        if host_tc:
+            rx_gate = s["pfc"][..., st["owner_clamp"]] & st["owner_valid"]
+            s["paused"] = link_paused | rx_gate
+        else:
+            rx_gate = s["pfc"][..., st["owner_clamp"]] & st["owner_valid"]
+            s["paused"] = link_paused | rx_gate[..., None, :]
         return s
 
     return step
@@ -779,12 +1100,24 @@ def _init_state(xp, lead, fsp: FabricSweepParams, p, dtype):
         "pool_peak": z(R), "cnps": z(R), "ecns": z(R), "replaces": z(R),
         "copies": z(R), "pfc_us": z(R), "ecn_tus": z(R),
         "cnp_tus": p["cnp_iv"] + z(R),   # allow an immediate first CNP
-        "pfc": xp.zeros(lead + (R,), bool),
+        # per-class pause state when any point runs per-TC host PFC
+        # (legacy points keep every row in lockstep)
+        "pfc": xp.zeros(lead + ((N_QOS, R) if fsp.host_tc else (R,)),
+                        bool),
         "ring": z(H, 2, R),     # slot-major; axis -2: base / straggler
         "heavy": xp.full(lead + (R,), -1, xp.int32),
         # fleet counters
         "ecn_marked": z(), "sw_dropped": z(),
     }
+    if fsp.dyn_route:
+        # routing carry: current spine choice (static hash seed), reroute
+        # counts and per-uplink carried bytes
+        s["route"] = xp.zeros(lead + (F,), xp.int32) \
+            + xp.asarray(fsp.init_spine)
+        s["reroutes"] = z(F)
+        s["tx"] = z(P)
+    if fsp.settle_ring > 1:
+        s["sring"] = z(fsp.settle_ring, 2, F)
     return s
 
 
@@ -795,7 +1128,7 @@ def _static(fsp: FabricSweepParams, xp, dtype):
     sel[0, 0], sel[1, 1] = 1.0, 1.0
     cls_onehot = np.zeros((N_QOS, F))
     cls_onehot[fsp.qos_of, np.arange(F)] = 1.0
-    return {
+    out = {
         "cls_of": xp.asarray(fsp.qos_of),
         "cls_recv": xp.asarray(cls_onehot[:, None, :]
                                * fsp.recv_onehot[None, :, :], dtype),
@@ -810,6 +1143,12 @@ def _static(fsp: FabricSweepParams, xp, dtype):
         "sel0": xp.asarray(sel[0], dtype),
         "sel1": xp.asarray(sel[1], dtype),
     }
+    if fsp.dyn_route:
+        out["upP"] = xp.asarray(fsp.upP, dtype)
+        out["dnP"] = xp.asarray(fsp.dnP, dtype)
+        out["candS"] = xp.asarray(fsp.candS)
+        out["T1"] = xp.asarray(fsp.T1, dtype)
+    return out
 
 
 # --------------------------------------------------------------------------- #
@@ -831,7 +1170,7 @@ def _results(s, fsp: FabricSweepParams) -> Dict[str, np.ndarray]:
     vic = tags == "victim"
     G = fsp.n_points
     victim = goodput[:, vic].mean(-1) if vic.any() else np.zeros(G)
-    return {
+    out = {
         "flow_goodput_gbps": goodput,
         "flow_delivered_bytes": deliv,
         "flow_completion_us": comp,
@@ -854,6 +1193,25 @@ def _results(s, fsp: FabricSweepParams) -> Dict[str, np.ndarray]:
         "recv_rnic_dropped_bytes": np.asarray(s["rnic_drop"], np.float64),
         "recv_mem_fallback_bytes": np.asarray(s["mem_fb"], np.float64),
     }
+    if "reroutes" in s:
+        rr = np.asarray(s["reroutes"], np.float64)
+        out["flow_reroutes"] = rr
+        out["reroute_count"] = rr.sum(-1)
+        # per-uplink utilization (stage-1 ports; NaN-safe zeros elsewhere)
+        tx = np.asarray(s["tx"], np.float64)
+        cap = fsp.pvals["gbps"] * 1e9 / 8.0 * (sim_us * 1e-6)
+        util = np.where(cap > 0.0, tx / np.maximum(cap, 1e-30), 0.0)
+        up_mask = fsp.stage_mask[1]
+        out["uplink_util"] = np.where(up_mask[None, :], util, 0.0)
+        if up_mask.any():
+            out["uplink_util_max"] = util[:, up_mask].max(-1)
+            out["uplink_util_mean"] = util[:, up_mask].mean(-1)
+        else:
+            out["uplink_util_max"] = np.zeros(G)
+            out["uplink_util_mean"] = np.zeros(G)
+    else:
+        out["reroute_count"] = np.zeros(G)
+    return out
 
 
 # --------------------------------------------------------------------------- #
@@ -875,6 +1233,13 @@ def _np_params(fsp: FabricSweepParams, dtype) -> Dict[str, np.ndarray]:
     return p
 
 
+def _opts(fsp: FabricSweepParams) -> dict:
+    """Trace-time capability flags for :func:`_make_step`."""
+    return {"dyn": fsp.dyn_route, "wrr": fsp.any_wrr,
+            "host_tc": fsp.host_tc, "Hs": fsp.settle_ring,
+            "Sn": fsp.n_spines}
+
+
 def _run_numpy(fsp: FabricSweepParams, dtype=np.float64):
     p = _np_params(fsp, dtype)
     st = _static(fsp, np, dtype)
@@ -884,7 +1249,7 @@ def _run_numpy(fsp: FabricSweepParams, dtype=np.float64):
         return ring
 
     step = _make_step(np, ring_set, st, p, fsp.dt_us, fsp.ring_len, dtype,
-                      fsp.cnp_ring)
+                      fsp.cnp_ring, _opts(fsp))
     s = _init_state(np, (fsp.n_points,), fsp, p, dtype)
     for t in range(fsp.ticks):
         s = step(s, t)
@@ -912,7 +1277,8 @@ def _jax_program(fsp: FabricSweepParams, unroll: int):
         return ring.at[..., idx, :, :].set(v)
 
     def one_point(s0, p):
-        step = _make_step(jnp, ring_set, st, p, fsp.dt_us, H, dtype, Hc)
+        step = _make_step(jnp, ring_set, st, p, fsp.dt_us, H, dtype, Hc,
+                          _opts(fsp))
 
         def body(s, t):
             return step(s, t), None
