@@ -36,6 +36,12 @@ class DcqcnRate:
         self._b_stage = 0
         self.cnp_count = 0
 
+    def on_signal(self, rtt_us: float, util: float, dt_us: float) -> None:
+        """Per-tick fabric telemetry (delay / utilization).  DCQCN is
+        ECN-driven and ignores it — the hook exists so every controller
+        behind :data:`repro.fabric.cc.CongestionControl` shares one
+        calling convention."""
+
     def on_cnp(self) -> None:
         """Rate decrease on congestion notification."""
         self.cnp_count += 1

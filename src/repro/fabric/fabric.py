@@ -49,7 +49,9 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from ..core.datapath import N_QOS, QoS
 from ..core.simulator import SimConfig, SimResult, testbed_100g
+from .cc import CcConfig
 from .hosts import ReceiverHost, SenderHost
+from .messages import MessageConfig, MessageTracker, exact_percentile
 from .routing import (RoutingConfig, adaptive_pick, flowlet_hash,
                       spray_weights, weighted_pick)
 from .switch import OutputPort, PauseKey, Switch, SwitchConfig
@@ -74,6 +76,13 @@ class Flow:
     # per-flow NP->RP CNP propagation delay override; None falls back to
     # FabricConfig.cnp_delay_us
     cnp_delay_us: Optional[float] = None
+    # op-granular message layer (verbs WRITE/SEND, outstanding window,
+    # per-message latency percentiles); None falls back to
+    # FabricConfig.msg, and None there means plain fluid bytes
+    msg: Optional[MessageConfig] = None
+    # congestion-control selection (dcqcn / timely / hpcc); None falls
+    # back to FabricConfig.cc, and None there means per-line-rate DCQCN
+    cc: Optional[CcConfig] = None
 
 
 def burst_done_bytes(burst_bytes: float) -> float:
@@ -108,6 +117,11 @@ class FabricConfig:
     # see repro.fabric.routing.  static_ecmp reproduces the pre-routing-
     # layer driver bit-for-bit.
     routing: RoutingConfig = dataclasses.field(default_factory=RoutingConfig)
+    # fabric-wide message-layer / congestion-control defaults (per-flow
+    # Flow.msg / Flow.cc override); None keeps the pre-message fluid
+    # semantics and per-line-rate DCQCN exactly
+    msg: Optional[MessageConfig] = None
+    cc: Optional[CcConfig] = None
 
 
 @dataclasses.dataclass
@@ -137,6 +151,37 @@ class FabricResult:
         dataclasses.field(default_factory=dict)
     flow_reroutes: Dict[int, int] = dataclasses.field(default_factory=dict)
     reroute_count: int = 0
+    # message layer (flows with a MessageConfig): exact per-message
+    # completion latencies in completion order, per flow
+    msg_latency_us: Dict[int, List[float]] = \
+        dataclasses.field(default_factory=dict)
+    msg_last_done_us: Dict[int, float] = \
+        dataclasses.field(default_factory=dict)
+    has_messages: bool = False               # any flow ran the op layer
+    sim_us: float = 0.0                      # simulated horizon
+
+    def _msg_pool(self, tag: Optional[str]) -> List[float]:
+        return [v for fid, vals in self.msg_latency_us.items()
+                if tag is None or self.flow_tags[fid] == tag
+                for v in vals]
+
+    def msg_percentile(self, q: float, tag: Optional[str] = None) -> float:
+        """Exact nearest-rank percentile of message latency pooled over
+        all message flows (optionally one tag).  0.0 (never NaN) when no
+        messages completed — check :attr:`has_messages` to tell "no op
+        layer" apart from "nothing finished", same contract as
+        :meth:`tagged_goodput`."""
+        return exact_percentile(self._msg_pool(tag), q)
+
+    def msg_count(self, tag: Optional[str] = None) -> int:
+        """Completed messages pooled over message flows."""
+        return len(self._msg_pool(tag))
+
+    def msg_rate_mops(self, tag: Optional[str] = None) -> float:
+        """Completed message ops per microsecond == Mops; 0.0 (never
+        NaN) when nothing completed or the horizon is empty."""
+        n = self.msg_count(tag)
+        return n / self.sim_us if self.sim_us > 0.0 and n else 0.0
 
     def uplink_imbalance(self) -> float:
         """Load-balance quality: max/mean utilization over ALL fabric
@@ -190,6 +235,22 @@ def run_fabric(topo: Topology, flows: List[Flow],
     # fast path below, bit-equal to the pre-routing-layer driver.
     dyn = rcfg.is_dynamic or bool(fail_ticks)
 
+    # per-flow message-layer / CC resolution (Flow overrides FabricConfig)
+    msg_of: List[Optional[MessageConfig]] = [f.msg or fcfg.msg
+                                             for f in flows]
+    cc_of: List[Optional[CcConfig]] = [f.cc or fcfg.cc for f in flows]
+    trackers: Dict[int, MessageTracker] = {
+        fid: MessageTracker(m) for fid, m in enumerate(msg_of)
+        if m is not None}
+    # delay/INT telemetry is only computed when a non-DCQCN controller
+    # is present (DCQCN ignores it; skipping keeps the legacy path
+    # byte-identical and cheap)
+    need_cc = any(c is not None and c.algo != "dcqcn" for c in cc_of)
+    cc_flow_ids = [fid for fid in range(F)
+                   if cc_of[fid] is not None
+                   and cc_of[fid].algo != "dcqcn"]
+    bpt = 1e9 / 8.0 * dt * 1e-6                    # bytes per Gbps*tick
+
     senders: Dict[int, SenderHost] = {}
     next_hop: Dict[Tuple[str, int], str] = {}      # (node, fid) -> next node
     cross_flows: List[int] = []                    # rerouteable flow ids
@@ -219,7 +280,10 @@ def run_fabric(topo: Topology, flows: List[Flow],
         senders[fid] = SenderHost(
             line_rate_gbps=topo.access_gbps(f.src),
             offered_gbps=f.offered_gbps, burst_bytes=f.burst_bytes,
-            start_us=f.start_us, on_off_us=f.on_off_us)
+            start_us=f.start_us, on_off_us=f.on_off_us,
+            cc=cc_of[fid],
+            op_cap_gbps=(msg_of[fid].op_rate_gbps
+                         if msg_of[fid] is not None else None))
 
     recv_hosts = sorted({f.dst for f in flows})
     receivers: Dict[str, ReceiverHost] = {
@@ -284,10 +348,19 @@ def run_fabric(topo: Topology, flows: List[Flow],
     # per-source-leaf read and the up-mask a per-pair read, not per-flow
     route_buf = float(fcfg.switch.port_buffer_bytes)
     route_hyst = rcfg.hysteresis_frac * route_buf
-    route_flet = max(1, int(round(rcfg.flowlet_us / dt)))
     leaf_pairs: Dict[Tuple[str, str], List[int]] = {}
     for fid in cross_flows:
         leaf_pairs.setdefault(flow_leaves[fid], []).append(fid)
+
+    # flowlet bookkeeping (weighted_ecmp): a flow opens a new flowlet —
+    # and re-hashes — on its first NIC injection after an idle gap
+    # longer than flowlet_gap_us; a continuously-backlogged flow is one
+    # flowlet and keeps its spine until the path dies
+    flet_track = rcfg.mode == "weighted_ecmp" and bool(cross_flows)
+    flet_gap = max(1, int(round(rcfg.flowlet_gap_us / dt)))
+    flet_last = {fid: -(1 << 30) for fid in cross_flows}  # last active tick
+    flet_k = {fid: 0 for fid in cross_flows}              # flowlet index
+    flet_boundary: Set[int] = set()
 
     # switch traffic class of each flow: the QoS class selects the
     # per-TC queue along the route; legacy per-link mode collapses
@@ -319,6 +392,9 @@ def run_fabric(topo: Topology, flows: List[Flow],
 
     delivered = {fid: 0.0 for fid in senders}
     completion = {fid: math.inf for fid in senders}
+    # per-tick drained bytes per link — the txRate leg of the HPCC-style
+    # INT signal (only maintained when a delay/INT controller is active)
+    tick_tx: Dict[LinkKey, float] = {}
     pause_link_us: Dict[LinkKey, float] = {}
     pause_tc_us: Dict[PauseKey, float] = {}
     # (ingress link -> paused TC set) as of the previous tick's PFC pass
@@ -367,6 +443,8 @@ def run_fabric(topo: Topology, flows: List[Flow],
             for fid, b, m in port.drain(dt):
                 if track:
                     uplink_tx[lk] += b
+                if need_cc:
+                    tick_tx[lk] = tick_tx.get(lk, 0.0) + b
                 if to_host:
                     cur = arrivals.setdefault(dst, {}) \
                         .setdefault(fid, [0.0, 0.0])
@@ -421,9 +499,15 @@ def run_fabric(topo: Topology, flows: List[Flow],
         # bytes are refunded, not dropped)
         offers: Dict[str, List[Tuple[int, float]]] = {}
         for fid, f in enumerate(flows):
-            b = senders[fid].offer(dt)
+            tr = trackers.get(fid)
+            b = senders[fid].offer(
+                dt, window_room=(None if tr is None else
+                                 tr.window_room_bytes(
+                                     senders[fid].injected,
+                                     delivered[fid])))
             if b > 0.0:
                 offers.setdefault(f.src, []).append((fid, b))
+        nic_take: Dict[int, float] = {}
         for host, items in offers.items():
             port = nic_ports[host]
             by_tc: Dict[int, List[Tuple[int, float]]] = {}
@@ -438,8 +522,20 @@ def run_fabric(topo: Topology, flows: List[Flow],
                 for fid, b in tc_items:
                     take = b if scale >= 1.0 else b * scale
                     senders[fid].injected -= b - take
+                    nic_take[fid] = take
                     batch.append((fid, take, 0.0, None, tc))
             port.enqueue_batch(batch)
+        if flet_track:
+            # flowlet boundaries open on the first injection after an
+            # idle gap; the flowlet index advances with the boundary so
+            # the re-hash below draws a fresh deterministic hash
+            flet_boundary.clear()
+            for fid in cross_flows:
+                if nic_take.get(fid, 0.0) > 0.0:
+                    if t - flet_last[fid] > flet_gap:
+                        flet_boundary.add(fid)
+                        flet_k[fid] += 1
+                    flet_last[fid] = t
 
         # ---- 1.5 routing layer: per-tick spine selection ------------------ #
         if rcfg.is_dynamic and n_sp and cross_flows:
@@ -457,16 +553,16 @@ def run_fabric(topo: Topology, flows: List[Flow],
                     if rcfg.mode == "adaptive":
                         new = adaptive_pick(occ, up, cur, route_hyst)
                     elif rcfg.mode == "weighted_ecmp":
-                        # flowlet boundary (or a dead current path)
-                        # re-hashes onto the free-space-weighted
-                        # candidate distribution
+                        # a flowlet boundary (idle gap exceeded — see
+                        # step 1) or a dead current path re-hashes onto
+                        # the free-space-weighted candidate distribution
                         new = cur
-                        if t % route_flet == 0 or not up[cur]:
+                        if fid in flet_boundary or not up[cur]:
                             w = [max(route_buf - occ[i], 0.0)
                                  if up[i] else 0.0 for i in range(n_sp)]
                             if sum(w) > 0.0:
                                 new = weighted_pick(
-                                    w, flowlet_hash(fid, t // route_flet))
+                                    w, flowlet_hash(fid, flet_k[fid]))
                     else:                                   # spray
                         new = cur
                         fr = spray_weights(occ, up, route_buf, cur)
@@ -481,10 +577,43 @@ def run_fabric(topo: Topology, flows: List[Flow],
 
         # ---- 2. tier-ordered forwarding ----------------------------------- #
         arrivals: Dict[str, Dict[int, List[float]]] = {}
+        if need_cc:
+            tick_tx.clear()
         for stage in (stage_nic, stage_up, stage_spine, stage_down):
             batches: Batches = {}
             drain_stage(stage, arrivals, batches, down_now)
             flush(batches)
+
+        # ---- 2.2 congestion signals: path delay + INT utilization --------- #
+        # end-of-forwarding queue state along each flow's current path,
+        # converted into the two telemetry channels the CC zoo consumes:
+        # rtt = base + sum(queue/drain-budget) and util = max per-hop
+        # HPCC-style (txRate/B + qlen/(B*T)).  Same arithmetic, same
+        # read point as the vector engines' masked lanes.
+        if need_cc:
+            for fid in cc_flow_ids:
+                c = cc_of[fid]
+                f = flows[fid]
+                sl, dl = flow_leaves[fid]
+                if sl == dl:
+                    path = (nic_ports[f.src], switches[sl].ports[f.dst])
+                else:
+                    sp = spines[cur_spine[fid]] if fid in cur_spine \
+                        else next_hop[(sl, fid)]
+                    path = (nic_ports[f.src], switches[sl].ports[sp],
+                            switches[sp].ports[dl],
+                            switches[dl].ports[f.dst])
+                qd = 0.0
+                util = 0.0
+                for port in path:
+                    budget = port.link.gbps * bpt
+                    q = port.queued_bytes
+                    qd += q / budget
+                    u = (tick_tx.get(port.link.key, 0.0)
+                         + q * (dt / c.base_rtt_us)) / budget
+                    if u > util:
+                        util = u
+                senders[fid].on_signal(c.base_rtt_us + qd * dt, util, dt)
 
         # ---- 2.5 spray reorder settling ----------------------------------- #
         if settle_ticks:
@@ -568,6 +697,15 @@ def run_fabric(topo: Topology, flows: List[Flow],
             _, _, fid = heapq.heappop(pending_cnps)
             senders[fid].on_cnp()
 
+        # ---- 3.5 message layer: starts / completions this tick ------------ #
+        # end-of-tick cumulative counters (post re-credit): a message
+        # starts when injected bytes cross its threshold, completes when
+        # delivered bytes do — go-back-N losses stretch exactly the
+        # open messages' latency
+        for fid, tr in trackers.items():
+            tr.observe(now_us, senders[fid].injected, delivered[fid],
+                       start_us=t * dt)
+
         # ---- 4. PFC pause propagation ------------------------------------- #
         paused_pairs: Set[PauseKey] = set()
         for sw in switches.values():
@@ -614,4 +752,9 @@ def run_fabric(topo: Topology, flows: List[Flow],
         uplink_util=uplink_util,
         flow_reroutes=dict(flow_reroutes),
         reroute_count=sum(flow_reroutes.values()),
+        msg_latency_us={fid: tr.latencies for fid, tr in trackers.items()},
+        msg_last_done_us={fid: tr.last_done_us
+                          for fid, tr in trackers.items()},
+        has_messages=bool(trackers),
+        sim_us=sim_us,
     )

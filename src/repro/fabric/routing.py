@@ -13,10 +13,15 @@ per tick from a :class:`RoutingConfig`:
     The pre-refactor behaviour: spine = ``flow_id % n_spines``, frozen
     for the whole run (golden-tested bit-equal to the old driver).
 ``weighted_ecmp``
-    Flowlet-level re-hash: every ``flowlet_us`` (or immediately when the
-    current path dies) the flow re-picks a spine by a deterministic hash
-    weighted by per-uplink *free* buffer space, so emptier uplinks
-    attract proportionally more flowlets.
+    Flowlet-level re-hash: when a flow's arrival gap exceeds
+    ``flowlet_gap_us`` — the flow resumes injecting after an idle spell
+    long enough that the new burst cannot catch the old one's tail in
+    flight (Kandula et al.'s flowlet condition) — or immediately when
+    the current path dies, the flow re-picks a spine by a deterministic
+    hash weighted by per-uplink *free* buffer space, so emptier uplinks
+    attract proportionally more flowlets.  A continuously-backlogged
+    flow is one flowlet and never re-hashes; an on-off burst train
+    re-hashes once per train.
 ``adaptive``
     Per-tick least-congested-uplink selection with a hysteresis flap
     guard: the flow moves only when the best candidate's queue is more
@@ -47,8 +52,10 @@ ROUTING_MODES = ("static_ecmp", "weighted_ecmp", "adaptive", "spray")
 class RoutingConfig:
     """Per-fabric routing policy (one mode per scenario / grid point)."""
     mode: str = "static_ecmp"
-    # weighted_ecmp: re-hash period (a fluid stand-in for flowlet gaps)
-    flowlet_us: float = 50.0
+    # weighted_ecmp: minimum idle gap between injections that opens a
+    # flowlet boundary (re-hash happens on the first active tick after
+    # a gap longer than this)
+    flowlet_gap_us: float = 50.0
     # adaptive: move only when the best uplink queue is this fraction of
     # the port buffer shorter than the current one (flap guard)
     hysteresis_frac: float = 0.05
@@ -60,8 +67,8 @@ class RoutingConfig:
         if self.mode not in ROUTING_MODES:
             raise ValueError(f"unknown routing mode {self.mode!r}; "
                              f"pick one of {ROUTING_MODES}")
-        if self.flowlet_us <= 0.0:
-            raise ValueError("flowlet_us must be positive")
+        if self.flowlet_gap_us <= 0.0:
+            raise ValueError("flowlet_gap_us must be positive")
         if self.hysteresis_frac < 0.0:
             raise ValueError("hysteresis_frac must be >= 0")
         if self.spray_settle_us < 0.0:

@@ -13,7 +13,9 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.datapath import QoS
 from ..core.simulator import SimConfig, testbed_100g
+from .cc import CcConfig
 from .fabric import FabricConfig, Flow
+from .messages import MessageConfig
 from .routing import RoutingConfig
 from .switch import SwitchConfig
 from .topology import Topology, clos, incast_fabric, jet_testbed
@@ -349,3 +351,46 @@ def single_pair(mode: str = "jet", sim_time_s: float = 0.01,
         fabric=FabricConfig(sim_time_s=sim_time_s,
                             receiver_cfg=_recv_factory(mode, False,
                                                        **recv_kw)))
+
+
+def message_incast(n_senders: int = 8, algo: str = "dcqcn",
+                   verb: str = "write", msg_kb: float = 64.0,
+                   window: int = 16, mode: str = "ddio",
+                   sim_time_s: float = 0.002,
+                   cc: Optional[CcConfig] = None) -> Scenario:
+    """N open-loop senders incast one receiver, every flow carrying the
+    op layer: fixed-size verbs messages under an outstanding window,
+    rate-controlled by ``algo`` from the CC zoo.  The canonical tail-
+    latency benchmark — DCQCN's CNP-driven throttling versus the
+    delay/INT controllers shows up directly in message p99/p999."""
+    topo = incast_fabric(n_senders)
+    flows = [Flow(src=f"h0_{i}", dst="h1_0", tag="incast")
+             for i in range(n_senders)]
+    msg = MessageConfig(verb=verb, msg_bytes=msg_kb * 1024.0,
+                        window=window)
+    return Scenario(
+        name=f"msg_incast{n_senders}_{algo}_{verb}"
+             f"_{int(msg_kb)}k_w{window}",
+        topology=topo, flows=flows,
+        fabric=FabricConfig(sim_time_s=sim_time_s, msg=msg,
+                            cc=cc if cc is not None else CcConfig(algo=algo),
+                            receiver_cfg=_recv_factory(mode, False)))
+
+
+def message_sweep_grid(msg_kb: Sequence[float] = (4.0, 64.0, 1024.0),
+                       window: Sequence[int] = (1, 16, 64),
+                       verb: Sequence[str] = ("write", "send"),
+                       algo: Sequence[str] = ("dcqcn", "timely", "hpcc"),
+                       **kw) -> Tuple[List[Scenario], List[dict]]:
+    """Message size x outstanding window x verb x CC algorithm grid over
+    :func:`message_incast` for :func:`repro.fabric.vector
+    .run_fabric_sweep` — the classic verbs sweep (ib_write_bw-style
+    size/queue-depth curves) as ONE vector program.  Per point the
+    results carry Mops (``msg_rate_mops``), GiB/s (``msg_goodput_gbps``)
+    and tail latency (``msg_p99_us``) — msg/cc are per-point parameters,
+    not structure, so all points share one compiled program."""
+    return fabric_grid(
+        lambda msg_kb, window, verb, algo: message_incast(
+            msg_kb=msg_kb, window=window, verb=verb, algo=algo, **kw),
+        msg_kb=list(msg_kb), window=list(window), verb=list(verb),
+        algo=list(algo))

@@ -10,10 +10,12 @@ sequential ``run_sim`` python loops.
 The exact same step function also runs batched under numpy (the
 ``backend="numpy"`` verification reference): both paths share a single
 source of truth and differ only in the array namespace and the ring
-scatter/gather, so their results agree to float32 round-off.  Per-message
-latency tracking is the one thing the vector model omits (it never feeds
-back into the byte dynamics), which keeps the recurrence identical to
-``run_sim`` — goodput matches the scalar simulator point-for-point.
+scatter/gather, so their results agree to float32 round-off.  This
+engine sweeps the *receiver* datapath only; op-granular message latency
+lives in the fabric layer (:mod:`repro.fabric.messages`, tracked by both
+``run_fabric`` and ``run_fabric_sweep`` via a log-bucket histogram) —
+here the recurrence stays identical to ``run_sim`` and goodput matches
+the scalar simulator point-for-point.
 
 The release rings are circular (mod-H indexing) rather than run_sim's
 full-horizon arrays: slot ``t % H`` is *written* every tick with that

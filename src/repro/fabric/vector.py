@@ -68,7 +68,10 @@ import numpy as np
 
 from ..core.datapath import N_QOS
 from ..core.dcqcn import DcqcnConfig
+from .cc import CcConfig
 from .hosts import hold_us_baseline, hold_us_jet
+from .messages import (HIST_BUCKETS, HIST_MIN_US, MSG_COUNT_EPS, hist_ratio,
+                       percentile_from_counts)
 from .topology import NEVER_TICK
 from ._scan import pick_unroll
 
@@ -76,7 +79,24 @@ _STAGES = 4          # NIC egress, leaf uplink, spine, leaf downlink
 
 # pvals entries that stay integer (tick indices, codes, ring offsets)
 _INT_KEYS = frozenset(["d_base", "d_strag", "cnp_dly", "fail_at",
-                       "fail_until", "rmode", "flet", "settle", "sched"])
+                       "fail_until", "rmode", "flet", "settle", "sched",
+                       "cc_algo"])
+
+# CcConfig knobs stacked per flow when any point runs a non-DCQCN
+# controller (masked `where` lanes select the algorithm per flow)
+_CC_SCALARS = [
+    ("cc_minr", lambda c: c.min_rate_gbps),
+    ("base_rtt", lambda c: c.base_rtt_us),
+    ("cc_upd", lambda c: c.update_us),
+    ("t_low", lambda c: c.t_low_us),
+    ("t_high", lambda c: c.t_high_us),
+    ("tl_beta", lambda c: c.timely_beta),
+    ("tl_add", lambda c: c.timely_add_gbps),
+    ("tl_a", lambda c: c.timely_ewma),
+    ("hp_eta", lambda c: c.hpcc_eta),
+    ("hp_ai", lambda c: c.hpcc_ai_gbps),
+]
+_CC_DEFAULT = CcConfig()
 
 
 # --------------------------------------------------------------------------- #
@@ -174,6 +194,9 @@ class FabricSweepParams:
     host_tc: bool = False                # any point runs per-TC host PFC
     settle_ring: int = 1                 # Hs (spray reorder settling)
     n_spines: int = 0
+    any_cc: bool = False                 # any point runs a non-DCQCN CC
+    any_msg: bool = False                # any point runs the message layer
+    msg_ring: int = 1                    # Lm (message start-time ring)
 
     @classmethod
     def from_scenarios(cls, scens: Sequence) -> "FabricSweepParams":
@@ -195,6 +218,29 @@ class FabricSweepParams:
         host_tc = any(s.fabric.switch.per_tc
                       and s.fabric.receiver_cfg(h).host_pfc_per_tc
                       for s in scens for h in recv_hosts)
+
+        # message layer / CC zoo: per-flow Flow overrides falling back to
+        # the FabricConfig defaults, resolved exactly as run_fabric does
+        def msg_of(s):
+            return [f.msg if f.msg is not None else s.fabric.msg
+                    for f in s.flows]
+
+        def cc_of(s):
+            return [f.cc if f.cc is not None else s.fabric.cc
+                    for f in s.flows]
+
+        any_msg = any(m is not None for s in scens for m in msg_of(s))
+        any_cc = any(c is not None and c.algo != "dcqcn"
+                     for s in scens for c in cc_of(s))
+        if any_msg:
+            for s in scens:
+                for m in msg_of(s):
+                    if m is not None and m.window is None:
+                        raise ValueError(
+                            "MessageConfig.window=None (unbounded) is "
+                            "scalar-only; the vector engines carry "
+                            "message starts in a fixed ring — set a "
+                            "finite window or use run_fabric")
         for s in scens:
             s.topology.validate()
             if s.fabric.dt_us != dt or \
@@ -374,9 +420,10 @@ class FabricSweepParams:
                                 "d_base", "d_strag", "cnp_dly", "clsF",
                                 "on_us", "off_us", "fail_at", "fail_until",
                                 "rmode", "flet", "hystb", "settle",
-                                "sched", "quanta", "hpfc"]}
+                                "sched", "quanta", "hpfc",
+                                "m_bytes", "m_win", "m_extra", "cc_algo"]}
         for name, _ in _RECV_SCALARS + _DCQCN_SCALARS + _SWITCH_SCALARS \
-                + _SWITCH_TC:
+                + _SWITCH_TC + _CC_SCALARS:
             pv[name] = []
         # switch traffic class of each flow as a [Q, F] one-hot, built
         # once from flows0: the structure check above rejects grids
@@ -435,7 +482,8 @@ class FabricSweepParams:
                 pv["fail_until"].append([ft.get(k, nv)[1]
                                          for k in port_keys])
                 pv["rmode"].append(rc.mode_code())
-                pv["flet"].append(max(1, int(round(rc.flowlet_us / dt))))
+                pv["flet"].append(max(1, int(round(rc.flowlet_gap_us
+                                                   / dt))))
                 pv["hystb"].append(rc.hysteresis_frac
                                    * sw.port_buffer_bytes)
                 stl = int(round(rc.spray_settle_us / dt)) \
@@ -451,8 +499,29 @@ class FabricSweepParams:
                     else 0.0 for h in recv_hosts])
             line = [s.topology.access_gbps(f.src) for f in s.flows]
             pv["line"].append(line)
-            pv["cap"].append([np.inf if f.offered_gbps is None
-                              else f.offered_gbps for f in s.flows])
+            msgs, ccs = msg_of(s), cc_of(s)
+            # the per-op issue gap is one more rate ceiling (the Mops
+            # plateau): folded into the offered cap — min() is order-free,
+            # so this matches SenderHost.offer's separate clamp exactly
+            pv["cap"].append([
+                min(np.inf if f.offered_gbps is None else f.offered_gbps,
+                    np.inf if m is None else m.op_rate_gbps)
+                for f, m in zip(s.flows, msgs)])
+            if any_msg:
+                # m_bytes=inf disables the layer per flow: zero messages
+                # ever start or complete and the window room is infinite
+                pv["m_bytes"].append([np.inf if m is None
+                                      else float(m.msg_bytes)
+                                      for m in msgs])
+                pv["m_win"].append([1.0 if m is None else float(m.window)
+                                    for m in msgs])
+                pv["m_extra"].append([0.0 if m is None else m.extra_us
+                                      for m in msgs])
+            if any_cc:
+                cl = [c if c is not None else _CC_DEFAULT for c in ccs]
+                pv["cc_algo"].append([c.code() for c in cl])
+                for name, fn in _CC_SCALARS:
+                    pv[name].append([fn(c) for c in cl])
             pv["burst"].append([np.inf if f.burst_bytes is None
                                 else f.burst_bytes for f in s.flows])
             pv["start"].append([f.start_us for f in s.flows])
@@ -462,7 +531,12 @@ class FabricSweepParams:
                                  else f.on_off_us[1] for f in s.flows])
             pv["cnp_iv_f"].append([rcfgs[f.dst].cnp_interval_us
                                    for f in s.flows])
-            dcq = [DcqcnConfig(line_rate_gbps=lr) for lr in line]
+            # a CcConfig(algo="dcqcn") carrying a DcqcnConfig override
+            # replaces the per-line-rate defaults (make_controller)
+            dcq = [c.dcqcn if (c is not None and c.algo == "dcqcn"
+                               and c.dcqcn is not None)
+                   else DcqcnConfig(line_rate_gbps=lr)
+                   for c, lr in zip(ccs, line)]
             for name, fn in _DCQCN_SCALARS:
                 pv[name].append([fn(d) for d in dcq])
         pvals = {k: np.asarray(v, np.int32 if k in _INT_KEYS
@@ -471,6 +545,9 @@ class FabricSweepParams:
         H = int(max(pvals["d_base"].max(), pvals["d_strag"].max())) + 2
         Hc = int(pvals["cnp_dly"].max()) + 1
         Hs = int(pvals["settle"].max()) + 1 if dyn else 1
+        # message start-time ring: the window bound keeps outstanding
+        # <= W+1; +4 leaves slack for float32 count jitter at boundaries
+        Lm = int(pvals["m_win"].max()) + 4 if any_msg else 1
 
         h = hashlib.sha1()
         extras = [a for a in (upP, dnP, candS, crossF, T1, init_spine)
@@ -479,7 +556,7 @@ class FabricSweepParams:
                     prev_onehot, owner_recv, *extras):
             h.update(np.ascontiguousarray(arr).tobytes())
         h.update(repr((F, P, R, ticks, dt, H, Hc, Hs, Sn, dyn, any_wrr,
-                       host_tc)).encode())
+                       host_tc, any_cc, any_msg, Lm)).encode())
         return cls(port_keys=port_keys, recv_hosts=recv_hosts,
                    flow_tags=[f.tag for f in flows0],
                    stage_mask=stage_mask, occ=occ, dest=dest,
@@ -491,7 +568,8 @@ class FabricSweepParams:
                    upP=upP, dnP=dnP, candS=candS, crossF=crossF, T1=T1,
                    init_spine=init_spine, dyn_route=dyn, any_wrr=any_wrr,
                    host_tc=host_tc, settle_ring=Hs,
-                   n_spines=Sn if dyn else 0)
+                   n_spines=Sn if dyn else 0,
+                   any_cc=any_cc, any_msg=any_msg, msg_ring=Lm)
 
 
 # --------------------------------------------------------------------------- #
@@ -523,6 +601,8 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
     dyn, wrr = o.get("dyn", False), o.get("wrr", False)
     host_tc, Hs = o.get("host_tc", False), o.get("Hs", 1)
     Sn = o.get("Sn", 0)
+    any_cc, any_msg = o.get("cc", False), o.get("msg", False)
+    Lm = o.get("Lm", 1)
     f = dtype
     bpt = f(1e9 / 8.0 * dt * 1e-6)       # bytes per (Gbps * tick)
     fdt = f(dt)
@@ -533,6 +613,7 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
     # loop-invariant per-point quantities, computed once outside the scan
     budget = p["gbps"] * bpt
     budget_crumb = budget * f(1e-6)
+    budgetP = budget                     # step() shadows `budget` locally
     buf = p["buf"][..., None]
     # switch traffic classes: clsF is the per-point [Q, F] flow->TC
     # one-hot (all flows on TC 0 for legacy per-link points); the per-TC
@@ -568,6 +649,20 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
         bufSF = p["buf"][..., None, None]           # vs [.., S, F]
         hystF = p["hystb"][..., None]               # vs [.., F]
         arangeS = xp.arange(Sn, dtype=xp.int32)[:, None]
+    if any_cc:
+        # algorithm lanes (CcConfig.code: 0 dcqcn, 1 timely, 2 hpcc)
+        is_dcqcn = p["cc_algo"] == 0
+        timely_m = p["cc_algo"] == 1
+        hpcc_m = p["cc_algo"] == 2
+        inv_brtt = one / p["base_rtt"]              # [.., F]
+        u_floor = f(0.01)
+    if any_msg:
+        arangeL = xp.arange(Lm, dtype=xp.int32)[:, None]       # [L, 1]
+        arangeB = xp.arange(HIST_BUCKETS, dtype=xp.int32)[:, None, None]
+        hist_lo = f(HIST_MIN_US)
+        inv_lr = f(1.0 / np.log(hist_ratio()))
+        eps_m = f(MSG_COUNT_EPS)
+        wbytes = p["m_win"] * p["m_bytes"]          # window, in bytes
 
     def cut(s, fire):
         """DCQCN on_cnp for flows where ``fire`` holds."""
@@ -698,9 +793,10 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
         fold(s, "injected", "inj_lo")
         fold(s, "delivered", "deliv_lo")
 
-        # ---- 0. link failure events + routing weights --------------------- #
+        # ---- 0. link failure events --------------------------------------- #
         upf = None
         D0 = None
+        route_oh = None
         if dyn:
             downP = (t >= p["fail_at"]) & (t < p["fail_until"])   # [.., P]
             upf = xp.where(downP, zero, one)
@@ -711,7 +807,84 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
             s["inj_lo"] = s["inj_lo"] - lostF
             s["sw_dropped"] = s["sw_dropped"] + lostF.sum(-1)
             s["qm"] = s["qm"] * (one - failf)[..., None, :, None]
+
+        # ---- 1. senders: DCQCN advance + offer ---------------------------- #
+        adv = now > p["start"]
+        # the DCQCN timer machinery only moves DCQCN-lane flows; the CC
+        # block after forwarding writes the timely/hpcc rates instead
+        dadv = (adv & is_dcqcn) if any_cc else adv
+        adv_dt = xp.where(dadv, fdt, zero)
+        a_tus = s["a_tus"] + adv_dt
+        a_fire = dadv & (a_tus >= p["a_tmr"])
+        s["alpha"] = xp.where(a_fire, (1.0 - p["g"]) * s["alpha"],
+                              s["alpha"])
+        s["a_tus"] = xp.where(a_fire, zero, a_tus)
+        t_us = s["t_us"] + adv_dt
+        byts = xp.where(dadv, s["byts"] + s["rc"] * bpt, s["byts"])
+        t_fire = dadv & (t_us >= p["r_tmr"])
+        s["t_stage"] = s["t_stage"] + t_fire
+        s["t_us"] = xp.where(t_fire, zero, t_us)
+        b_fire = dadv & (byts >= p["bctr"])
+        s["b_stage"] = s["b_stage"] + b_fire
+        s["byts"] = xp.where(b_fire, zero, byts)
+        fired = t_fire | b_fire
+        stage = xp.minimum(s["t_stage"], s["b_stage"])
+        s["rt"] = xp.where(fired & (stage == p["fth"]),
+                           xp.minimum(p["dline"], s["rt"] + p["ai"]),
+                           s["rt"])
+        s["rt"] = xp.where(fired & (stage > p["fth"]),
+                           xp.minimum(p["dline"], s["rt"] + p["hai"]),
+                           s["rt"])
+        s["rc"] = xp.where(fired,
+                           xp.minimum(p["dline"],
+                                      0.5 * (s["rc"] + s["rt"])),
+                           s["rc"])
+
+        gbps = xp.minimum(s["rc"], linecap)
+        room = xp.maximum(p["burst"] - (s["injected"] + s["inj_lo"]), zero)
+        # burst-train duty cycle: the DCQCN machine keeps running, the
+        # tap only opens during the on-phase (matches SenderHost.offer)
+        active = adv & (~onoff | (xp.fmod(now - p["start"], period)
+                                  < p["on_us"]))
+        offer = xp.where(active, xp.minimum(gbps * bpt, room), zero)
+        if any_msg:
+            # outstanding message window: injection never runs more than
+            # W*msg_bytes ahead of delivery (start-of-tick counters, the
+            # exact clamp SenderHost.offer applies via window_room)
+            wroom = xp.maximum(
+                wbytes - (s["injected"] + s["inj_lo"]
+                          - s["delivered"] - s["deliv_lo"]), zero)
+            offer = xp.minimum(offer, wroom)
+        # source-side backpressure: the NIC queue never overflows, bytes
+        # that don't fit in the flow's class partition stay un-injected
+        off_pf = st["occ"][0] * offer[..., None, :]
+        tot_q = class_tot(off_pf)                         # [.., Q, P]
+        space_q = xp.maximum(
+            buf_tc - class_tot(s["qm"][..., 0, :, :]), zero)
+        scale_q = xp.where(tot_q > space_q,
+                           space_q / xp.maximum(tot_q, tiny), one)
+        scale_pf = xp.matmul(xp.swapaxes(scale_q, -1, -2), clsF)
+        take_f = offer * (st["occ"][0] * scale_pf).sum(-2)
+        s["inj_lo"] = s["inj_lo"] + take_f
+        s["qm"] = s["qm"] + \
+            (st["occ"][0] * take_f[..., None, :])[..., None, :, :] \
+            * st["sel0"]
+
+        # ---- 1.5 routing weights (after injection, as run_fabric) --------- #
+        if dyn:
             if Sn:
+                # idle-gap flowlet tracking (run_fabric step 1): a flow
+                # injecting again after more than flowlet_gap ticks of
+                # silence opens a new flowlet; a continuously-backlogged
+                # flow never re-hashes (injection only touches NIC ports,
+                # so the uplink occupancies read below are unaffected)
+                act = take_f > zero
+                boundary = act & ((t - s["flet_last"])
+                                  > p["flet"][..., None])
+                k_new = s["flet_k"] + boundary.astype(xp.int32)
+                s["flet_k"] = k_new
+                s["flet_last"] = xp.where(act, xp.asarray(t, xp.int32),
+                                          s["flet_last"])
                 # per-tick spine selection (run_fabric step 1.5): uplink
                 # occupancy/up-state per candidate as [.., S, F] blocks
                 occP = s["qm"][..., 0, :, :].sum(-1)              # [.., P]
@@ -735,17 +908,16 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
                 # weighted ECMP: flowlet-boundary (or dead-path) re-hash
                 # against the free-space-weighted cumulative distribution;
                 # thresholding against the cumsum's own last element keeps
-                # the pick identical to routing.weighted_pick
-                boundary = (t % p["flet"]) == 0                   # [..]
-                k_id = t // p["flet"]
-                hv = ((arangeF + 1) * 40503
-                      + k_id[..., None] * 9973) % 65536
+                # the pick identical to routing.weighted_pick (modular
+                # reduction of k keeps every product inside int32)
+                kred = k_new % 65536
+                hv = ((arangeF + 1) * 40503 + kred * 9973) % 65536
                 hsh = hv.astype(dtype) / f(65536.0)               # [.., F]
                 cum = xp.cumsum(free, -2)
                 tot = cum[..., Sn - 1, :]                         # [.., F]
                 pick = xp.argmax(cum > (hsh * tot)[..., None, :],
                                  -2).astype(xp.int32)
-                repick = boundary[..., None] | ~up_cur
+                repick = boundary | ~up_cur
                 wec = xp.where(repick & (tot > zero), pick, cur)
                 m = p["rmode"][..., None]                         # [.., 1]
                 choice = xp.where(m == 2, adapt,
@@ -755,6 +927,7 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
                 s["route"] = choice
                 ch_oh = xp.where(arangeS == choice[..., None, :],
                                  one, zero)
+                route_oh = ch_oh
                 totS = tot[..., None, :]
                 spray_w = xp.where(totS > zero,
                                    free / xp.maximum(totS, tiny), ch_oh)
@@ -764,59 +937,12 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
             else:
                 D0 = st["dest"][0]
 
-        # ---- 1. senders: DCQCN advance + offer ---------------------------- #
-        adv = now > p["start"]
-        adv_dt = xp.where(adv, fdt, zero)
-        a_tus = s["a_tus"] + adv_dt
-        a_fire = adv & (a_tus >= p["a_tmr"])
-        s["alpha"] = xp.where(a_fire, (1.0 - p["g"]) * s["alpha"],
-                              s["alpha"])
-        s["a_tus"] = xp.where(a_fire, zero, a_tus)
-        t_us = s["t_us"] + adv_dt
-        byts = xp.where(adv, s["byts"] + s["rc"] * bpt, s["byts"])
-        t_fire = adv & (t_us >= p["r_tmr"])
-        s["t_stage"] = s["t_stage"] + t_fire
-        s["t_us"] = xp.where(t_fire, zero, t_us)
-        b_fire = adv & (byts >= p["bctr"])
-        s["b_stage"] = s["b_stage"] + b_fire
-        s["byts"] = xp.where(b_fire, zero, byts)
-        fired = t_fire | b_fire
-        stage = xp.minimum(s["t_stage"], s["b_stage"])
-        s["rt"] = xp.where(fired & (stage == p["fth"]),
-                           xp.minimum(p["dline"], s["rt"] + p["ai"]),
-                           s["rt"])
-        s["rt"] = xp.where(fired & (stage > p["fth"]),
-                           xp.minimum(p["dline"], s["rt"] + p["hai"]),
-                           s["rt"])
-        s["rc"] = xp.where(fired,
-                           xp.minimum(p["dline"],
-                                      0.5 * (s["rc"] + s["rt"])),
-                           s["rc"])
-
-        gbps = xp.minimum(s["rc"], linecap)
-        room = xp.maximum(p["burst"] - (s["injected"] + s["inj_lo"]), zero)
-        # burst-train duty cycle: the DCQCN machine keeps running, the
-        # tap only opens during the on-phase (matches SenderHost.offer)
-        active = adv & (~onoff | (xp.fmod(now - p["start"], period)
-                                  < p["on_us"]))
-        offer = xp.where(active, xp.minimum(gbps * bpt, room), zero)
-        # source-side backpressure: the NIC queue never overflows, bytes
-        # that don't fit in the flow's class partition stay un-injected
-        off_pf = st["occ"][0] * offer[..., None, :]
-        tot_q = class_tot(off_pf)                         # [.., Q, P]
-        space_q = xp.maximum(
-            buf_tc - class_tot(s["qm"][..., 0, :, :]), zero)
-        scale_q = xp.where(tot_q > space_q,
-                           space_q / xp.maximum(tot_q, tiny), one)
-        scale_pf = xp.matmul(xp.swapaxes(scale_q, -1, -2), clsF)
-        take_f = offer * (st["occ"][0] * scale_pf).sum(-2)
-        s["inj_lo"] = s["inj_lo"] + take_f
-        s["qm"] = s["qm"] + \
-            (st["occ"][0] * take_f[..., None, :])[..., None, :, :] \
-            * st["sel0"]
-
         # ---- 2. tier-ordered forwarding (cut-through within the tick) ---- #
         s, out = drain(s, 0, upf)
+        if any_cc:
+            # per-tick drained bytes per port: the txRate leg of the
+            # HPCC-style INT signal (run_fabric's tick_tx)
+            txP = out[..., 0, :, :].sum(-1)
         fbm = (st["occ"][0] * out).sum(-2)
         if dyn:
             # cross-leaf stage-0 output follows this tick's routing
@@ -825,6 +951,8 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
         else:
             s = enqueue(s, st["dest"][0] * fbm[..., None, :])
         s, out = drain(s, 1, upf)
+        if any_cc:
+            txP = txP + out[..., 0, :, :].sum(-1)
         if dyn:
             # uplink-stage output keeps its port-level provenance: the
             # static [P, F, P] map sends bytes drained at (leaf, spine)
@@ -836,9 +964,13 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
             fbm = (st["occ"][1] * out).sum(-2)
             s = enqueue(s, st["dest"][1] * fbm[..., None, :])
         s, out = drain(s, 2, upf)
+        if any_cc:
+            txP = txP + out[..., 0, :, :].sum(-1)
         fbm = (st["occ"][2] * out).sum(-2)
         s = enqueue(s, st["dest"][2] * fbm[..., None, :])
         s, out = drain(s, 3, upf)
+        if any_cc:
+            txP = txP + out[..., 0, :, :].sum(-1)
         fbm = (st["occ"][3] * out).sum(-2)
         if Hs > 1:
             # spray reorder settling: sprayed arrivals wait settle ticks
@@ -850,6 +982,64 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
                                      -3)[..., 0, :, :]
         arr_b = fbm[..., 0, :]
         arr_m = fbm[..., 1, :]
+
+        # ---- 2.2 delay/INT telemetry -> CC zoo updates -------------------- #
+        # end-of-forwarding queue state along each flow's current path,
+        # folded into rtt = base + sum(q/budget) and util = max per-hop
+        # (txRate/B + qlen/(B*T)) — run_fabric's loop as masked lanes
+        if any_cc:
+            qP = s["qm"][..., 0, :, :].sum(-1)                # [.., P]
+            if dyn and Sn:
+                leg1 = xp.einsum('...sf,sfp->...pf', route_oh, st["upP"])
+                leg2 = xp.einsum('...sf,sfp->...pf', route_oh, st["dnP"])
+            elif dyn:
+                leg1 = leg2 = None
+            else:
+                leg1, leg2 = st["occ"][1], st["occ"][2]
+            qd = zero
+            util = zero
+            for leg in (st["occ"][0], leg1, leg2, st["occ"][3]):
+                if leg is None:
+                    continue
+                # [P, F] (static) or [.., P, F] (routed) one-hot gathers
+                q_l = (leg * qP[..., :, None]).sum(-2)        # [.., F]
+                tx_l = (leg * txP[..., :, None]).sum(-2)
+                b_l = (leg * budgetP[..., :, None]).sum(-2)
+                ok = b_l > zero
+                qd = qd + xp.where(ok, q_l / xp.maximum(b_l, tiny), zero)
+                u_l = xp.where(ok, (tx_l + q_l * (fdt * inv_brtt))
+                               / xp.maximum(b_l, tiny), zero)
+                util = xp.maximum(util, u_l)
+            rtt = p["base_rtt"] + qd * fdt
+            ctus = s["cc_tus"] + fdt
+            fire = ctus >= p["cc_upd"]
+            s["cc_tus"] = xp.where(fire, zero, ctus)
+            # Timely: smoothed RTT gradient picks the branch
+            ft = fire & timely_m
+            diff = rtt - s["prev_rtt"]
+            rd_new = (1.0 - p["tl_a"]) * s["rtt_diff"] + p["tl_a"] * diff
+            s["prev_rtt"] = xp.where(ft, rtt, s["prev_rtt"])
+            s["rtt_diff"] = xp.where(ft, rd_new, s["rtt_diff"])
+            grad = rd_new * inv_brtt
+            rc = s["rc"]
+            r_tim = xp.where(
+                rtt < p["t_low"], rc + p["tl_add"],
+                xp.where(rtt > p["t_high"],
+                         rc * (one - p["tl_beta"]
+                               * (one - p["t_high"] / rtt)),
+                         xp.where(grad <= zero, rc + p["tl_add"],
+                                  rc * xp.maximum(
+                                      zero, one - p["tl_beta"] * grad))))
+            rc_tim = xp.minimum(p["line"],
+                                xp.maximum(p["cc_minr"], r_tim))
+            # HPCC: drive max per-hop utilization toward eta
+            fh = fire & hpcc_m
+            mult = xp.clip(p["hp_eta"] / xp.maximum(util, u_floor),
+                           half, f(2.0))
+            rc_hp = xp.minimum(p["line"],
+                               xp.maximum(p["cc_minr"],
+                                          rc * mult + p["hp_ai"]))
+            s["rc"] = xp.where(ft, rc_tim, xp.where(fh, rc_hp, rc))
 
         # ---- 3. receivers advance one tick (HostDatapath, stacked) -------- #
         arr_rb = st["recv_onehot"] * arr_b[..., None, :]
@@ -1027,9 +1217,12 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
         cidx = (t - p["cnp_dly"]) % Hc
         due = xp.take_along_axis(s["cring"], cidx[..., None, None, :],
                                  -3)[..., 0, :, :]
-        s = cut(s, due[..., 0, :] > half)
-        s = cut(s, due[..., 1, :] > half)
-        s = cut(s, due[..., 2, :] > half)
+        for j in range(3):
+            fire_c = due[..., j, :] > half
+            if any_cc:
+                # timely/hpcc ignore CNPs (CongestionControl.on_cnp)
+                fire_c = fire_c & is_dcqcn
+            s = cut(s, fire_c)
 
         # ---- 5. per-priority PFC pause propagation ------------------------ #
         q0 = s["qm"][..., 0, :, :]
@@ -1060,6 +1253,42 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
         else:
             rx_gate = s["pfc"][..., st["owner_clamp"]] & st["owner_valid"]
             s["paused"] = link_paused | rx_gate[..., None, :]
+
+        # ---- 6. message-layer crossings (MessageTracker, stacked) --------- #
+        # end-of-tick byte counters (post re-credit, so go-back-N losses
+        # keep the affected messages open): ceil counts starts (first
+        # byte enters the stream), floor counts completions, both with
+        # the MSG_COUNT_EPS slack; the start-time ring plays the
+        # tracker's per-message start list
+        if any_msg:
+            inj_tot = s["injected"] + s["inj_lo"]
+            del_tot = s["delivered"] + s["deliv_lo"]
+            mb = p["m_bytes"]
+            ns = xp.ceil(inj_tot / mb - eps_m).astype(xp.int32)
+            hw = s["m_hw"]
+            new_s = xp.maximum(ns - hw, 0)         # go-back-N: hw grows
+            woff = (arangeL - hw[..., None, :] % Lm) % Lm   # [.., L, F]
+            wmask = woff < new_s[..., None, :]
+            s["mring"] = xp.where(wmask, now - fdt, s["mring"])
+            hw = hw + new_s
+            s["m_hw"] = hw
+            nd = xp.minimum(xp.floor(del_tot / mb + eps_m)
+                            .astype(xp.int32), hw)
+            done = s["m_done"]
+            new_d = xp.maximum(nd - done, 0)
+            roff = (arangeL - done[..., None, :] % Lm) % Lm
+            rmask = roff < new_d[..., None, :]
+            lat = now - s["mring"] + p["m_extra"][..., None, :]
+            s["m_lat"] = s["m_lat"] + xp.where(rmask, lat, zero).sum(-2)
+            # fixed-bucket log histogram (messages.hist_bucket arithmetic)
+            bi = xp.floor(xp.log(xp.maximum(lat, hist_lo) / hist_lo)
+                          * inv_lr).astype(xp.int32)
+            bi = xp.clip(bi, 0, HIST_BUCKETS - 1)
+            inc = (arangeB == bi[..., None, :, :]) \
+                & rmask[..., None, :, :]           # [.., B, L, F]
+            s["m_hist"] = s["m_hist"] + xp.where(inc, one, zero).sum(-2)
+            s["m_done"] = done + new_d
+            s["m_last"] = xp.where(new_d > 0, now, s["m_last"])
         return s
 
     return step
@@ -1116,8 +1345,28 @@ def _init_state(xp, lead, fsp: FabricSweepParams, p, dtype):
             + xp.asarray(fsp.init_spine)
         s["reroutes"] = z(F)
         s["tx"] = z(P)
+        if fsp.n_spines:
+            # idle-gap flowlet state: per-flow flowlet index + last
+            # active tick (far past, so the first injection opens a
+            # flowlet — run_fabric's -(1 << 30) sentinel)
+            s["flet_k"] = xp.zeros(lead + (F,), xp.int32)
+            s["flet_last"] = xp.full(lead + (F,), -(1 << 30), xp.int32)
     if fsp.settle_ring > 1:
         s["sring"] = z(fsp.settle_ring, 2, F)
+    if fsp.any_cc:
+        # delay/INT controller carries (TimelyRate/HpccRate)
+        s["prev_rtt"] = p["base_rtt"] + z(F)
+        s["rtt_diff"] = z(F)
+        s["cc_tus"] = z(F)
+    if fsp.any_msg:
+        # message-layer carries: started/completed counts, start-time
+        # ring, latency sum and the fixed-bucket log histogram
+        s["m_hw"] = xp.zeros(lead + (F,), xp.int32)
+        s["m_done"] = xp.zeros(lead + (F,), xp.int32)
+        s["mring"] = z(fsp.msg_ring, F)
+        s["m_lat"] = z(F)
+        s["m_last"] = z(F)
+        s["m_hist"] = z(HIST_BUCKETS, F)
     return s
 
 
@@ -1193,6 +1442,33 @@ def _results(s, fsp: FabricSweepParams) -> Dict[str, np.ndarray]:
         "recv_rnic_dropped_bytes": np.asarray(s["rnic_drop"], np.float64),
         "recv_mem_fallback_bytes": np.asarray(s["mem_fb"], np.float64),
     }
+    if fsp.any_msg:
+        # message-layer outputs: per-flow counts, the grid-level log
+        # histogram (summed over flows) and its percentile estimates —
+        # zeros wherever no messages completed (the PR 2 NaN-safety
+        # convention)
+        mmask = np.isfinite(fsp.pvals["m_bytes"])            # [G, F]
+        cnt = np.where(mmask, np.asarray(s["m_done"], np.float64), 0.0)
+        tot = cnt.sum(-1)
+        hist = np.asarray(s["m_hist"], np.float64).sum(-1)   # [G, B]
+        lat_sum = np.asarray(s["m_lat"], np.float64).sum(-1)
+        mbytes = np.where(mmask, fsp.pvals["m_bytes"], 0.0)
+        out["msg_count"] = cnt
+        out["msg_count_total"] = tot
+        out["msg_hist"] = hist
+        out["msg_p50_us"] = percentile_from_counts(hist, 50.0)
+        out["msg_p99_us"] = percentile_from_counts(hist, 99.0)
+        out["msg_p999_us"] = percentile_from_counts(hist, 99.9)
+        out["msg_lat_mean_us"] = np.where(
+            tot > 0.0, lat_sum / np.maximum(tot, 1.0), 0.0)
+        out["msg_rate_mops"] = tot / sim_us
+        out["msg_goodput_gbps"] = (cnt * mbytes).sum(-1) * per_gbps
+        out["msg_last_done_us"] = np.where(
+            mmask, np.asarray(s["m_last"], np.float64), 0.0)
+        out["has_messages"] = mmask.any(-1)
+    else:
+        out["msg_count_total"] = np.zeros(G)
+        out["has_messages"] = np.zeros(G, bool)
     if "reroutes" in s:
         rr = np.asarray(s["reroutes"], np.float64)
         out["flow_reroutes"] = rr
@@ -1237,7 +1513,8 @@ def _opts(fsp: FabricSweepParams) -> dict:
     """Trace-time capability flags for :func:`_make_step`."""
     return {"dyn": fsp.dyn_route, "wrr": fsp.any_wrr,
             "host_tc": fsp.host_tc, "Hs": fsp.settle_ring,
-            "Sn": fsp.n_spines}
+            "Sn": fsp.n_spines, "cc": fsp.any_cc, "msg": fsp.any_msg,
+            "Lm": fsp.msg_ring}
 
 
 def _run_numpy(fsp: FabricSweepParams, dtype=np.float64):

@@ -59,7 +59,7 @@ def test_routing_config_validates():
     with pytest.raises(ValueError):
         RoutingConfig(mode="ecmp5")
     with pytest.raises(ValueError):
-        RoutingConfig(flowlet_us=0.0)
+        RoutingConfig(flowlet_gap_us=0.0)
     with pytest.raises(ValueError):
         RoutingConfig(hysteresis_frac=-0.1)
 
