@@ -34,6 +34,15 @@ Four parts:
    of the numpy engine's message bookkeeping (counts / completion
    times vs the scalar tracker) and the histogram-p99 error vs the
    scalar exact percentile, gating the documented ~4.6% bound.
+7. **Faults grid** — the robustness program: loss-rate x recovery-mode
+   over the lossy 8-to-1 verbs incast as ONE vector program carrying
+   the per-flow RTO/retransmit ledgers, plus a receiver crash--restart
+   point; records warm speedup vs the scalar loop and gates the fault
+   accounting (counter-based hashing makes the loss realization
+   engine-identical: retransmit/dropped bytes agree to f64 round-off,
+   message counts exactly, and the zero-loss selective point drops
+   exactly zero packets — only real wire loss or go-back-N duplicate
+   discards may feed ``dropped_pkts``).
 
 Everything is also written machine-readable to
 ``experiments/bench/BENCH_fabric.json`` so the perf trajectory is
@@ -340,6 +349,86 @@ def run_messages_bench() -> List[Dict]:
     }]
 
 
+def run_faults_bench() -> List[Dict]:
+    from repro.fabric.faults import FaultConfig
+
+    rates = (0.0, 0.01) if QUICK else (0.0, 0.002, 0.01, 0.05)
+    scens, pts = SC.lossy_incast_grid(
+        loss_rate=rates, recovery=("go_back_n", "selective"),
+        sim_time_s=_sim_time(0.004))
+
+    t0 = time.time()
+    scalar = [sc.run() for sc in scens]
+    t_scalar = time.time() - t0
+    t0 = time.time()
+    run_fabric_sweep(scens, backend="jax")
+    t_cold = time.time() - t0
+    t0 = time.time()
+    jx = run_fabric_sweep(scens, backend="jax")
+    t_warm = time.time() - t0
+    t0 = time.time()
+    ref = run_fabric_sweep(scens, backend="numpy")
+    t_np = time.time() - t0
+
+    F = len(scens[0].flows)
+    # the counter-based hash gives every engine the same loss
+    # realization -> the fault accounting must agree to f64 round-off
+    retx_sc = np.array([r.retransmit_bytes for r in scalar])
+    drop_sc = np.array([r.dropped_pkts for r in scalar])
+    cnt_sc = np.array([[len(r.msg_latency_us.get(f, []))
+                        for f in range(F)] for r in scalar])
+    dev_retx = float(np.max(np.abs(ref["retransmit_bytes"] - retx_sc)
+                            / np.maximum(retx_sc, 1.0)))
+    dev_drop = float(np.max(np.abs(ref["dropped_pkts"] - drop_sc)
+                            / np.maximum(drop_sc, 1.0)))
+    count_mismatch = int(np.abs(ref["msg_count"] - cnt_sc).sum())
+    # zero wire loss + selective: nothing gaps, nothing is discarded —
+    # dropped_pkts must be exactly 0 (go-back-N still discards dups on
+    # RNIC admission shortfalls, so only the selective point qualifies)
+    lossless_sel = [i for i, p in enumerate(pts)
+                    if p["loss_rate"] == 0.0
+                    and p["recovery"] == "selective"]
+    lossless_sel_dropped = float(ref["dropped_pkts"][lossless_sel].sum())
+
+    def pick(arr, rec, rate):
+        return next(float(arr[i]) for i, p in enumerate(pts)
+                    if p["recovery"] == rec and p["loss_rate"] == rate)
+
+    worst = max(rates)
+
+    # crash--restart: receiver dies mid-incast, the RTO ledgers replay
+    crash = SC.lossy_incast(loss_rate=0.005, recovery="selective",
+                            sim_time_s=_sim_time(0.004))
+    crash.fabric.faults = FaultConfig(loss_rate=0.005, seed=7).crash(
+        "h1_0", at_us=400.0, restart_us=600.0)
+    cr_sc = crash.run()
+    cr_np = run_fabric_sweep([crash], backend="numpy")
+    cr_dev = abs(float(np.ravel(cr_np["crash_recovery_us"][0])[0])
+                 - cr_sc.crash_recovery_us["h1_0"])
+
+    return [{
+        "grid_points": len(scens),
+        "flows": F,
+        "scalar_run_fabric_s": t_scalar,
+        "numpy_batched_s": t_np,
+        "jax_cold_s": t_cold,
+        "jax_warm_s": t_warm,
+        "speedup_warm": t_scalar / t_warm,
+        "dev_retransmit_numpy_vs_scalar": dev_retx,
+        "dev_dropped_numpy_vs_scalar": dev_drop,
+        "count_mismatch_numpy_vs_scalar": count_mismatch,
+        "lossless_sel_dropped_pkts": lossless_sel_dropped,
+        "crash_recovery_dev_us": cr_dev,
+        "crash_recovery_us": cr_sc.crash_recovery_us["h1_0"],
+        "gbn_retx_mb_worst": pick(ref["retransmit_bytes"], "go_back_n",
+                                  worst) / 1e6,
+        "sel_retx_mb_worst": pick(ref["retransmit_bytes"], "selective",
+                                  worst) / 1e6,
+        "gbn_p999_us_worst": pick(jx["msg_p999_us"], "go_back_n", worst),
+        "sel_p999_us_worst": pick(jx["msg_p999_us"], "selective", worst),
+    }]
+
+
 def _jsonable(obj):
     """Strict-JSON payload: non-finite floats become None (json.dump's
     Infinity/NaN literals break jq / JSON.parse on the CI artifact)."""
@@ -371,6 +460,8 @@ def main() -> None:
     emit(NAME + "_routing", rt)
     ms = run_messages_bench()
     emit(NAME + "_messages", ms)
+    ft = run_faults_bench()
+    emit(NAME + "_faults", ft)
 
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(JSON_PATH, "w") as f:
@@ -378,7 +469,8 @@ def main() -> None:
                              "equivalence": eq, "sweep": sw[0],
                              "fabric_sweep": fs[0],
                              "routing": rt[0],
-                             "messages": ms[0]}), f, indent=2)
+                             "messages": ms[0],
+                             "faults": ft[0]}), f, indent=2)
 
     worst_eq = max(r["rel_err"] for r in eq)
     s, v = sw[0], fs[0]
@@ -408,6 +500,17 @@ def main() -> None:
           f"hist-p99 err {m['p99_hist_err_vs_exact']:.2%} (bound 4.6%); "
           f"p99 dcqcn {m['dcqcn_p99_us']:.0f} us vs timely "
           f"{m['timely_p99_us']:.0f} / hpcc {m['hpcc_p99_us']:.0f} us")
+    ff = ft[0]
+    print(f"# faults grid {ff['grid_points']} pts (loss x recovery, one "
+          f"program): x{ff['speedup_warm']:.1f} warm vs scalar; retx dev "
+          f"{ff['dev_retransmit_numpy_vs_scalar']:.2e}, count mismatch "
+          f"{ff['count_mismatch_numpy_vs_scalar']}; at worst loss "
+          f"go-back-N replays {ff['gbn_retx_mb_worst']:.1f} MB "
+          f"(p999 {ff['gbn_p999_us_worst']:.0f} us) vs selective "
+          f"{ff['sel_retx_mb_worst']:.1f} MB "
+          f"(p999 {ff['sel_p999_us_worst']:.0f} us); crash recovery "
+          f"{ff['crash_recovery_us']:.0f} us (engine dev "
+          f"{ff['crash_recovery_dev_us']:.1e})")
     print(f"# machine-readable: {os.path.abspath(JSON_PATH)}")
 
 

@@ -1,0 +1,81 @@
+"""Loss recovery under fault injection: go-back-N vs selective retransmit.
+
+The last mile of the paper's argument assumes a lossless fabric — PFC
+holds packets back instead of dropping them.  Real deployments run PFC
+off (or per-priority) and eat stochastic loss: cut through a lossy link
+and RDMA's go-back-N replays the whole window per drop, which is why
+IRN-style selective retransmit is the standard fix.  This example puts
+numbers on that gap with the fault layer (``repro.fabric.faults``):
+
+* an 8-to-1 verbs incast where every link drops a stochastic fraction
+  of its ticks (counter-based hash — the same loss realization hits the
+  scalar, numpy and jax engines tick-for-tick);
+* the loss-rate x recovery-mode grid runs as ONE vectorized program
+  (``lossy_incast_grid`` -> ``run_fabric_sweep``): go-back-N's p999
+  and retransmitted bytes blow up with loss while selective stays
+  near the lossless baseline;
+* a NIC crash--restart: the receiver dies mid-incast, its admission
+  state zeroes, in-flight arrivals are discarded until restart — and
+  every sender's RTO ledger replays the lost span, so all flows still
+  complete (``crash_recovery_us`` stamps the first accepted byte).
+
+  PYTHONPATH=src python examples/fault_recovery.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.fabric.faults import FaultConfig  # noqa: E402
+from repro.fabric.scenarios import lossy_incast, lossy_incast_grid  # noqa: E402
+from repro.fabric.vector import run_fabric_sweep  # noqa: E402
+
+
+def main() -> None:
+    # ---- loss-rate x recovery grid, one vectorized program ----------- #
+    rates = (0.0, 0.005, 0.02)
+    scens, points = lossy_incast_grid(
+        loss_rate=rates, recovery=("go_back_n", "selective"),
+        sim_time_s=0.002)
+    t0 = time.time()
+    out = run_fabric_sweep(scens)
+    dt = time.time() - t0
+    print(f"--- lossy incast grid: {len(scens)} points "
+          f"(loss-rate x recovery) in {dt:.1f}s, one program\n")
+    hdr = (f"{'recovery':10s} {'loss':>6s} {'msgs':>6s} {'p99 us':>9s}"
+           f" {'p999 us':>9s} {'retx MB':>9s} {'lost pkts':>10s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for i, p in enumerate(points):
+        print(f"{p['recovery']:10s} {p['loss_rate']:6.3f}"
+              f" {out['msg_count_total'][i]:6.0f}"
+              f" {out['msg_p99_us'][i]:9.1f} {out['msg_p999_us'][i]:9.1f}"
+              f" {out['retransmit_bytes'][i] / 1e6:9.2f}"
+              f" {out['dropped_pkts'][i]:10.1f}")
+
+    def p999(rec, rate):
+        return next(out["msg_p999_us"][i] for i, p in enumerate(points)
+                    if p["recovery"] == rec and p["loss_rate"] == rate)
+    worst = max(rates)
+    print(f"\n--- p999 at {worst:.0%} loss: "
+          f"go-back-N {p999('go_back_n', worst):.0f} us vs "
+          f"selective {p999('selective', worst):.0f} us — replaying only "
+          f"the lost span keeps the tail near the lossless baseline "
+          f"({p999('selective', 0.0):.0f} us)")
+
+    # ---- NIC crash--restart: liveness through a dead receiver -------- #
+    sc = lossy_incast(loss_rate=0.005, recovery="selective",
+                      sim_time_s=0.002)
+    sc.fabric.faults = FaultConfig(loss_rate=0.005, seed=7).crash(
+        "h1_0", at_us=400.0, restart_us=600.0)
+    r = sc.run()
+    print(f"\n--- crash--restart: receiver h1_0 dies at 400 us, "
+          f"restarts at 600 us")
+    print(f"    first byte re-accepted {r.crash_recovery_us['h1_0']:.0f} us "
+          f"after the crash; {sum(len(v) for v in r.msg_latency_us.values())}"
+          f" messages still completed "
+          f"({r.retransmit_bytes / 1e6:.1f} MB replayed)")
+
+
+if __name__ == "__main__":
+    main()

@@ -203,6 +203,24 @@ class HostDatapath:
         self.d_base = max(1, int(self.hold_us / self.dt))
         self.d_strag = max(1, int(self.hold_us * c.straggler_mult / self.dt))
 
+    def crash_reset(self) -> None:
+        """NIC/host crash (fault layer): every byte in flight through
+        the datapath is gone — RNIC class queues, resident pool
+        contents, straggler state, escape/replace debts, and all
+        pending release buckets.  Cumulative accounting counters are
+        deliberately preserved (they describe the run, not the
+        machine)."""
+        self.rel_base[:] = 0.0
+        self.rel_strag[:] = 0.0
+        for cls in range(N_QOS):
+            self.qos_q[cls] = 0.0
+        self.resident = 0.0
+        self.strag_resident = 0.0
+        self.escape_debt = 0.0
+        self.replace_debt = 0.0
+        self.replace_mem = 0.0
+        self.ecn_escape_accum_us = 0.0
+
     # -- RNIC buffer ---------------------------------------------------------
     @property
     def rnic_q(self) -> float:

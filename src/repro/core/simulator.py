@@ -204,6 +204,15 @@ class ReceiverHost:
         self.hold_j = hold_us_jet(c)
         self.t = 0
 
+    def crash_reset(self) -> None:
+        """NIC/host crash (fabric fault layer): zero the admission and
+        pause state the link sees — the datapath's in-flight bytes and
+        the PFC gate — keeping cumulative counters and message
+        bookkeeping (a restarted host resumes the same run)."""
+        self.dp.crash_reset()
+        self.pfc_paused = False
+        self.pfc_paused_cls = [False] * N_QOS
+
     # network-facing views of the shared datapath state
     @property
     def rnic_q(self) -> float:

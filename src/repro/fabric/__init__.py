@@ -23,6 +23,12 @@
              scalar driver, a fixed-bucket log histogram with a proven
              relative error bound in the vector engines — see "The
              message layer" below
+- faults:    fault-injection + loss-recovery layer (`FaultConfig`):
+             per-link stochastic loss/corruption, link flaps
+             (`Topology.flap_link`), NIC/host crash--restart, sender
+             RTO timers with exponential backoff and IRN-style
+             selective retransmit (`MessageConfig.recovery`), plus a
+             PFC-deadlock watchdog — see "The fault layer" below
 - cc:        pluggable congestion-control zoo (`CcConfig`): DCQCN
              (default, bit-equal to the pre-zoo driver), Timely
              delay-gradient and HPCC utilization controllers,
@@ -189,6 +195,53 @@ times feed latency percentiles in every engine:
 ONE vectorized program, reporting Mops, goodput GiB/s and p99 per
 point — the msg-rate-vs-msg-size curve of the paper's Fig. 2 family.
 
+The fault layer
+---------------
+The fluid core is lossless by construction — drops exist only as the
+instant drop-re-credit idiom.  `FabricConfig.faults` attaches a
+:class:`~repro.fabric.faults.FaultConfig` and makes failure a
+first-class, *deterministic* experiment axis:
+
+- **stochastic link loss** (`loss_rate`, per-link `link_loss`
+  overrides, an independent `corrupt_rate` stream on the receiver
+  access links): a link drops everything it drained on a tick iff
+  ``hash(tick, link_salt) < floor(rate * 65536)``.  The hash is pure
+  modular int arithmetic seeded from the link *name*, so the scalar
+  driver, the batched-numpy engine and the jax engine see
+  bit-identical fault realizations — fault runs stay
+  equivalence-testable, and loss-rate sweeps are coherent (raising the
+  rate only *adds* drops to the same realization; nested thresholds).
+- **link flaps**: `Topology.flap_link(src, dst, start_us, period_us,
+  down_us)` generalizes `fail_link` to a periodic up/down schedule;
+  in-flight bytes drop on each down edge and dynamic routing modes
+  steer around the hole every cycle.
+- **NIC/host crash--restart**: `FaultConfig.crash(host, at_us,
+  restart_us)` zeroes the receiver's admission state at `at_us`, drops
+  everything queued on its access link, and discards arrivals until
+  `restart_us`; `FabricResult.crash_recovery_us` stamps the first
+  re-accepted byte after restart.
+- **loss recovery**: flows with a message config get a sender-side
+  retransmission ledger replacing the instant re-credit.
+  `MessageConfig.recovery` picks ``"go_back_n"`` (RTO with exponential
+  backoff — `rto_us` x `rto_backoff`**k capped at `rto_cap`, reset on
+  delivery progress; bytes arriving while the window is gapped are
+  discarded as duplicates and replayed too) or IRN-style
+  ``"selective"`` (arrivals keep landing; only the lost span replays
+  after a short `nack_us` NACK delay).  `examples/fault_recovery.py`
+  puts numbers on the gap: under stochastic loss go-back-N's p999 and
+  retransmitted bytes blow up while selective stays near the lossless
+  baseline (asserted in tests/test_faults.py).
+- **graceful-degradation metrics**: `FabricResult.dropped_pkts`,
+  `retransmit_bytes`, `crash_recovery_us`, `deadlock_ticks` (a per-tick
+  PFC pause-cycle watchdog, scalar driver only), and the routing-aware
+  PFC-storm view `pause_tc_fanout` / `n_pausable_links` /
+  `pause_storm()` (paused fraction of the pausable link set, NaN-safe).
+
+All fault knobs ride the sweep axes like every other parameter:
+`scenarios.lossy_incast` / `lossy_incast_grid` race loss-rate x
+recovery-mode grids as ONE vectorized program.  ``faults=None`` (the
+default) is bit-equal to the pre-fault engines.
+
 Choosing a congestion controller
 --------------------------------
 `FabricConfig.cc` (or per-flow `Flow.cc`) selects the rate controller
@@ -225,12 +278,14 @@ within the histogram bound).
 from .cc import CC_ALGOS, CcConfig, HpccRate, TimelyRate, make_controller
 from .fabric import (FabricConfig, FabricResult, Flow, burst_done_bytes,
                      run_fabric)
+from .faults import FaultConfig, FlowRecovery, has_pause_cycle
 from .hosts import HostFeedback, ReceiverHost, SenderHost
 from .messages import (LogHistogram, MessageConfig, MessageTracker,
                        exact_percentile, percentile_from_counts)
 from .routing import ROUTING_MODES, RoutingConfig
 from .scenarios import (Scenario, all_to_all, fabric_grid, incast,
-                        link_failure_incast, message_incast,
+                        link_failure_incast, lossy_incast,
+                        lossy_incast_grid, message_incast,
                         message_sweep_grid, mixed_fleet,
                         mixed_fleet_grid, olap_shuffle, qos_mixed_grid,
                         qos_mixed_storage, routing_grid, single_pair,
@@ -242,13 +297,16 @@ from .vector import FabricSweepParams, run_fabric_sweep
 
 __all__ = [
     "CC_ALGOS", "CcConfig", "FabricConfig", "FabricResult",
-    "FabricSweepParams", "Flow", "HostFeedback", "HpccRate", "Link",
+    "FabricSweepParams", "FaultConfig", "Flow", "FlowRecovery",
+    "HostFeedback", "HpccRate", "Link",
     "LogHistogram", "MessageConfig", "MessageTracker", "OutputPort",
     "ROUTING_MODES", "ReceiverHost", "RoutingConfig", "Scenario",
     "SenderHost", "Switch", "SwitchConfig", "SweepParams", "TimelyRate",
     "Topology", "all_to_all", "burst_done_bytes", "clos",
-    "exact_percentile", "fabric_grid", "grid_configs", "incast",
+    "exact_percentile", "fabric_grid", "grid_configs",
+    "has_pause_cycle", "incast",
     "incast_fabric", "jet_testbed", "link_failure_incast",
+    "lossy_incast", "lossy_incast_grid",
     "make_controller", "message_incast", "message_sweep_grid",
     "mixed_fleet", "mixed_fleet_grid", "olap_shuffle",
     "percentile_from_counts", "qos_mixed_grid", "qos_mixed_storage",

@@ -50,6 +50,9 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 from ..core.datapath import N_QOS, QoS
 from ..core.simulator import SimConfig, SimResult, testbed_100g
 from .cc import CcConfig
+from .faults import (FaultConfig, FlowRecovery, corrupt_hash, fault_hash,
+                     flap_down_now, flap_edge, has_pause_cycle, link_salt,
+                     loss_threshold)
 from .hosts import ReceiverHost, SenderHost
 from .messages import MessageConfig, MessageTracker, exact_percentile
 from .routing import (RoutingConfig, adaptive_pick, flowlet_hash,
@@ -122,6 +125,12 @@ class FabricConfig:
     # semantics and per-line-rate DCQCN exactly
     msg: Optional[MessageConfig] = None
     cc: Optional[CcConfig] = None
+    # fault injection + loss recovery (repro.fabric.faults).  None is
+    # bit-equal to the pre-fault engines; any FaultConfig — even an
+    # all-zero one — also engages the RTO/retransmit ledger for every
+    # flow carrying a MessageConfig (MessageConfig.recovery picks
+    # go-back-N vs IRN-style selective)
+    faults: Optional[FaultConfig] = None
 
 
 @dataclasses.dataclass
@@ -159,6 +168,37 @@ class FabricResult:
         dataclasses.field(default_factory=dict)
     has_messages: bool = False               # any flow ran the op layer
     sim_us: float = 0.0                      # simulated horizon
+    # fault layer (FabricConfig.faults) — graceful-degradation metrics.
+    # dropped_pkts counts fault-injected drops only (stochastic loss,
+    # corruption, flap/fail in-flight kills, crash discards, go-back-N
+    # duplicate discards) in MTU units; buffer tail drops stay in
+    # switch_dropped_bytes as before
+    dropped_pkts: float = 0.0
+    retransmit_bytes: float = 0.0            # recovery-ledger re-credits
+    # crashed host -> us from crash to first post-restart accepted byte
+    # (inf if it never recovered within the horizon)
+    crash_recovery_us: Dict[str, float] = \
+        dataclasses.field(default_factory=dict)
+    deadlock_ticks: int = 0                  # ticks with a cyclic per-TC
+    #                                          pause dependency (scalar
+    #                                          watchdog; vector reports 0)
+    # routing-aware PFC-storm observability: per-TC count of distinct
+    # ingress links ever paused, against the candidate ingress sets the
+    # routing layer could steer through (OutputPort.static_ingress /
+    # the vector prev-mat)
+    pause_tc_fanout: Dict[int, int] = dataclasses.field(default_factory=dict)
+    n_pausable_links: int = 0
+
+    def pause_storm(self) -> float:
+        """PFC-storm severity: the worst traffic class's pause fan-out
+        as a fraction of the candidate ingress links it *could* pause
+        under the active routing mode.  1.0 = some class paused every
+        candidate ingress at least once; 0.0 (never NaN) when nothing
+        paused or the fabric has no pausable links — same contract as
+        :meth:`uplink_imbalance`."""
+        if not self.pause_tc_fanout or self.n_pausable_links <= 0:
+            return 0.0
+        return max(self.pause_tc_fanout.values()) / self.n_pausable_links
 
     def _msg_pool(self, tag: Optional[str]) -> List[float]:
         return [v for fid, vals in self.msg_latency_us.items()
@@ -231,9 +271,11 @@ def run_fabric(topo: Topology, flows: List[Flow],
         # would diverge from the per-class watermark arithmetic
         raise ValueError("host_pfc_per_tc requires SwitchConfig.per_tc")
     # dynamic-routing land: per-tick spine selection and/or link-failure
-    # events.  Static ECMP without failures takes the frozen next_hop
-    # fast path below, bit-equal to the pre-routing-layer driver.
-    dyn = rcfg.is_dynamic or bool(fail_ticks)
+    # events (scheduled windows or flap cycles).  Static ECMP without
+    # failures takes the frozen next_hop fast path below, bit-equal to
+    # the pre-routing-layer driver.
+    flaps = topo.flap_ticks(dt)
+    dyn = rcfg.is_dynamic or bool(fail_ticks) or bool(flaps)
 
     # per-flow message-layer / CC resolution (Flow overrides FabricConfig)
     msg_of: List[Optional[MessageConfig]] = [f.msg or fcfg.msg
@@ -368,6 +410,70 @@ def run_fabric(topo: Topology, flows: List[Flow],
     # pause behaviour)
     tc_of = [int(f.qos) if fcfg.switch.per_tc else 0 for f in flows]
 
+    # -- fault layer (repro.fabric.faults) -----------------------------------
+    flt = fcfg.faults
+    # recovery ledgers: engaged per flow iff a FaultConfig is attached
+    # AND the flow runs the message layer; every other flow keeps the
+    # fluid core's instant drop-re-credit via lose()
+    recovery: Dict[int, FlowRecovery] = {}
+    if flt is not None:
+        for fid, m in enumerate(msg_of):
+            if m is not None:
+                recovery[fid] = FlowRecovery.from_msg(m, dt)
+
+    def lose(fid: int, b: float) -> None:
+        """Route dropped bytes: into the flow's retransmit ledger when
+        recovery is engaged, else instantly re-credited (go-back-N of
+        the fluid core) — bit-identical to the pre-fault driver when
+        ``recovery`` is empty."""
+        rec = recovery.get(fid)
+        if rec is None:
+            senders[fid].credit(b)
+        else:
+            rec.on_loss(b)
+
+    # stochastic loss: one counter-based hash per (link, tick); the
+    # whole drained batch drops when it fires (fluid burst loss), so
+    # the expected byte-loss fraction equals the configured rate.  The
+    # corruption stream models CRC failures at the receiving NIC and
+    # only applies to receiver access links.
+    flt_loss = flt is not None and flt.any_loss
+    if flt_loss:
+        salt_of = {lk: link_salt(lk[0], lk[1], flt.seed)
+                   for lk in port_by_link}
+        loss_thr = {lk: loss_threshold(flt.rate_for(*lk))
+                    for lk in port_by_link}
+        corr_thr = {lk: (loss_threshold(flt.corrupt_rate)
+                         if lk[1] in receivers else 0)
+                    for lk in port_by_link}
+    # NIC/host crash--restart windows in tick space
+    crash_win: Dict[str, Tuple[int, int]] = {}
+    if flt is not None:
+        for h, (a_us, r_us) in flt.crashes.items():
+            if h not in receivers:
+                raise ValueError(f"crash scheduled on {h!r}, which is "
+                                 "not a receiver in this run")
+            at = max(0, int(round(a_us / dt)))
+            crash_win[h] = (at, max(at + 1, int(round(r_us / dt))))
+    crash_rec_us: Dict[str, float] = {}     # first post-restart byte
+    flt_dropped = 0.0                       # fault-injected drops, bytes
+    deadlock_ticks = 0
+    prog_set: Set[int] = set()              # flows delivered-to this tick
+
+    # candidate ingress links that PFC could ever pause (the routing-
+    # aware denominator of FabricResult.pause_storm): every flow's
+    # access link plus, cross-leaf, the uplink/downlink of each
+    # candidate spine (all spines in dynamic-routing land, the frozen
+    # one under static ECMP) — the scalar twin of the vector prev-mat
+    pausable: Set[LinkKey] = set()
+    for fid, f in enumerate(flows):
+        sl, dl = flow_leaves[fid]
+        pausable.add((f.src, sl))
+        if sl != dl:
+            for s in (spines if dyn else [next_hop[(sl, fid)]]):
+                pausable.add((sl, s))
+                pausable.add((s, dl))
+
     # -- per-flow CNP pacing at the receiver NP (DCQCN) ----------------------
     cnp_accum_us = {fid: math.inf for fid in senders}   # immediate first CNP
     marked_backlog = {fid: 0.0 for fid in senders}
@@ -408,24 +514,35 @@ def run_fabric(topo: Topology, flows: List[Flow],
     def flush(batches: Batches) -> None:
         """Enqueue one stage's accumulated arrivals, one batch per
         destination port; tail-dropped bytes are re-credited to their
-        senders (fluid go-back-N retransmission)."""
+        senders (fluid go-back-N retransmission) or, with recovery
+        engaged, wait in the retransmit ledger."""
         for (sw, dst), items in batches.items():
             for fid, lost in switches[sw].ports[dst] \
                     .enqueue_batch(items).items():
-                senders[fid].injected -= lost
+                lose(fid, lost)
 
     def drain_stage(ports, arrivals, batches: Batches,
-                    down_now: frozenset) -> None:
+                    down_now: frozenset, t: int) -> float:
         """Drain ``ports`` [(owner switch or None, port)]; forwarded bytes
         land in next-hop ``batches``, host-bound bytes in ``arrivals``.
         Dead links forward nothing; a cross-leaf flow without a frozen
-        next hop is split over ``route_frac`` (this tick's routing)."""
+        next hop is split over ``route_frac`` (this tick's routing).
+        Returns the bytes killed by stochastic loss/corruption."""
+        killed = 0.0
         for owner, port in ports:
             lk = port.link.key
             if lk in down_now:
                 continue
             dst = port.link.dst
             to_host = dst in hosts_set
+            # stochastic faults: when the per-(link, tick) hash fires,
+            # everything this port drains this tick is lost on the wire
+            # (ECN marks ride the bytes and die with them)
+            drop_link = False
+            if flt_loss:
+                drop_link = fault_hash(t, salt_of[lk]) < loss_thr[lk]
+                if not drop_link and corr_thr[lk]:
+                    drop_link = corrupt_hash(t, salt_of[lk]) < corr_thr[lk]
             # switch-side PFC is per (link, tc); the receiver-side RNIC
             # gate pauses its whole access link, or — with
             # host_pfc_per_tc — only the congested admission classes
@@ -441,6 +558,10 @@ def run_fabric(topo: Topology, flows: List[Flow],
                         port.paused = rx.pfc_paused
             track = lk in uplink_tx
             for fid, b, m in port.drain(dt):
+                if drop_link:
+                    lose(fid, b)
+                    killed += b
+                    continue
                 if track:
                     uplink_tx[lk] += b
                 if need_cc:
@@ -460,6 +581,7 @@ def run_fabric(topo: Topology, flows: List[Flow],
                             batches.setdefault((dst, sp_name), []) \
                                 .append((fid, b * fr, m * fr, lk,
                                          tc_of[fid]))
+        return killed
 
     # the four forwarding stages of one tick, in traversal order; a port
     # drains once per tick, after every same-tick upstream stage has
@@ -478,19 +600,40 @@ def run_fabric(topo: Topology, flows: List[Flow],
     _no_links: frozenset = frozenset()
     for t in range(ticks):
         now_us = (t + 1) * dt
-        # ---- 0. link failure events --------------------------------------- #
+        # ---- 0. link failure / flap / crash events ------------------------ #
         down_now = _no_links
-        if fail_ticks:
-            down_now = frozenset(lk for lk, (a, u) in fail_ticks.items()
-                                 if a <= t < u)
-            for lk, (a, _) in fail_ticks.items():
+        if fail_ticks or flaps:
+            down = {lk for lk, (a, u) in fail_ticks.items() if a <= t < u}
+            edges = [lk for lk, (a, _) in fail_ticks.items() if a == t]
+            for lk, (s0, per, dn) in flaps.items():
+                if flap_down_now(t, s0, per, dn):
+                    down.add(lk)
+                if flap_edge(t, s0, per):
+                    edges.append(lk)
+            down_now = frozenset(down)
+            for lk in edges:
+                port = port_by_link.get(lk)
+                if port is not None:
+                    # in-flight bytes die with the link; fluid
+                    # go-back-N (or the recovery ledger) re-credits
+                    # them for retransmission
+                    for fid, lost in port.drop_all().items():
+                        lose(fid, lost)
+                        if flt is not None:
+                            flt_dropped += lost
+        if crash_win:
+            for h, (a, _) in crash_win.items():
                 if a == t:
-                    port = port_by_link.get(lk)
+                    # the NIC dies: everything queued on the access
+                    # link is lost and the receiver's admission state
+                    # zeroes; arrivals are discarded until restart
+                    port = port_by_link.get((topo.host_leaf[h], h))
                     if port is not None:
-                        # in-flight bytes die with the link; fluid
-                        # go-back-N re-credits them for retransmission
                         for fid, lost in port.drop_all().items():
-                            senders[fid].injected -= lost
+                            lose(fid, lost)
+                            flt_dropped += lost
+                    receivers[h].crash_reset()
+                    last_heavy[h] = None
 
         # ---- 1. senders inject into their NIC queue ----------------------- #
         # one batch per NIC port: each class's buffer partition is split
@@ -581,7 +724,8 @@ def run_fabric(topo: Topology, flows: List[Flow],
             tick_tx.clear()
         for stage in (stage_nic, stage_up, stage_spine, stage_down):
             batches: Batches = {}
-            drain_stage(stage, arrivals, batches, down_now)
+            flt_dropped += drain_stage(stage, arrivals, batches,
+                                       down_now, t)
             flush(batches)
 
         # ---- 2.2 congestion signals: path delay + INT utilization --------- #
@@ -636,6 +780,24 @@ def run_fabric(topo: Topology, flows: List[Flow],
         # ---- 3. receivers advance; CNPs route back ------------------------ #
         for host, rx in receivers.items():
             arr = arrivals.get(host, {})
+            # fault layer: a crashed host discards everything on its
+            # access link until restart; a gapped go-back-N window
+            # discards out-of-order arrivals as duplicates (both feed
+            # the retransmit ledger / instant re-credit via lose())
+            cw = crash_win.get(host)
+            if cw is not None and cw[0] <= t < cw[1] and arr:
+                for fid, (b, _) in arr.items():
+                    lose(fid, b)
+                    flt_dropped += b
+                arr = {}
+            if recovery and arr:
+                for fid in list(arr):
+                    rec = recovery.get(fid)
+                    if rec is not None and rec.gapped:
+                        b = arr[fid][0]
+                        rec.on_arrival(b)    # dup: discarded + ledgered
+                        flt_dropped += b
+                        del arr[fid]
             # arrivals enter the datapath's QoS admission classes: RNIC
             # buffer space is granted in priority order, so a LOW-class
             # bulk flow can no longer crowd out a HIGH-class one
@@ -644,6 +806,10 @@ def run_fabric(topo: Topology, flows: List[Flow],
                 per_class[flows[fid].qos] += b
             total = sum(per_class)
             fb = rx.step(per_class)
+            if cw is not None and t >= cw[1] and fb.accepted > 0.0 \
+                    and host not in crash_rec_us:
+                # first byte accepted after restart: recovery latency
+                crash_rec_us[host] = now_us - cw[0] * dt
             if total > 0.0:
                 acc = fb.accepted_qos or [0.0] * N_QOS
                 share = [acc[q] / per_class[q] if per_class[q] > 0.0
@@ -652,7 +818,9 @@ def run_fabric(topo: Topology, flows: List[Flow],
                     d = b * share[flows[fid].qos]
                     delivered[fid] += d
                     # RNIC tail-drops are retransmitted too (fluid RC)
-                    senders[fid].injected -= b - d
+                    lose(fid, b - d)
+                    if recovery and d > 0.0:
+                        prog_set.add(fid)
                     f = flows[fid]
                     if (f.burst_bytes is not None
                             and math.isinf(completion[fid])
@@ -706,10 +874,24 @@ def run_fabric(topo: Topology, flows: List[Flow],
             tr.observe(now_us, senders[fid].injected, delivered[fid],
                        start_us=t * dt)
 
+        # ---- 3.7 retransmit timers (fault layer) -------------------------- #
+        # after the message observe: both engines record this tick's
+        # latencies against the pre-fire injected count, and the
+        # re-credit reopens the sender's tap from the next offer on
+        if recovery:
+            for fid, rec in recovery.items():
+                credit = rec.tick(fid in prog_set)
+                if credit > 0.0:
+                    senders[fid].credit(credit)
+            prog_set.clear()
+
         # ---- 4. PFC pause propagation ------------------------------------- #
         paused_pairs: Set[PauseKey] = set()
         for sw in switches.values():
             paused_pairs |= sw.update_pfc()
+        if flt is not None and paused_pairs \
+                and has_pause_cycle(paused_pairs):
+            deadlock_ticks += 1
         by_link: Dict[LinkKey, Set[int]] = {}
         for lk, tc in paused_pairs:
             by_link.setdefault(lk, set()).add(tc)
@@ -732,6 +914,9 @@ def run_fabric(topo: Topology, flows: List[Flow],
     for lk, tx in uplink_tx.items():
         cap = topo.links[lk].gbps * 1e9 / 8.0 * (sim_us * 1e-6)
         uplink_util[lk] = tx / cap if cap > 0.0 else 0.0
+    pause_tc_fanout: Dict[int, int] = {}
+    for (lk, tc) in pause_tc_us:
+        pause_tc_fanout[tc] = pause_tc_fanout.get(tc, 0) + 1
     return FabricResult(
         per_host=per_host,
         flow_goodput_gbps=goodput,
@@ -757,4 +942,12 @@ def run_fabric(topo: Topology, flows: List[Flow],
                           for fid, tr in trackers.items()},
         has_messages=bool(trackers),
         sim_us=sim_us,
+        dropped_pkts=(flt_dropped / flt.mtu_bytes
+                      if flt is not None else 0.0),
+        retransmit_bytes=sum(r.retx_bytes for r in recovery.values()),
+        crash_recovery_us={h: crash_rec_us.get(h, math.inf)
+                           for h in crash_win},
+        deadlock_ticks=deadlock_ticks,
+        pause_tc_fanout=pause_tc_fanout,
+        n_pausable_links=len(pausable),
     )

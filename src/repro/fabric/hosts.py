@@ -116,6 +116,13 @@ class SenderHost:
         self.injected += b
         return b
 
+    def credit(self, b: float) -> None:
+        """Give back ``b`` injected bytes so the tap re-opens: either
+        the fluid core's instant drop-re-credit, or — under the fault
+        layer — a :class:`~repro.fabric.faults.FlowRecovery` ledger
+        firing a retransmission."""
+        self.injected -= b
+
     def on_cnp(self) -> None:
         self.rate.on_cnp()
 

@@ -58,6 +58,7 @@ import math
 from typing import List, Optional, Sequence
 
 VERBS = ("write", "send")
+RECOVERY_MODES = ("go_back_n", "selective")
 
 # log-histogram domain shared by every engine: 1 us (one tick — nothing
 # completes faster) to 100 ms (the default sim horizon)
@@ -89,6 +90,16 @@ class MessageConfig:
     send_gap_us: float = 0.70
     # two-sided receive completion cost added to every SEND's latency
     send_extra_us: float = 1.5
+    # loss recovery (active only when FabricConfig.faults is set — see
+    # repro.fabric.faults): go_back_n replays the whole outstanding
+    # span after an RTO with exponential backoff and discards
+    # out-of-gap arrivals as duplicates; selective (IRN-style) keeps
+    # what arrived and replays only the lost span after a NACK delay
+    recovery: str = "go_back_n"
+    rto_us: float = 50.0                 # base retransmission timeout
+    rto_backoff: float = 2.0             # RTO multiplier per retry
+    rto_cap: int = 6                     # max backoff doublings
+    nack_us: float = 8.0                 # selective-retransmit delay
 
     def __post_init__(self) -> None:
         if self.verb not in VERBS:
@@ -102,6 +113,15 @@ class MessageConfig:
             raise ValueError("per-op gaps must be positive")
         if self.send_extra_us < 0.0:
             raise ValueError("send_extra_us must be >= 0")
+        if self.recovery not in RECOVERY_MODES:
+            raise ValueError(f"unknown recovery {self.recovery!r}; "
+                             f"pick one of {RECOVERY_MODES}")
+        if self.rto_us <= 0.0 or self.nack_us <= 0.0:
+            raise ValueError("rto_us and nack_us must be positive")
+        if self.rto_backoff < 1.0:
+            raise ValueError("rto_backoff must be >= 1")
+        if self.rto_cap < 0:
+            raise ValueError("rto_cap must be >= 0")
 
     @property
     def op_gap_us(self) -> float:
@@ -126,6 +146,10 @@ class MessageConfig:
     def verb_code(self) -> int:
         """Integer code for stacked per-point parameters (vector)."""
         return VERBS.index(self.verb)
+
+    def recovery_code(self) -> int:
+        """Integer code for stacked per-point parameters (vector)."""
+        return RECOVERY_MODES.index(self.recovery)
 
 
 def msg_count(total_bytes: float, msg_bytes: float) -> int:

@@ -394,3 +394,50 @@ def message_sweep_grid(msg_kb: Sequence[float] = (4.0, 64.0, 1024.0),
             msg_kb=msg_kb, window=window, verb=verb, algo=algo, **kw),
         msg_kb=list(msg_kb), window=list(window), verb=list(verb),
         algo=list(algo))
+
+
+def lossy_incast(n_senders: int = 8, loss_rate: float = 0.01,
+                 recovery: str = "go_back_n", algo: str = "dcqcn",
+                 verb: str = "write", msg_kb: float = 64.0,
+                 window: int = 16, mode: str = "ddio", seed: int = 7,
+                 sim_time_s: float = 0.002,
+                 cc: Optional[CcConfig] = None) -> Scenario:
+    """:func:`message_incast` on a lossy fabric: every link drops a
+    stochastic ``loss_rate`` fraction of its ticks (counter-based hash,
+    identical realization in all three engines — see
+    :mod:`repro.fabric.faults`), and every flow recovers via
+    ``MessageConfig.recovery`` — ``"go_back_n"`` gaps the receive window
+    and replays from the RTO with exponential backoff, ``"selective"``
+    replays only the lost span after the NACK delay (IRN).  The p999 gap
+    between the two recovery modes under the same loss realization is
+    the fault layer's headline plot (``examples/fault_recovery.py``)."""
+    from .faults import FaultConfig
+    topo = incast_fabric(n_senders)
+    flows = [Flow(src=f"h0_{i}", dst="h1_0", tag="incast")
+             for i in range(n_senders)]
+    msg = MessageConfig(verb=verb, msg_bytes=msg_kb * 1024.0,
+                        window=window, recovery=recovery)
+    return Scenario(
+        name=f"lossy_incast{n_senders}_{recovery}"
+             f"_l{loss_rate:g}_{algo}_{int(msg_kb)}k",
+        topology=topo, flows=flows,
+        fabric=FabricConfig(sim_time_s=sim_time_s, msg=msg,
+                            cc=cc if cc is not None else CcConfig(algo=algo),
+                            faults=FaultConfig(loss_rate=loss_rate,
+                                               seed=seed),
+                            receiver_cfg=_recv_factory(mode, False)))
+
+
+def lossy_incast_grid(loss_rate: Sequence[float] = (0.002, 0.01, 0.05),
+                      recovery: Sequence[str] = ("go_back_n", "selective"),
+                      **kw) -> Tuple[List[Scenario], List[dict]]:
+    """Loss rate x recovery mode grid over :func:`lossy_incast` for
+    :func:`repro.fabric.vector.run_fabric_sweep` — fault parameters are
+    per-point sweep values, not structure, so the whole grid shares one
+    compiled program.  Per point the results carry ``dropped_pkts``,
+    ``retransmit_bytes`` and the message latency percentiles the
+    go-back-N vs selective comparison reads (``msg_p999_us``)."""
+    return fabric_grid(
+        lambda loss_rate, recovery: lossy_incast(
+            loss_rate=loss_rate, recovery=recovery, **kw),
+        loss_rate=list(loss_rate), recovery=list(recovery))

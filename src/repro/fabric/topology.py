@@ -7,8 +7,9 @@ short-circuits through its leaf, intra-leaf) — the pre-routing-layer
 behaviour and still the ``static_ecmp`` baseline.  Dynamic path
 selection lives in :mod:`repro.fabric.routing`; this module contributes
 the *candidate* structure (:meth:`candidate_spines`) and per-link
-up/down state with scheduled failure events (:meth:`fail_link`), which
-the drivers turn into per-tick reroutes under load.
+up/down state with scheduled failure events (:meth:`fail_link`) and
+periodic flap schedules (:meth:`flap_link`), which the drivers turn
+into per-tick reroutes under load.
 """
 from __future__ import annotations
 
@@ -43,6 +44,11 @@ class Topology:
     # scheduled failure windows: link key -> (down_at_us, restore_us);
     # a link is down while down_at_us <= t < restore_us
     link_down: Dict[LinkKey, Tuple[float, float]] = \
+        dataclasses.field(default_factory=dict)
+    # periodic flap schedules (generalized fail_link): link key ->
+    # (start_us, period_us, down_us); from start_us the link repeats a
+    # period_us cycle — down for the first down_us of each cycle
+    link_flaps: Dict[LinkKey, Tuple[float, float, float]] = \
         dataclasses.field(default_factory=dict)
 
     # -- queries ------------------------------------------------------------
@@ -112,9 +118,32 @@ class Topology:
             self.link_down[(dst, src)] = (at_us, restore_us)
         return self
 
+    def flap_link(self, src: str, dst: str, start_us: float,
+                  period_us: float, down_us: float,
+                  bidi: bool = True) -> "Topology":
+        """Schedule a periodic link flap: from ``start_us`` the link
+        repeats a ``period_us`` cycle, down for the first ``down_us``
+        of each cycle (in-flight bytes drop on every falling edge).
+        Returns ``self`` for chaining."""
+        if (src, dst) not in self.links:
+            raise ValueError(f"no link {src}->{dst} to flap")
+        if start_us < 0.0 or not 0.0 < down_us < period_us:
+            raise ValueError("need start_us >= 0 and 0 < down_us "
+                             "< period_us")
+        self.link_flaps[(src, dst)] = (start_us, period_us, down_us)
+        if bidi:
+            self.link_flaps[(dst, src)] = (start_us, period_us, down_us)
+        return self
+
     def link_up_at(self, key: LinkKey, now_us: float) -> bool:
         w = self.link_down.get(key)
-        return w is None or not (w[0] <= now_us < w[1])
+        if w is not None and w[0] <= now_us < w[1]:
+            return False
+        f = self.link_flaps.get(key)
+        if f is not None and now_us >= f[0] \
+                and (now_us - f[0]) % f[1] < f[2]:
+            return False
+        return True
 
     def failure_ticks(self, dt_us: float) -> Dict[LinkKey,
                                                   Tuple[int, int]]:
@@ -127,6 +156,20 @@ class Topology:
             until = NEVER_TICK if math.isinf(u) \
                 else max(at + 1, int(round(u / dt_us)))
             out[key] = (at, until)
+        return out
+
+    def flap_ticks(self, dt_us: float) -> Dict[LinkKey,
+                                               Tuple[int, int, int]]:
+        """Flap schedules as integer tick triples ``(start, period,
+        down)``; down while ``t >= start and (t - start) % period <
+        down`` — the contract every engine shares (see
+        :func:`repro.fabric.faults.flap_down_now`)."""
+        out = {}
+        for key, (s, p, d) in self.link_flaps.items():
+            start = max(0, int(round(s / dt_us)))
+            period = max(2, int(round(p / dt_us)))
+            down = min(period - 1, max(1, int(round(d / dt_us))))
+            out[key] = (start, period, down)
         return out
 
     # -- invariants ----------------------------------------------------------
@@ -159,6 +202,10 @@ class Topology:
         for key in self.link_down:
             if key not in self.links:
                 raise ValueError(f"failure scheduled on unknown link "
+                                 f"{key[0]}->{key[1]}")
+        for key in self.link_flaps:
+            if key not in self.links:
+                raise ValueError(f"flap scheduled on unknown link "
                                  f"{key[0]}->{key[1]}")
 
 

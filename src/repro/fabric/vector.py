@@ -70,6 +70,7 @@ from ..core.datapath import N_QOS
 from ..core.dcqcn import DcqcnConfig
 from .cc import CcConfig
 from .hosts import hold_us_baseline, hold_us_jet
+from .faults import link_salt, loss_threshold
 from .messages import (HIST_BUCKETS, HIST_MIN_US, MSG_COUNT_EPS, hist_ratio,
                        percentile_from_counts)
 from .topology import NEVER_TICK
@@ -80,7 +81,10 @@ _STAGES = 4          # NIC egress, leaf uplink, spine, leaf downlink
 # pvals entries that stay integer (tick indices, codes, ring offsets)
 _INT_KEYS = frozenset(["d_base", "d_strag", "cnp_dly", "fail_at",
                        "fail_until", "rmode", "flet", "settle", "sched",
-                       "cc_algo"])
+                       "cc_algo", "f_salt", "f_thr", "f_cthr",
+                       "flap_start", "flap_period", "flap_down",
+                       "crash_at", "crash_until", "rto_ticks",
+                       "nack_ticks", "rto_cap"])
 
 # CcConfig knobs stacked per flow when any point runs a non-DCQCN
 # controller (masked `where` lanes select the algorithm per flow)
@@ -197,6 +201,8 @@ class FabricSweepParams:
     any_cc: bool = False                 # any point runs a non-DCQCN CC
     any_msg: bool = False                # any point runs the message layer
     msg_ring: int = 1                    # Lm (message start-time ring)
+    any_flt: bool = False                # any point attaches a FaultConfig
+    any_flap: bool = False               # any point schedules link flaps
 
     @classmethod
     def from_scenarios(cls, scens: Sequence) -> "FabricSweepParams":
@@ -212,8 +218,10 @@ class FabricSweepParams:
         # engine-level capability flags: shared *structure*, selected per
         # point by plain parameters (rmode / sched / hpfc)
         dyn = any(s.fabric.routing.is_dynamic or bool(s.topology.link_down)
-                  for s in scens)
+                  or bool(s.topology.link_flaps) for s in scens)
         any_wrr = any(s.fabric.switch.scheduler == "wrr" for s in scens)
+        any_flt = any(s.fabric.faults is not None for s in scens)
+        any_flap = any(bool(s.topology.link_flaps) for s in scens)
         recv_hosts = sorted({f.dst for f in flows0})
         host_tc = any(s.fabric.switch.per_tc
                       and s.fabric.receiver_cfg(h).host_pfc_per_tc
@@ -421,7 +429,12 @@ class FabricSweepParams:
                                 "on_us", "off_us", "fail_at", "fail_until",
                                 "rmode", "flet", "hystb", "settle",
                                 "sched", "quanta", "hpfc",
-                                "m_bytes", "m_win", "m_extra", "cc_algo"]}
+                                "m_bytes", "m_win", "m_extra", "cc_algo",
+                                "f_salt", "f_thr", "f_cthr", "f_mtu",
+                                "flap_start", "flap_period", "flap_down",
+                                "crash_at", "crash_until", "rec_en",
+                                "rec_sel", "rto_ticks", "nack_ticks",
+                                "rto_cap", "rto_mult"]}
         for name, _ in _RECV_SCALARS + _DCQCN_SCALARS + _SWITCH_SCALARS \
                 + _SWITCH_TC + _CC_SCALARS:
             pv[name] = []
@@ -539,6 +552,69 @@ class FabricSweepParams:
                    for c, lr in zip(ccs, line)]
             for name, fn in _DCQCN_SCALARS:
                 pv[name].append([fn(d) for d in dcq])
+            if any_flap:
+                fl = topo.flap_ticks(dt)
+                nf = (NEVER_TICK, 2, 1)
+                pv["flap_start"].append([fl.get(k, nf)[0]
+                                         for k in port_keys])
+                pv["flap_period"].append([fl.get(k, nf)[1]
+                                          for k in port_keys])
+                pv["flap_down"].append([fl.get(k, nf)[2]
+                                        for k in port_keys])
+            if any_flt:
+                # fault layer: per-port hash salts/thresholds, crash
+                # windows per receiver, per-flow recovery knobs — a
+                # faults-None point packs never-firing values and
+                # mtu=inf, so its dropped_pkts stays exactly 0
+                ff = s.fabric.faults
+                if ff is None:
+                    pv["f_salt"].append([0] * P)
+                    pv["f_thr"].append([0] * P)
+                    pv["f_cthr"].append([0] * P)
+                    pv["crash_at"].append([NEVER_TICK] * R)
+                    pv["crash_until"].append([NEVER_TICK] * R)
+                    pv["f_mtu"].append(np.inf)
+                else:
+                    pv["f_salt"].append([link_salt(a, b, ff.seed)
+                                         for a, b in port_keys])
+                    pv["f_thr"].append([loss_threshold(ff.rate_for(a, b))
+                                        for a, b in port_keys])
+                    # corruption (CRC fail) only on receiver access links
+                    pv["f_cthr"].append([
+                        loss_threshold(ff.corrupt_rate) if b in ridx
+                        else 0 for a, b in port_keys])
+                    ca, cu = [NEVER_TICK] * R, [NEVER_TICK] * R
+                    for ch, (a_us, r_us) in ff.crashes.items():
+                        if ch not in ridx:
+                            raise ValueError(
+                                f"crash scheduled on {ch!r}, which is "
+                                "not a receiver in this fabric")
+                        at = max(0, int(round(a_us / dt)))
+                        ca[ridx[ch]] = at
+                        cu[ridx[ch]] = max(at + 1, int(round(r_us / dt)))
+                    pv["crash_at"].append(ca)
+                    pv["crash_until"].append(cu)
+                    pv["f_mtu"].append(ff.mtu_bytes)
+                # recovery ledgers engage per flow iff a FaultConfig is
+                # attached AND the flow carries a MessageConfig — same
+                # rule as run_fabric
+                pv["rec_en"].append([
+                    1.0 if (ff is not None and m is not None) else 0.0
+                    for m in msgs])
+                pv["rec_sel"].append([
+                    1.0 if (m is not None and m.recovery == "selective")
+                    else 0.0 for m in msgs])
+                pv["rto_ticks"].append([
+                    1 if m is None else max(1, int(round(m.rto_us / dt)))
+                    for m in msgs])
+                pv["nack_ticks"].append([
+                    1 if m is None else max(1, int(round(m.nack_us / dt)))
+                    for m in msgs])
+                pv["rto_cap"].append([0 if m is None else int(m.rto_cap)
+                                      for m in msgs])
+                pv["rto_mult"].append([1.0 if m is None
+                                       else float(m.rto_backoff)
+                                       for m in msgs])
         pvals = {k: np.asarray(v, np.int32 if k in _INT_KEYS
                                else np.float64)
                  for k, v in pv.items() if v}
@@ -556,7 +632,8 @@ class FabricSweepParams:
                     prev_onehot, owner_recv, *extras):
             h.update(np.ascontiguousarray(arr).tobytes())
         h.update(repr((F, P, R, ticks, dt, H, Hc, Hs, Sn, dyn, any_wrr,
-                       host_tc, any_cc, any_msg, Lm)).encode())
+                       host_tc, any_cc, any_msg, Lm, any_flt,
+                       any_flap)).encode())
         return cls(port_keys=port_keys, recv_hosts=recv_hosts,
                    flow_tags=[f.tag for f in flows0],
                    stage_mask=stage_mask, occ=occ, dest=dest,
@@ -569,7 +646,8 @@ class FabricSweepParams:
                    init_spine=init_spine, dyn_route=dyn, any_wrr=any_wrr,
                    host_tc=host_tc, settle_ring=Hs,
                    n_spines=Sn if dyn else 0,
-                   any_cc=any_cc, any_msg=any_msg, msg_ring=Lm)
+                   any_cc=any_cc, any_msg=any_msg, msg_ring=Lm,
+                   any_flt=any_flt, any_flap=any_flap)
 
 
 # --------------------------------------------------------------------------- #
@@ -593,7 +671,8 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
 
     ``opts`` carries the trace-time capability flags from
     :class:`FabricSweepParams` (``dyn`` routing, ``wrr`` scheduling,
-    ``host_tc`` receiver PFC, ``Hs`` spray-settle ring, ``Sn`` spines):
+    ``host_tc`` receiver PFC, ``Hs`` spray-settle ring, ``Sn`` spines,
+    ``flt`` fault injection + recovery, ``flap`` link-flap schedules):
     with everything off this builds exactly the pre-routing-layer
     program, so static grids stay bit-identical and pay nothing.
     """
@@ -603,6 +682,7 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
     Sn = o.get("Sn", 0)
     any_cc, any_msg = o.get("cc", False), o.get("msg", False)
     Lm = o.get("Lm", 1)
+    flt, flap = o.get("flt", False), o.get("flap", False)
     f = dtype
     bpt = f(1e9 / 8.0 * dt * 1e-6)       # bytes per (Gbps * tick)
     fdt = f(dt)
@@ -663,6 +743,30 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
         inv_lr = f(1.0 / np.log(hist_ratio()))
         eps_m = f(MSG_COUNT_EPS)
         wbytes = p["m_win"] * p["m_bytes"]          # window, in bytes
+    if flt:
+        # fault layer (repro.fabric.faults): per-flow recovery masks and
+        # the per-port counter-hash salts.  The scalar hash is
+        # ((t+1)*M + (salt+1)*9973) % 65536; here the tick multiplier is
+        # applied as a split modmul — (t+1) reduced mod 65536 then split
+        # into hi/lo bytes, with 256*40503 % 65536 = 14080 and
+        # 256*24593 % 65536 = 4352 — so every intermediate product stays
+        # far inside int32 at any tick count, and all three engines see
+        # bit-identical fault realizations
+        rec_en = p["rec_en"]                        # exact 1.0 / 0.0
+        rec_keep = one - rec_en
+        sel_b = p["rec_sel"] > half
+        gbn_b = (rec_en > half) & ~sel_b
+        saltp = (p["f_salt"] + 1) * 9973 % 65536    # [.., P]
+        rto_f = p["rto_ticks"].astype(dtype)
+
+        def ledger(s, lost_f):
+            """Route per-flow lost bytes [.., F]: the fluid core's
+            instant re-credit, or the recovery ledger where engaged
+            (run_fabric's ``lose()``); go-back-N losses gap the
+            receiver window."""
+            s["inj_lo"] = s["inj_lo"] - lost_f * rec_keep
+            s["lost"] = s["lost"] + lost_f * rec_en
+            s["gapped"] = s["gapped"] | (gbn_b & (lost_f > zero))
 
     def cut(s, fire):
         """DCQCN on_cnp for flows where ``fire`` holds."""
@@ -764,7 +868,11 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
         take = A * scale_pf[..., None, :, :]
         lost = (A - take)[..., 0, :, :]
         # fluid go-back-N: tail-dropped bytes re-open the sender's tap
-        s["inj_lo"] = s["inj_lo"] - lost.sum(-2)
+        # (or wait in the recovery ledger where it is engaged)
+        if flt:
+            ledger(s, lost.sum(-2))
+        else:
+            s["inj_lo"] = s["inj_lo"] - lost.sum(-2)
         s["sw_dropped"] = s["sw_dropped"] + lost.sum((-1, -2))
         mark_q = ecn_on[..., None, :] & (qtc > kmin_th)
         mark_pf = xp.matmul(xp.swapaxes(xp.where(mark_q, one, zero),
@@ -793,20 +901,82 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
         fold(s, "injected", "inj_lo")
         fold(s, "delivered", "deliv_lo")
 
-        # ---- 0. link failure events --------------------------------------- #
+        # ---- 0. link failure / flap / crash events ------------------------ #
         upf = None
         D0 = None
         route_oh = None
         if dyn:
             downP = (t >= p["fail_at"]) & (t < p["fail_until"])   # [.., P]
+            edgeP = t == p["fail_at"]
+            if flap:
+                # periodic flaps fold into the same down/edge masks
+                # (Topology.flap_ticks: down for the first `down` ticks
+                # of each `period` cycle from `start`)
+                since = t - p["flap_start"]
+                live = t >= p["flap_start"]
+                downP = downP | (live
+                                 & (since % p["flap_period"]
+                                    < p["flap_down"]))
+                edgeP = edgeP | (live & (since % p["flap_period"] == 0))
             upf = xp.where(downP, zero, one)
-            failf = xp.where(t == p["fail_at"], one, zero)
+            failf = xp.where(edgeP, one, zero)
             # in-flight bytes die with the link; fluid go-back-N
             # re-credits them for retransmission (run_fabric step 0)
             lostF = (s["qm"][..., 0, :, :] * failf[..., :, None]).sum(-2)
-            s["inj_lo"] = s["inj_lo"] - lostF
+            if flt:
+                ledger(s, lostF)
+                s["flt_drop"] = s["flt_drop"] + lostF.sum(-1)
+            else:
+                s["inj_lo"] = s["inj_lo"] - lostF
             s["sw_dropped"] = s["sw_dropped"] + lostF.sum(-1)
             s["qm"] = s["qm"] * (one - failf)[..., None, :, None]
+        if flt:
+            # NIC/host crash: everything queued on the crashed
+            # receiver's access link dies and its admission state
+            # zeroes (ReceiverHost.crash_reset); cumulative accounting
+            # counters and the CNP pacing clock survive the crash
+            crash_now = t == p["crash_at"]                        # [.., R]
+            crashP = crash_now[..., st["owner_clamp"]] \
+                & st["owner_valid"]                               # [.., P]
+            deadQ = xp.where(crashP[..., None, :, None], s["qm"], zero)
+            lostC = deadQ[..., 0, :, :].sum(-2)
+            ledger(s, lostC)
+            s["flt_drop"] = s["flt_drop"] + lostC.sum(-1)
+            s["sw_dropped"] = s["sw_dropped"] + lostC.sum(-1)
+            s["qm"] = s["qm"] - deadQ
+            cz = xp.where(crash_now, zero, one)
+            for ck in ("resident", "strag_res", "esc_debt", "repl_debt",
+                       "repl_mem", "ecn_tus"):
+                s[ck] = s[ck] * cz
+            s["qos_q"] = s["qos_q"] * cz[..., None, :]
+            s["ring"] = s["ring"] * cz[..., None, None, :]
+            s["pfc"] = s["pfc"] & ~(crash_now[..., None, :] if host_tc
+                                    else crash_now)
+            s["heavy"] = xp.where(crash_now, -1, s["heavy"])
+            # the cleared RNIC gate unpauses the access link this very
+            # tick (the scalar driver reads rx.pfc_paused live in its
+            # drain); switch-asserted pauses persist via the carried
+            # link-pause mask
+            s["paused"] = xp.where(crashP[..., None, :], s["lpause"],
+                                   s["paused"])
+            # stochastic loss/corruption: one counter hash per (link,
+            # tick); when it fires, everything the port drains this
+            # tick is lost on the wire (ECN marks die with the bytes)
+            tr = (t + 1) % 65536
+            thi, tlo = tr // 256, tr % 256
+            hl = (thi * 14080 + tlo * 40503 + saltp) % 65536
+            hc = (thi * 4352 + tlo * 24593 + saltp) % 65536
+            dropP = (hl < p["f_thr"]) | (hc < p["f_cthr"])        # [.., P]
+
+            def kill(s, out):
+                """Apply this tick's stochastic drops to one drained
+                stage [.., 2, P, F] — before tx accounting and
+                forwarding, as run_fabric's drain loop."""
+                dead = xp.where(dropP[..., None, :, None], out, zero)
+                lost_k = dead[..., 0, :, :].sum(-2)
+                ledger(s, lost_k)
+                s["flt_drop"] = s["flt_drop"] + lost_k.sum(-1)
+                return out - dead
 
         # ---- 1. senders: DCQCN advance + offer ---------------------------- #
         adv = now > p["start"]
@@ -939,6 +1109,8 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
 
         # ---- 2. tier-ordered forwarding (cut-through within the tick) ---- #
         s, out = drain(s, 0, upf)
+        if flt:
+            out = kill(s, out)
         if any_cc:
             # per-tick drained bytes per port: the txRate leg of the
             # HPCC-style INT signal (run_fabric's tick_tx)
@@ -951,6 +1123,8 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
         else:
             s = enqueue(s, st["dest"][0] * fbm[..., None, :])
         s, out = drain(s, 1, upf)
+        if flt:
+            out = kill(s, out)
         if any_cc:
             txP = txP + out[..., 0, :, :].sum(-1)
         if dyn:
@@ -964,11 +1138,15 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
             fbm = (st["occ"][1] * out).sum(-2)
             s = enqueue(s, st["dest"][1] * fbm[..., None, :])
         s, out = drain(s, 2, upf)
+        if flt:
+            out = kill(s, out)
         if any_cc:
             txP = txP + out[..., 0, :, :].sum(-1)
         fbm = (st["occ"][2] * out).sum(-2)
         s = enqueue(s, st["dest"][2] * fbm[..., None, :])
         s, out = drain(s, 3, upf)
+        if flt:
+            out = kill(s, out)
         if any_cc:
             txP = txP + out[..., 0, :, :].sum(-1)
         fbm = (st["occ"][3] * out).sum(-2)
@@ -982,6 +1160,23 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
                                      -3)[..., 0, :, :]
         arr_b = fbm[..., 0, :]
         arr_m = fbm[..., 1, :]
+        if flt:
+            # crashed receivers discard arrivals until restart, then a
+            # gapped go-back-N window discards the rest as duplicates
+            # (run_fabric step 3 order: crash first, then dup
+            # suppression; duplicates go straight back to the ledger)
+            crashF = ((t >= p["crash_at"])
+                      & (t < p["crash_until"]))[..., st["recv_of"]]
+            dead_b = xp.where(crashF, arr_b, zero)
+            ledger(s, dead_b)
+            s["flt_drop"] = s["flt_drop"] + dead_b.sum(-1)
+            arr_b = arr_b - dead_b
+            arr_m = xp.where(crashF, zero, arr_m)
+            dup_b = xp.where(s["gapped"], arr_b, zero)
+            s["lost"] = s["lost"] + dup_b
+            s["flt_drop"] = s["flt_drop"] + dup_b.sum(-1)
+            arr_b = arr_b - dup_b
+            arr_m = xp.where(s["gapped"], zero, arr_m)
 
         # ---- 2.2 delay/INT telemetry -> CC zoo updates -------------------- #
         # end-of-forwarding queue state along each flow's current path,
@@ -1055,6 +1250,14 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
             acc.append(a)
         acc_cr = xp.stack(acc, -2)
         accepted = sum(acc)
+        if flt:
+            # first byte accepted after a crash restart stamps the
+            # crash-recovery latency (run_fabric step 3)
+            rec_hit = (t >= p["crash_until"]) & (accepted > zero) \
+                & xp.isinf(s["crash_rec"])
+            s["crash_rec"] = xp.where(
+                rec_hit, now - p["crash_at"].astype(dtype) * fdt,
+                s["crash_rec"])
         s["rnic_drop"] = s["rnic_drop"] + (arr_tot - accepted)
         s["qos_q"] = s["qos_q"] + acc_cr
 
@@ -1182,8 +1385,11 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
                             acc_cr / xp.maximum(arr_cr, tiny), zero)
         deliv = arr_b * share_cr[..., st["cls_of"], st["recv_of"]]
         s["deliv_lo"] = s["deliv_lo"] + deliv
-        # RNIC tail drops are retransmitted too (fluid RC)
-        s["inj_lo"] = s["inj_lo"] - (arr_b - deliv)
+        # RNIC tail drops are retransmitted too (fluid RC / the ledger)
+        if flt:
+            ledger(s, arr_b - deliv)
+        else:
+            s["inj_lo"] = s["inj_lo"] - (arr_b - deliv)
         s["completion"] = xp.where(
             xp.isinf(s["completion"])
             & (s["delivered"] + s["deliv_lo"] >= p["burst_done"]),
@@ -1244,6 +1450,10 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
         s["pause_tc_us"] = s["pause_tc_us"] + \
             xp.where(link_paused, fdt, zero)
         s["ever_paused"] = s["ever_paused"] | link_any
+        if flt:
+            # switch-asserted pause mask, carried so a crash can rebuild
+            # the pause state of its access ports without the RNIC gate
+            s["lpause"] = link_paused
         # the receiver RNIC gate: whole access link (legacy — broadcast
         # across the class axis) or per admission class (host_pfc_per_tc,
         # [.., Q, R] state gathered per stage-3 port)
@@ -1289,6 +1499,32 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
             s["m_hist"] = s["m_hist"] + xp.where(inc, one, zero).sum(-2)
             s["m_done"] = done + new_d
             s["m_last"] = xp.where(new_d > 0, now, s["m_last"])
+
+        # ---- 6.5 retransmit timers (run_fabric step 3.7) ------------------ #
+        # after the message observe, so both engines record this tick's
+        # latencies against the pre-fire injected count; the re-credit
+        # reopens the sender's tap from the next offer on.  The timer
+        # runs while the ledger is non-empty; go-back-N backs the RTO
+        # off exponentially (k reset on delivery progress), selective
+        # fires after the fixed NACK delay (FlowRecovery.tick)
+        if flt:
+            prog = deliv > zero
+            k = xp.where(prog, 0, s["rto_k"])
+            has = s["lost"] > zero
+            timer = xp.where(has, s["rto_t"] + 1, 0)
+            kc = xp.minimum(k, p["rto_cap"])
+            dl_gbn = xp.floor(rto_f * p["rto_mult"]
+                              ** kc.astype(dtype)).astype(xp.int32)
+            dl = xp.where(sel_b, p["nack_ticks"], dl_gbn)
+            fire = has & (timer >= dl)
+            credit = xp.where(fire, s["lost"], zero)
+            s["inj_lo"] = s["inj_lo"] - credit
+            s["retx"] = s["retx"] + credit
+            s["lost"] = xp.where(fire, zero, s["lost"])
+            s["gapped"] = s["gapped"] & ~fire
+            s["rto_t"] = xp.where(fire, 0, timer)
+            s["rto_k"] = xp.where(fire & gbn_b,
+                                  xp.minimum(k + 1, p["rto_cap"]), k)
         return s
 
     return step
@@ -1367,6 +1603,19 @@ def _init_state(xp, lead, fsp: FabricSweepParams, p, dtype):
         s["m_lat"] = z(F)
         s["m_last"] = z(F)
         s["m_hist"] = z(HIST_BUCKETS, F)
+    if fsp.any_flt:
+        # fault-layer carries: the per-flow recovery ledger (lost bytes,
+        # RTO timer/backoff stage, go-back-N gap flag), retransmit and
+        # fault-drop accumulators, crash-recovery stamps and the
+        # switch-side link-pause mask (crash rebuilds)
+        s["lost"] = z(F)
+        s["rto_t"] = xp.zeros(lead + (F,), xp.int32)
+        s["rto_k"] = xp.zeros(lead + (F,), xp.int32)
+        s["gapped"] = xp.zeros(lead + (F,), bool)
+        s["retx"] = z(F)
+        s["flt_drop"] = z()
+        s["crash_rec"] = xp.full(lead + (R,), np.inf, dtype)
+        s["lpause"] = xp.zeros(lead + (N_QOS, P), bool)
     return s
 
 
@@ -1432,6 +1681,11 @@ def _results(s, fsp: FabricSweepParams) -> Dict[str, np.ndarray]:
         # ingress links (matches summing FabricResult.pause_tc_us per tc)
         "pause_tc_total_us": np.asarray(s["pause_tc_us"],
                                         np.float64).sum(-1),
+        # routing-aware PFC-storm metric: per-TC pause fan-out over the
+        # candidate ingress sets (FabricResult.pause_tc_fanout /
+        # n_pausable_links / pause_storm)
+        "pause_tc_fanout": (np.asarray(s["pause_tc_us"], np.float64)
+                            > 0.0).sum(-1),
         "ecn_marked_bytes": np.asarray(s["ecn_marked"], np.float64),
         "switch_dropped_bytes": np.asarray(s["sw_dropped"], np.float64),
         "recv_goodput_gbps": np.asarray(s["drained"], np.float64)
@@ -1442,6 +1696,26 @@ def _results(s, fsp: FabricSweepParams) -> Dict[str, np.ndarray]:
         "recv_rnic_dropped_bytes": np.asarray(s["rnic_drop"], np.float64),
         "recv_mem_fallback_bytes": np.asarray(s["mem_fb"], np.float64),
     }
+    # candidate ingress links that can ever receive a pause = ports with
+    # prev_onehot support (the scalar driver's `pausable` set exactly)
+    n_pausable = int((fsp.prev_onehot.sum((0, 1)) > 0).sum())
+    out["n_pausable_links"] = np.full(G, n_pausable)
+    out["pause_storm"] = (out["pause_tc_fanout"].max(-1)
+                          / max(n_pausable, 1) if n_pausable
+                          else np.zeros(G))
+    if fsp.any_flt:
+        out["retransmit_bytes"] = np.asarray(s["retx"],
+                                             np.float64).sum(-1)
+        # faults-None points packed f_mtu=inf, so their count is 0
+        out["dropped_pkts"] = np.asarray(s["flt_drop"], np.float64) \
+            / fsp.pvals["f_mtu"]
+        out["crash_recovery_us"] = np.asarray(s["crash_rec"], np.float64)
+        # the PFC-deadlock watchdog is scalar-only (graph walk)
+        out["deadlock_ticks"] = np.zeros(G)
+    else:
+        out["retransmit_bytes"] = np.zeros(G)
+        out["dropped_pkts"] = np.zeros(G)
+        out["deadlock_ticks"] = np.zeros(G)
     if fsp.any_msg:
         # message-layer outputs: per-flow counts, the grid-level log
         # histogram (summed over flows) and its percentile estimates —
@@ -1514,7 +1788,7 @@ def _opts(fsp: FabricSweepParams) -> dict:
     return {"dyn": fsp.dyn_route, "wrr": fsp.any_wrr,
             "host_tc": fsp.host_tc, "Hs": fsp.settle_ring,
             "Sn": fsp.n_spines, "cc": fsp.any_cc, "msg": fsp.any_msg,
-            "Lm": fsp.msg_ring}
+            "Lm": fsp.msg_ring, "flt": fsp.any_flt, "flap": fsp.any_flap}
 
 
 def _run_numpy(fsp: FabricSweepParams, dtype=np.float64):
