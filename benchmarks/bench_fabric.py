@@ -61,7 +61,10 @@ import numpy as np
 
 from repro.core import simulator as S
 from repro.fabric import scenarios as SC
-from repro.fabric._scan import UNROLL_CANDIDATES, save_autotune
+from repro.fabric import vector as V
+from repro.fabric._scan import (UNROLL_CANDIDATES, configure_persistent_cache,
+                                pick_unroll, save_autotune)
+from repro.fabric.fused import AdaptiveConfig, program_op_stats
 from repro.fabric.scenarios import fabric_grid
 from repro.fabric.sweep import grid_configs, run_sweep
 from repro.fabric.vector import run_fabric_sweep
@@ -131,16 +134,17 @@ def run_sweep_bench() -> List[Dict]:
         t0 = time.time()
         run_sweep(cfgs, backend="jax", unroll=u)
         cold = time.time() - t0
-        t0 = time.time()
-        run_sweep(cfgs, backend="jax", unroll=u)
-        warm = time.time() - t0
+        # the winner is persisted (save_autotune) and steers every
+        # later section's scan program — a single noisy warm sample
+        # here must not crown the wrong unroll for the whole process
+        warm, _ = _best_of(lambda: run_sweep(cfgs, backend="jax",
+                                             unroll=u))
         times[u] = (cold, warm)
     best = min(times, key=lambda u: times[u][1])
     save_autotune(best)
 
-    t0 = time.time()
-    jx = run_sweep(cfgs, backend="jax")       # autotuned, program cached
-    t_warm = time.time() - t0
+    # autotuned, program cached
+    t_warm, jx = _best_of(lambda: run_sweep(cfgs, backend="jax"))
     t0 = time.time()
     ref = run_sweep(cfgs, backend="numpy")
     t_np = time.time() - t0
@@ -172,7 +176,51 @@ def run_sweep_bench() -> List[Dict]:
     }]
 
 
-def run_fabric_sweep_bench() -> List[Dict]:
+def _best_of(fn, reps: int = 3):
+    """Best-of-N wall clock for a *warm* (already-compiled) call,
+    returning ``(best_seconds, last_result)``.  The bench hosts are
+    shared single-core VMs where a single sample routinely eats a
+    30-60% neighbor-noise spike; the minimum over a few reps is the
+    standard estimator for the true cost of a deterministic program
+    (the scalar reference runs long enough to average the noise out
+    and stays single-shot)."""
+    best, out = float("inf"), None
+    for _ in range(reps):
+        t0 = time.time()
+        out = fn()
+        best = min(best, time.time() - t0)
+    return best, out
+
+
+def _profile_program(scens, t_cold: float, t_warm: float) -> Dict:
+    """Dispatch/op-count attribution for one vector-grid section: the
+    per-tick wall clock, the compile-vs-warm split, and the jaxpr op
+    census of the (cached) fixed-dt program — so a perf regression can
+    be blamed on either op growth (census moved) or runtime (census
+    flat, wall clock moved)."""
+    import jax.numpy as jnp
+
+    fsp = V.FabricSweepParams.from_scenarios(scens)
+    fn = V._jax_program(fsp, pick_unroll(None), "ref")
+    p_np = V._np_params(fsp, np.float32)
+    s0 = V._init_state(np, (fsp.n_points,), fsp, p_np, np.float32)
+    stats = program_op_stats(
+        fn, {k: jnp.asarray(v) for k, v in s0.items()},
+        {k: jnp.asarray(v) for k, v in p_np.items()})
+    return {
+        "ticks": fsp.ticks,
+        "per_tick_ms_warm": t_warm / fsp.ticks * 1e3,
+        "compile_s": max(t_cold - t_warm, 0.0),
+        "op_count_total": stats["op_count_total"],
+        "op_count_step": stats["op_count_step"],
+        "op_kinds": stats["op_kinds"],
+    }
+
+
+def _incast_grid():
+    """The >=32-point incast fabric grid shared by the fixed-dt sweep
+    bench and the adaptive-dt bench (same scenarios -> same cached
+    program -> the adaptive comparison is apples-to-apples)."""
     bursts = ([0.5, 1.0, 2.0, 4.0] if QUICK else
               [0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 2.5, 3.0,
                3.5, 4.0, 5.0, 6.0])
@@ -181,6 +229,11 @@ def run_fabric_sweep_bench() -> List[Dict]:
             n_senders=8, mode=mode, pfc=pfc, burst_mb=burst_mb,
             sim_time_s=_sim_time(0.02)),
         mode=["ddio", "jet"], pfc=[False, True], burst_mb=bursts)
+    return scens
+
+
+def run_fabric_sweep_bench() -> List[Dict]:
+    scens = _incast_grid()
 
     t0 = time.time()
     scalar = [sc.run() for sc in scens]
@@ -188,9 +241,7 @@ def run_fabric_sweep_bench() -> List[Dict]:
     t0 = time.time()
     jx = run_fabric_sweep(scens, backend="jax")
     t_cold = time.time() - t0
-    t0 = time.time()
-    jx = run_fabric_sweep(scens, backend="jax")
-    t_warm = time.time() - t0
+    t_warm, jx = _best_of(lambda: run_fabric_sweep(scens, backend="jax"))
     t0 = time.time()
     ref = run_fabric_sweep(scens, backend="numpy")
     t_np = time.time() - t0
@@ -217,6 +268,7 @@ def run_fabric_sweep_bench() -> List[Dict]:
     inc_jx = jx["incast_completion_us"]
     fin = np.isfinite(inc_jx)
     return [{
+        **_profile_program(scens, t_cold, t_warm),
         "grid_points": len(scens),
         "flows": F,
         "scalar_run_fabric_s": t_scalar,
@@ -255,9 +307,7 @@ def run_routing_bench() -> List[Dict]:
     t0 = time.time()
     run_fabric_sweep(scens, backend="jax")
     t_cold = time.time() - t0
-    t0 = time.time()
-    jx = run_fabric_sweep(scens, backend="jax")
-    t_warm = time.time() - t0
+    t_warm, jx = _best_of(lambda: run_fabric_sweep(scens, backend="jax"))
     t0 = time.time()
     ref = run_fabric_sweep(scens, backend="numpy")
     t_np = time.time() - t0
@@ -272,6 +322,7 @@ def run_routing_bench() -> List[Dict]:
     fct = {(p["routing"], math.isfinite(p["fail_at_us"])):
            jx["incast_completion_us"][i] for i, p in enumerate(pts)}
     return [{
+        **_profile_program(scens, t_cold, t_warm),
         "grid_points": len(scens),
         "flows": F,
         "scalar_run_fabric_s": t_scalar,
@@ -307,9 +358,7 @@ def run_messages_bench() -> List[Dict]:
     t0 = time.time()
     run_fabric_sweep(scens, backend="jax")
     t_cold = time.time() - t0
-    t0 = time.time()
-    jx = run_fabric_sweep(scens, backend="jax")
-    t_warm = time.time() - t0
+    t_warm, jx = _best_of(lambda: run_fabric_sweep(scens, backend="jax"))
     t0 = time.time()
     ref = run_fabric_sweep(scens, backend="numpy")
     t_np = time.time() - t0
@@ -331,6 +380,7 @@ def run_messages_bench() -> List[Dict]:
            for i, p in enumerate(pts)}
     wmax = max(wins)
     return [{
+        **_profile_program(scens, t_cold, t_warm),
         "grid_points": len(scens),
         "flows": F,
         "scalar_run_fabric_s": t_scalar,
@@ -363,9 +413,7 @@ def run_faults_bench() -> List[Dict]:
     t0 = time.time()
     run_fabric_sweep(scens, backend="jax")
     t_cold = time.time() - t0
-    t0 = time.time()
-    jx = run_fabric_sweep(scens, backend="jax")
-    t_warm = time.time() - t0
+    t_warm, jx = _best_of(lambda: run_fabric_sweep(scens, backend="jax"))
     t0 = time.time()
     ref = run_fabric_sweep(scens, backend="numpy")
     t_np = time.time() - t0
@@ -407,6 +455,7 @@ def run_faults_bench() -> List[Dict]:
                  - cr_sc.crash_recovery_us["h1_0"])
 
     return [{
+        **_profile_program(scens, t_cold, t_warm),
         "grid_points": len(scens),
         "flows": F,
         "scalar_run_fabric_s": t_scalar,
@@ -429,6 +478,66 @@ def run_faults_bench() -> List[Dict]:
     }]
 
 
+def run_adaptive_bench() -> List[Dict]:
+    """Adaptive time-stepping on a *drain-bounded* incast grid: every
+    burst finite (no open victim flow) and small enough that every
+    point completes well inside the horizon, leaving the long quiet
+    tail that event-aware stepping exists to skip.  (The fabric-sweep
+    grid above deliberately includes points whose incast never
+    finishes, and open victims sit in a permanent DCQCN sawtooth —
+    per-tick dynamics the stride correctly refuses to coarsen; the
+    stride is also a grid-wide lockstep reduction, so one busy point
+    pins the whole grid at fine dt.)  Gated on what adaptivity
+    promises — macro-tick coarsening (iterations << ticks) within the
+    documented delivered-bytes bound — with wall clock recorded
+    honestly: the jax backend trades the scan for a
+    ``lax.while_loop`` whose per-iteration cost on CPU can eat part of
+    the iteration savings."""
+    bursts = [0.25] if QUICK else [0.25, 0.5]
+    scens, _ = fabric_grid(
+        lambda mode, pfc, burst_mb: SC.incast(
+            n_senders=8, mode=mode, pfc=pfc, burst_mb=burst_mb,
+            with_victim=False, sim_time_s=_sim_time(0.02)),
+        mode=["ddio", "jet"], pfc=[False, True], burst_mb=bursts)
+    cfg = AdaptiveConfig()
+
+    t0 = time.time()
+    [sc.run() for sc in scens]
+    t_scalar = time.time() - t0
+    run_fabric_sweep(scens, backend="jax")
+    t_fixed, fine = _best_of(lambda: run_fabric_sweep(scens,
+                                                      backend="jax"))
+    t0 = time.time()
+    run_fabric_sweep(scens, backend="jax", adaptive_dt=True)
+    t_cold = time.time() - t0
+    t_warm, ad = _best_of(lambda: run_fabric_sweep(
+        scens, backend="jax", adaptive_dt=True))
+
+    ticks = V.FabricSweepParams.from_scenarios(scens).ticks
+    iters = int(np.ravel(ad["adaptive_iterations"])[0])
+    db_a, db_f = ad["flow_delivered_bytes"], fine["flow_delivered_bytes"]
+    dev = float(np.max(np.abs(db_a - db_f) / np.maximum(db_f, 1.0)))
+    ca, cf = ad["flow_completion_us"], fine["flow_completion_us"]
+    both = np.isfinite(ca) & np.isfinite(cf)
+    shift = float(np.abs(ca[both] - cf[both]).max()) if both.any() else 0.0
+    return [{
+        "grid_points": len(scens),
+        "ticks": ticks,
+        "adaptive_iterations": iters,
+        "coarsen_ratio": ticks / max(iters, 1),
+        "scalar_run_fabric_s": t_scalar,
+        "jax_fixed_warm_s": t_fixed,
+        "jax_adaptive_cold_s": t_cold,
+        "jax_adaptive_warm_s": t_warm,
+        "speedup_warm_vs_scalar": t_scalar / t_warm,
+        "speedup_warm_vs_fixed": t_fixed / t_warm,
+        "dev_delivered_vs_fixed": dev,
+        "rel_bytes_bound": cfg.rel_bytes_bound,
+        "max_completion_shift_us": shift,
+        "max_stride": cfg.max_stride,
+    }]
+
+
 def _jsonable(obj):
     """Strict-JSON payload: non-finite floats become None (json.dump's
     Infinity/NaN literals break jq / JSON.parse on the CI artifact)."""
@@ -448,6 +557,9 @@ def run() -> List[Dict]:
 
 
 def main() -> None:
+    cache = configure_persistent_cache()
+    if cache:
+        print(f"# jax persistent compilation cache: {cache}")
     rows = run_incast()
     emit(NAME, rows)
     eq = run_equivalence()
@@ -462,6 +574,8 @@ def main() -> None:
     emit(NAME + "_messages", ms)
     ft = run_faults_bench()
     emit(NAME + "_faults", ft)
+    ad = run_adaptive_bench()
+    emit(NAME + "_adaptive", ad)
 
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(JSON_PATH, "w") as f:
@@ -470,7 +584,8 @@ def main() -> None:
                              "fabric_sweep": fs[0],
                              "routing": rt[0],
                              "messages": ms[0],
-                             "faults": ft[0]}), f, indent=2)
+                             "faults": ft[0],
+                             "adaptive": ad[0]}), f, indent=2)
 
     worst_eq = max(r["rel_err"] for r in eq)
     s, v = sw[0], fs[0]
@@ -486,7 +601,19 @@ def main() -> None:
           f"x{v['speedup_warm']:.1f} warm / x{v['speedup_cold']:.1f} cold "
           f"vs scalar run_fabric (acceptance >=5x warm); goodput dev "
           f"{v['dev_goodput_vs_scalar']:.2e}, incast-FCT dev "
-          f"{v['dev_incast_fct_vs_scalar']:.2e} (acceptance <=1e-3)")
+          f"{v['dev_incast_fct_vs_scalar']:.2e} (acceptance <=1e-3); "
+          f"{v['per_tick_ms_warm']:.3f} ms/tick warm, "
+          f"{v['op_count_step']} ops/step ({v['op_kinds']} kinds), "
+          f"compile {v['compile_s']:.1f}s")
+    a = ad[0]
+    print(f"# adaptive dt, drain-bounded {a['grid_points']}-pt grid: "
+          f"{a['adaptive_iterations']} iterations for {a['ticks']} ticks "
+          f"(x{a['coarsen_ratio']:.1f} coarsening, stride cap "
+          f"{a['max_stride']}); delivered dev vs fixed dt "
+          f"{a['dev_delivered_vs_fixed']:.2e} (bound "
+          f"{a['rel_bytes_bound']:.0%}); warm "
+          f"x{a['speedup_warm_vs_scalar']:.1f} vs scalar / "
+          f"x{a['speedup_warm_vs_fixed']:.2f} vs fixed-dt jax")
     r = rt[0]
     print(f"# routing grid {r['grid_points']} pts (mode x failure, one "
           f"program): x{r['speedup_warm']:.1f} warm vs scalar; numpy dev "

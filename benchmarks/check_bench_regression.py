@@ -13,6 +13,18 @@ Two kinds of guarded fields:
   ``null`` — the JSON encoding of inf/NaN, i.e. the engines disagreed —
   always fails).
 
+The gate fails loudly — with distinct messages — when a gated section
+or field is *absent* from a fresh BENCH_fabric.json (a silently dropped
+bench is itself a regression), when a value is ``null`` (non-finite),
+and when a value is non-numeric (a schema change must come with a
+floors update, not slip past the comparison).
+
+A rule may carry a ``quick_value`` next to ``value``: CI runs the bench
+with ``--quick`` (smaller grids and sim times, where e.g. warm speedups
+are lower because compile-amortization differs), and the checker picks
+``quick_value`` when the bench was produced in quick mode.  ``value``
+documents the full-run envelope.
+
 Reference values are deliberately conservative (well below the numbers
 a warmed-up run produces locally) so the gate only trips on genuine
 regressions, not runner-to-runner jitter; refresh them when a PR
@@ -38,21 +50,48 @@ FLOORS_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 
 def check(bench: dict, floors: dict) -> list:
     failures = []
+    quick = bool(bench.get("quick"))
     for section, rules in floors.items():
         row = bench.get(section)
         if row is None:
-            failures.append(f"{section}: missing from bench output")
+            msg = (f"{section}: gated section missing from bench output "
+                   f"(the bench must always produce it)")
+            print(f"FAIL {msg}")
+            failures.append(msg)
             continue
         for field, spec in rules.items():
-            val = row.get(field)
-            kind, ref = spec["kind"], spec["value"]
+            kind = spec["kind"]
+            ref = spec["value"]
+            if quick and "quick_value" in spec:
+                ref = spec["quick_value"]
+            if field not in row:
+                msg = (f"{section}.{field}: gated field missing from "
+                       f"bench output (schema drifted under the gate)")
+                print(f"FAIL {msg}")
+                failures.append(msg)
+                continue
+            val = row[field]
+            if val is None:
+                msg = (f"{section}.{field} is null (non-finite measured "
+                       f"value — the engines disagreed or the metric "
+                       f"never resolved)")
+                print(f"FAIL {msg}")
+                failures.append(msg)
+                continue
+            if isinstance(val, bool) or not isinstance(val, (int, float)):
+                msg = (f"{section}.{field} = {val!r} is not numeric — "
+                       f"update floors with the schema, do not gate "
+                       f"non-numeric fields")
+                print(f"FAIL {msg}")
+                failures.append(msg)
+                continue
             if kind == "floor":
                 limit = ref * (1.0 - REGRESSION)
-                ok = val is not None and val >= limit
+                ok = val >= limit
                 cmp = f">= {limit:.4g} (ref {ref:.4g} - 20%)"
             elif kind == "ceiling":
                 limit = ref * (1.0 + REGRESSION)
-                ok = val is not None and val <= limit
+                ok = val <= limit
                 cmp = f"<= {limit:.4g} (ref {ref:.4g} + 20%)"
             else:
                 failures.append(f"{section}.{field}: bad kind {kind!r}")

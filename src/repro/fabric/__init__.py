@@ -55,8 +55,15 @@
              CNP-delay ring) as one vmap+scan program; switch state is
              classed too ([G, Q, P] occupancy/assert/pause via the
              flow->TC one-hot, priority-unrolled drain grants)
+- fused:     fused hot-tick stages for the vector engines (strict-
+             priority drain grants + QoS receiver admission as single
+             water-fill primitives with a Pallas kernel tier), the
+             jaxpr op-census profiling hooks behind the bench, and the
+             adaptive time-stepping machinery (quiet-stride predicate,
+             closed-form macro-tick advance) — see "Engine
+             performance" below
 - _scan:     shared lax.scan compile-cost machinery (unroll autotune,
-             donated carries)
+             donated carries, persistent XLA compilation cache)
 
 Which engine advances which datapath backend: the scalar driver steps
 real ``HostDatapath`` objects (float64 Python, via ``ReceiverHost``);
@@ -86,6 +93,55 @@ Choosing an engine
     Matches the scalar driver to float32 round-off (float64 exact via
     ``backend="numpy"``) and turns minutes-per-grid into seconds.  Grid
     points must share topology *structure* (same flows/routes/ticks).
+
+Engine performance
+------------------
+The vector tick body is built from *fused stages*: the innermost
+strict-priority port drain and the QoS receiver admission are single
+water-fill primitives (:func:`repro.fabric.fused.priority_grants` /
+:func:`~repro.fabric.fused.priority_admit`) rather than per-class
+op chains.  Each primitive has three interchangeable tiers selected by
+``run_fabric_sweep(..., impl=...)``:
+
+``"ref"``
+    The stacked jnp/numpy formulation.  The default everywhere off-TPU,
+    and always the tier behind ``backend="numpy"`` (float64 reference).
+``"pallas"``
+    A Pallas TPU kernel (grid/BlockSpec idiom shared with
+    ``repro.kernels``): queue/port panels are padded to (8, 128) tiles
+    and the water-fill runs on-chip.  ``impl="auto"`` (the default)
+    activates it exactly when ``jax.default_backend() == "tpu"``.
+``"interpret"``
+    The same Pallas kernel run under ``pl.pallas_call(interpret=True)``
+    — bit-equal to what the TPU executes, runnable on CPU CI, but
+    *slow* (it emulates the kernel lane-by-lane); use it to validate
+    kernel changes (``tests/test_fused.py`` pins interpret == ref
+    bit-for-bit), never for throughput.
+
+Adaptive time-stepping (``run_fabric_sweep(..., adaptive_dt=True)``,
+tuned via :class:`repro.fabric.fused.AdaptiveConfig`) takes closed-form
+macro-ticks over quiet stretches — every queue steady, no pause/timer/
+watermark within a guard band — and fine dt near events.  Delivered
+bytes stay within ``AdaptiveConfig.rel_bytes_bound`` (default 1 %,
+relative) of the fine-tick run and completion timestamps shift at most
+``(max_stride + 1) * dt`` per crossed macro window (property-tested in
+``tests/test_fused.py``); ``adaptive_dt=False`` (the default) traces
+none of this machinery and stays bit-equal to the fixed-dt engines.
+
+Reading the bench profiling fields (``experiments/bench/
+BENCH_fabric.json``, emitted per vector section by
+``benchmarks/bench_fabric.py``): ``per_tick_ms_warm`` is warm wall
+clock per simulated tick; ``compile_s`` the cold-minus-warm split;
+``op_count_step`` the jaxpr op census of the scan body (the per-tick
+dispatch load — if a perf regression shows here it is op growth, if
+wall clock moves while the census is flat it is runtime);
+``op_count_total`` / ``op_kinds`` the whole-program census.  The
+``adaptive`` section gates what adaptivity promises — ``coarsen_ratio``
+(fine ticks per adaptive iteration) and ``dev_delivered_vs_fixed``
+(against ``rel_bytes_bound``) — while recording its wall clock
+honestly (on CPU the ``lax.while_loop`` per-iteration overhead can eat
+the iteration savings; the win is the iteration count, which is what
+transfers to accelerators).
 
 The routing layer
 -----------------
@@ -233,7 +289,10 @@ first-class, *deterministic* experiment axis:
   baseline (asserted in tests/test_faults.py).
 - **graceful-degradation metrics**: `FabricResult.dropped_pkts`,
   `retransmit_bytes`, `crash_recovery_us`, `deadlock_ticks` (a per-tick
-  PFC pause-cycle watchdog, scalar driver only), and the routing-aware
+  PFC pause-cycle watchdog in every engine — the vector engines run the
+  same cycle predicate via boolean-matrix squaring over the pause-pair
+  graph, equivalence-tested against the scalar walker), and the
+  routing-aware
   PFC-storm view `pause_tc_fanout` / `n_pausable_links` /
   `pause_storm()` (paused fraction of the pausable link set, NaN-safe).
 

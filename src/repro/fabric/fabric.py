@@ -180,8 +180,8 @@ class FabricResult:
     crash_recovery_us: Dict[str, float] = \
         dataclasses.field(default_factory=dict)
     deadlock_ticks: int = 0                  # ticks with a cyclic per-TC
-    #                                          pause dependency (scalar
-    #                                          watchdog; vector reports 0)
+    #                                          pause dependency (same
+    #                                          watchdog in every engine)
     # routing-aware PFC-storm observability: per-TC count of distinct
     # ingress links ever paused, against the candidate ingress sets the
     # routing layer could steer through (OutputPort.static_ingress /

@@ -29,8 +29,10 @@ vector engines carry the same state machine as ``[G, F]`` arrays.
 
 A small PFC-deadlock watchdog (`has_pause_cycle`) rounds out the
 graceful-degradation metrics: it detects cyclic pause dependencies in
-the per-TC pause state each tick (scalar driver only — the vector
-engines report 0 for ``deadlock_ticks``).
+the per-TC pause state each tick.  The vector engines run the same
+predicate as boolean-matrix squaring over the precomputed pause-pair
+graph (``repro.fabric.fused.cycle_flags``), so ``deadlock_ticks`` is
+engine-equivalent and rides sweep grids.
 """
 from __future__ import annotations
 

@@ -1,0 +1,554 @@
+"""Fused tick stages + adaptive time-stepping for the vector fabric engine.
+
+Two per-tick overhead attacks for :mod:`repro.fabric.vector`, both gated
+so the default program stays bit-identical to the pre-fusion engine:
+
+**1. Fused priority stages.**  The two innermost sequential loops of the
+tick — the switch drain's strict-priority budget grants and the receiver
+RNIC's QoS admission — are priority water-fills unrolled over ``N_QOS``.
+:func:`priority_grants` and :func:`priority_admit` package them as single
+fused kernels with three implementations (the :mod:`repro.kernels.ops`
+tiering):
+
+* ``impl="ref"`` — the inline ``xp`` formulation, op for op the scalar
+  driver's ``OutputPort.drain`` / ``HostDatapath`` arithmetic.  This is
+  what XLA lowers on CPU hosts and what the numpy float64 reference
+  runs, so the ~1e-13 scalar-vs-numpy and <=5e-4 jax equivalence suites
+  gate every other tier against it.
+* ``impl="pallas"`` — one Pallas kernel per call: the whole ``[Q, N]``
+  water-fill lives in VMEM and the ``Q`` rounds run register-resident
+  instead of as ``Q`` rounds of stacked XLA ops (grid/BlockSpec idiom
+  from ``src/repro/kernels/jet_staged_matmul.py``).  TPU only.
+* ``impl="interpret"`` — the same kernel body under the Pallas
+  interpreter, so CPU CI executes the kernel path (``tests/test_fused.py``
+  pins it to the ref tier bit-for-bit in float32).
+
+**2. Adaptive time-stepping** (:class:`AdaptiveConfig`).  When the whole
+grid is *quiet* — every port queue and admission class empty, no PFC
+pause or assert anywhere, no CNPs in flight, no recovery ledger entries,
+every flow's injection delta matched by its delivery delta (no rate
+step still riding the transit rings), receiver pools steady and outside
+the configured guard band of their spill watermark, and the fine step
+just taken contained no DCQCN/CC timer fire — the engine takes a
+*macro-tick*: the last fine step's state
+delta is integrated in closed form over ``k * dt`` (linear extrapolation
+of the byte/timer accumulators; counts, rings and discrete carries are
+left to the next fine step, which catches them up exactly).  The stride
+``k`` is clamped by the distance to the next *event*: flow start ticks,
+link failure/flap/crash window edges, finite-burst exhaustion, message-
+window exhaustion, and (for weighted-ECMP points) the flowlet idle gap.
+Rate-timer fires are handled *exactly*: the stride is additionally
+capped so a macro window may end on, but never cross, the next
+DCQCN/CC timer deadline (``ceil((threshold - timer) / rate)`` fine
+ticks away) — the fine step that follows the window then performs the
+fire on the same absolute tick as the fine reference, with the same
+state, because rates are constant between fires in a quiet stretch.
+Recovery ramps (a DCQCN flow climbing back toward its target rate
+fires every ``r_tmr``/``bctr`` period for thousands of ticks) thus
+coarsen between fires without accumulating any phase drift.
+Stochastic-loss points and on/off burst trains disable coarsening
+outright (their per-tick dynamics cannot be integrated in closed form
+without changing realizations).
+
+Equivalence bound (documented contract, tested by
+``tests/test_fused.py``): against the fine-tick reference on the same
+grid, adaptive stepping keeps per-flow delivered bytes within
+``AdaptiveConfig.rel_bytes_bound`` (relative, default 1%) and shifts any
+completion / message-latency timestamp by at most
+``(max_stride + 1) * dt`` per crossed macro window — events are never
+jumped over, only quantized to macro boundaries.  ``adaptive_dt=False``
+(the default) does not trace any of this machinery: the scan program is
+unchanged and static grids stay bit-equal to the frozen goldens.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..core.datapath import N_QOS
+
+_BIG = np.int32(1 << 30)       # "no event" sentinel for integer gaps
+
+
+# --------------------------------------------------------------------------- #
+# Implementation selection (the repro.kernels.ops tiering)
+# --------------------------------------------------------------------------- #
+def _on_tpu() -> bool:
+    import jax
+    return jax.default_backend() == "tpu"
+
+
+def resolve_impl(impl: str) -> str:
+    """``auto`` -> Pallas on TPU, ref elsewhere; everything else passes
+    through (``pallas`` / ``interpret`` / ``ref``)."""
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    if impl not in ("pallas", "interpret", "ref"):
+        raise ValueError(f"unknown impl {impl!r}")
+    return impl
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+@functools.lru_cache(maxsize=16)
+def _grants_call(nq: int, n: int, interpret: bool):
+    """Build the Pallas water-fill kernel for padded shape [Qp, Np]."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    qp, npad = _pad_to(nq, 8), _pad_to(n, 128)
+
+    def kernel(demand_ref, can_ref, budget_ref, crumb_ref, out_ref):
+        one, zero = jnp.float32(1.0), jnp.float32(0.0)
+        bl = budget_ref[0, :]
+        crumb = crumb_ref[0, :]
+        for qi in range(qp):
+            if qi >= nq:
+                out_ref[qi, :] = jnp.zeros_like(bl)
+                continue
+            qsum = demand_ref[qi, :]
+            can = can_ref[qi, :] > 0.5
+            frac = jnp.where(
+                can, jnp.minimum(one, bl / jnp.where(qsum > zero, qsum,
+                                                     one)), zero)
+            out_ref[qi, :] = frac
+            bl = bl - frac * qsum
+            bl = jnp.where(bl < crumb, zero, bl)
+
+    call = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((qp, npad), jnp.float32),
+        interpret=interpret,
+    )
+
+    def run(demand, can, budget, crumb):
+        pq, pn = qp - nq, npad - n
+        args2 = [jnp.pad(demand, ((0, pq), (0, pn))),
+                 jnp.pad(can, ((0, pq), (0, pn)))]
+        args1 = [jnp.pad(budget[None, :], ((0, 0), (0, pn))),
+                 jnp.pad(crumb[None, :], ((0, 0), (0, pn)))]
+        return call(*args2, *args1)[:nq, :n]
+
+    return run
+
+
+@functools.lru_cache(maxsize=16)
+def _admit_call(nq: int, n: int, interpret: bool):
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    qp, npad = _pad_to(nq, 8), _pad_to(n, 128)
+
+    def kernel(demand_ref, space_ref, out_ref):
+        sp = space_ref[0, :]
+        for qi in range(qp):
+            if qi >= nq:
+                out_ref[qi, :] = jnp.zeros_like(sp)
+                continue
+            a = jnp.minimum(demand_ref[qi, :], sp)
+            out_ref[qi, :] = a
+            sp = sp - a
+
+    call = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((qp, npad), jnp.float32),
+        interpret=interpret,
+    )
+
+    def run(demand, space):
+        pq, pn = qp - nq, npad - n
+        return call(jnp.pad(demand, ((0, pq), (0, pn))),
+                    jnp.pad(space[None, :], ((0, 0), (0, pn))))[:nq, :n]
+
+    return run
+
+
+def priority_grants(xp, demand, can, budget, crumb, one, zero,
+                    impl: str = "ref"):
+    """Strict-priority budget water-fill: per-class drain fractions.
+
+    ``demand`` [.., Q, N] per-class byte totals, ``can`` [.., Q, N]
+    {0,1} eligibility, ``budget`` / ``crumb`` [.., N].  Returns the
+    grant fraction per (class, port) [.., Q, N] with the exact op order
+    of ``OutputPort.drain``: each class takes ``min(1, left/demand)`` of
+    its demand, leftovers below ``crumb`` are clamped to zero.
+    ``one`` / ``zero`` are the caller's dtype scalars so the ref tier is
+    bit-identical to the inline formulation it replaced.
+    """
+    if impl in ("pallas", "interpret"):
+        import jax
+        run = _grants_call(demand.shape[-2], demand.shape[-1],
+                           impl == "interpret")
+        for _ in range(demand.ndim - 2):
+            run = jax.vmap(run)
+        return run(demand, can, budget, crumb)
+    bl = budget
+    rows = []
+    for qi in range(demand.shape[-2]):
+        qsum = demand[..., qi, :]
+        cq = can[..., qi, :]
+        ok = cq if cq.dtype == bool else cq > 0.5
+        frac = xp.where(ok,
+                        xp.minimum(one, bl / xp.where(qsum > zero, qsum,
+                                                      one)), zero)
+        rows.append(frac)
+        bl = bl - frac * qsum
+        bl = xp.where(bl < crumb, zero, bl)
+    return xp.stack(rows, -2)
+
+
+def priority_admit(xp, demand, space, impl: str = "ref"):
+    """QoS-priority admission: grant ``min(demand, space)`` per class in
+    priority order (``HostDatapath`` RNIC-buffer arithmetic).  ``demand``
+    [.., Q, N], ``space`` [.., N] -> accepted [.., Q, N]."""
+    if impl in ("pallas", "interpret"):
+        import jax
+        run = _admit_call(demand.shape[-2], demand.shape[-1],
+                          impl == "interpret")
+        for _ in range(demand.ndim - 2):
+            run = jax.vmap(run)
+        return run(demand, space)
+    rows = []
+    for qi in range(demand.shape[-2]):
+        a = xp.minimum(demand[..., qi, :], space)
+        space = space - a
+        rows.append(a)
+    return xp.stack(rows, -2)
+
+
+# --------------------------------------------------------------------------- #
+# PFC-deadlock watchdog (vectorized has_pause_cycle)
+# --------------------------------------------------------------------------- #
+def pause_pair_onehot(port_keys) -> np.ndarray:
+    """Static port -> (src-node, dst-node) scatter: [P, N*N] one-hot so
+    ``link_paused @ E`` reshapes to the per-TC pause-dependency adjacency
+    that :func:`repro.fabric.faults.has_pause_cycle` walks."""
+    nodes = sorted({a for a, _ in port_keys} | {b for _, b in port_keys})
+    ni = {h: i for i, h in enumerate(nodes)}
+    n = len(nodes)
+    E = np.zeros((len(port_keys), n * n))
+    for p, (a, b) in enumerate(port_keys):
+        E[p, ni[a] * n + ni[b]] = 1.0
+    return E
+
+
+def cycle_flags(xp, lp, E, n: int, one):
+    """Per-point deadlock flag from the pause mask ``lp`` [.., Q, P]
+    ({0,1} floats).  Builds the per-TC node adjacency and closes it with
+    ``ceil(log2 n)`` boolean-semiring squarings; a nonzero diagonal in
+    any class's closure is the cyclic pause dependency (the exact
+    predicate of ``has_pause_cycle``, which detects a cycle in any
+    single-TC digraph)."""
+    adj = xp.matmul(lp, E)
+    C = xp.minimum(adj, one).reshape(adj.shape[:-1] + (n, n))
+    hops = max(1, int(np.ceil(np.log2(max(n, 2)))))
+    for _ in range(hops):
+        C = xp.minimum(C + xp.matmul(C, C), one)
+    diag = xp.einsum('...ii->...i', C)
+    return diag.sum((-1, -2)) > 0.0          # any TC, any node
+
+
+# --------------------------------------------------------------------------- #
+# jaxpr profiling hooks (bench dispatch/op-count attribution)
+# --------------------------------------------------------------------------- #
+def jaxpr_op_counts(jaxpr) -> Dict[str, int]:
+    """Primitive -> count over a (Closed)Jaxpr, recursing into scans,
+    conds, calls and pjit bodies — the per-tick dispatch fingerprint the
+    bench emits so perf regressions are attributable to op growth."""
+    counts: Dict[str, int] = {}
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            counts[eqn.primitive.name] = \
+                counts.get(eqn.primitive.name, 0) + 1
+            for v in eqn.params.values():
+                for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                    inner = getattr(sub, "jaxpr", None)
+                    if inner is not None and hasattr(inner, "eqns"):
+                        walk(inner)
+                    elif hasattr(sub, "eqns"):
+                        walk(sub)
+
+    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+    return counts
+
+
+def program_op_stats(fn, *args) -> Dict[str, int]:
+    """Trace ``fn(*args)`` and summarize its op census: total primitive
+    count plus the scan-body count (the per-tick dispatch load)."""
+    import jax
+
+    jx = jax.make_jaxpr(fn)(*args)
+    counts = jaxpr_op_counts(jx)
+    total = int(sum(counts.values()))
+    scan_body = 0
+    for eqn in jx.jaxpr.eqns:
+        stack = [eqn]
+        while stack:
+            e = stack.pop()
+            if e.primitive.name in ("scan", "while"):
+                body = e.params.get("jaxpr") or e.params.get("body_jaxpr")
+                if body is not None:
+                    scan_body += int(sum(jaxpr_op_counts(body).values()))
+            else:
+                for v in e.params.values():
+                    for sub in (v if isinstance(v, (list, tuple))
+                                else (v,)):
+                        if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                            stack.extend(getattr(sub, "eqns", []) or
+                                         getattr(sub.jaxpr, "eqns", []))
+    return {"op_count_total": total, "op_count_step": scan_body,
+            "op_kinds": len(counts)}
+
+
+# --------------------------------------------------------------------------- #
+# Adaptive time-stepping
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    """Macro-tick coarsening knobs + the documented equivalence bound.
+
+    ``max_stride`` caps a single macro window (``k * dt``);
+    ``guard_frac`` is the watermark guard band: a jet pool within
+    ``guard_frac`` of its ``cache_safe`` spill fraction is treated as
+    near-event and keeps fine ticks.  ``resident_eps_bytes`` is the
+    steady-pool test (float accumulators jitter at ~1e-7 relative).
+
+    The contract tested by ``tests/test_fused.py``: per-flow delivered
+    bytes within ``rel_bytes_bound`` of the fine reference, timestamps
+    (completion, message latency) within ``(max_stride + 1) * dt`` per
+    crossed macro window.
+    """
+    max_stride: int = 16
+    guard_frac: float = 0.05
+    resident_eps_bytes: float = 1.0
+    rel_bytes_bound: float = 0.01
+
+    def key(self):
+        return (self.max_stride, self.guard_frac,
+                self.resident_eps_bytes)
+
+
+# accumulators advanced in closed form over a macro window: the paired
+# hi/lo split counters scale via the *sum* delta applied to the lo part
+# (a fold between the two fine steps must not double), plain linear
+# byte counters, and the us/byte timers (finite-delta guarded: pace_tus
+# idles at +inf, and inf - inf must not poison the carry)
+_SCALE_PAIRS = (("injected", "inj_lo"), ("delivered", "deliv_lo"))
+_SCALE_SINGLE = ("drained", "miss_sum", "pool_sum", "nic_dram",
+                 "mem_fb", "esc_dram", "tx", "resident", "strag_res")
+_SCALE_TIMERS = ("t_us", "byts", "a_tus", "cnp_tus", "ecn_tus",
+                 "pace_tus", "cc_tus")
+
+
+def zero_of(xp, a):
+    return a.dtype.type(0) if hasattr(a.dtype, "type") else 0.0
+
+
+def macro_advance(xp, s, s1, km1):
+    """Extrapolate the fine step ``s -> s1`` over ``km1`` further ticks
+    (``km1 = k - 1`` as a float scalar).  Everything not listed scales by
+    construction of the quiet predicate (its delta is zero) or is a
+    discrete carry the next fine step catches up exactly: message
+    counts re-derive from the cumulative byte totals, completion stamps
+    land on the next fine boundary, rings hold a steady value."""
+    s2 = dict(s1)
+    for hi, lo in _SCALE_PAIRS:
+        d = (s1[hi] + s1[lo]) - (s[hi] + s[lo])
+        s2[lo] = s1[lo] + km1 * d
+    for key in _SCALE_SINGLE + _SCALE_TIMERS:
+        if key not in s1:
+            continue
+        # masked subtract: idle timers park at +inf and inf - inf must
+        # neither poison the carry nor raise numpy warnings
+        ok = xp.isfinite(s1[key]) & xp.isfinite(s[key])
+        d = xp.where(ok, s1[key], zero_of(xp, s1[key])) \
+            - xp.where(ok, s[key], zero_of(xp, s[key]))
+        s2[key] = xp.where(ok, s1[key] + km1 * d, s1[key])
+    # the peak tracker follows the (sub-eps) extrapolated pool drift —
+    # but only where the step tracks residency at all (jet points;
+    # ddio points keep pool_peak at zero and the carry must not invent
+    # one from the ddio pool occupancy)
+    z = zero_of(xp, s1["pool_peak"])
+    s2["pool_peak"] = xp.where(s1["pool_peak"] > z,
+                               xp.maximum(s1["pool_peak"],
+                                          s2["resident"]),
+                               s1["pool_peak"])
+    return s2
+
+
+def make_stride_fn(xp, fsp, p, opts, cfg: AdaptiveConfig, dtype):
+    """Build ``stride(s, s1, t) -> k`` for one packed sweep.
+
+    Returns the whole-grid macro stride after the fine step ``s -> s1``
+    at tick ``t``: 1 unless every point is quiet, else the largest
+    ``k <= max_stride`` that stays short of the next event (see module
+    docstring).  Pure ``xp`` arithmetic — the jax adaptive program
+    traces it inside its ``while_loop``.
+    """
+    o = opts or {}
+    dyn, flap, flt = o.get("dyn", False), o.get("flap", False), \
+        o.get("flt", False)
+    any_cc, any_msg = o.get("cc", False), o.get("msg", False)
+    Sn = o.get("Sn", 0)
+    f = dtype
+    zero, one = f(0.0), f(1.0)
+    tiny = f(1e-30)
+    bigf = f(float(_BIG))
+    dt = fsp.dt_us
+    ticks = fsp.ticks
+    # static plan: on/off trains are per-tick duty cycles — no closed
+    # form that preserves the phase, so any such flow disables macros
+    any_onoff = bool((fsp.pvals["off_us"] > 0).any())
+    start_tick = xp.asarray(
+        np.floor(fsp.pvals["start"] / dt).astype(np.int32))
+    if flt:
+        thr_any = xp.asarray(
+            ((fsp.pvals["f_thr"] > 0) | (fsp.pvals["f_cthr"] > 0))
+            .any(-1))                                       # [G]
+    max_stride = np.int32(cfg.max_stride)
+    eps_res = f(cfg.resident_eps_bytes)
+    guard = f(cfg.guard_frac)
+
+    def imin(g, gap):
+        return xp.minimum(g, gap.min())
+
+    def fgap(g, gapf):
+        """Fold a float tick-gap array into the int stride bound."""
+        return xp.minimum(
+            g, xp.minimum(gapf, bigf).min().astype(xp.int32))
+
+    def stride(s, s1, t):
+        if any_onoff or cfg.max_stride <= 1:
+            return xp.int32(1)
+        inj1 = s1["injected"] + s1["inj_lo"]
+        dinj = inj1 - (s["injected"] + s["inj_lo"])
+        del1 = s1["delivered"] + s1["deliv_lo"]
+        ddel = del1 - (s["delivered"] + s["deliv_lo"])
+        moving = dinj > zero
+        # ---- quiet: every queue steady, nothing paused or mid-fire --- #
+        # "steady" rather than "empty": a constant port/admission queue
+        # (inflow == outflow, e.g. a parked residual behind a line-rate
+        # open flow) integrates in closed form exactly like an empty
+        # one — every per-tick drain/admission fraction repeats, so the
+        # slot-major rings hold a constant value and the byte
+        # accumulators advance linearly
+        quiet = (xp.abs(s1["qm"] - s["qm"]).max() <= eps_res)
+        quiet &= (xp.abs(s1["qos_q"] - s["qos_q"]).max() <= eps_res)
+        quiet &= ~s1["paused"].any() & ~s1["asserted"].any()
+        quiet &= ~s1["pfc"].any()
+        quiet &= (s1["backlog"].sum() == zero)
+        # ECN marking / switch drops accrue per tick against the live
+        # queue — only coarsen while neither made progress
+        quiet &= (s1["ecn_marked"] == s["ecn_marked"]).all()
+        quiet &= (s1["sw_dropped"] == s["sw_dropped"]).all()
+        quiet &= (s1["cring"].sum() == zero)
+        quiet &= (s1["esc_debt"].sum() == zero)
+        quiet &= (s1["repl_debt"].sum() == zero)
+        # per-flow rate balance: a quiet flow's injection delta must
+        # match its delivery delta.  While a rate step (a DCQCN/CC fire
+        # landed a tick ago) is still in flight through the transit
+        # rings, injection runs at the new rate but arrivals still land
+        # at the old one — a macro there would stretch the old-rate
+        # arrivals over k ticks and the per-fire deficit compounds
+        # across a recovery ramp.  The imbalance is visible directly,
+        # so the wavefront pins fine ticks until it lands
+        quiet &= (xp.abs(dinj - ddel).max() <= eps_res)
+        # pool residency is a sliding-window sum of the delayed drain
+        # ring: it moves exactly while that window straddles a rate
+        # kink, and the fine steps must track the kink tick for tick —
+        # so quiet requires the pools steady too (the extrapolation
+        # then holds them constant, and the jet guard band below keeps
+        # the whole window clear of the spill watermark)
+        quiet &= (xp.abs(s1["resident"] - s["resident"]).max() <= eps_res)
+        quiet &= (xp.abs(s1["strag_res"] - s["strag_res"]).max()
+                  <= eps_res)
+        jet = p["jet"] > 0.5
+        avail = xp.maximum(zero, p["pool"] - s1["resident"]) \
+            / xp.maximum(p["pool"], tiny)
+        quiet &= xp.where(jet, avail >= p["safe"] + guard, True).all()
+        # no timer fired during the fine step (a fire's reset makes the
+        # step non-representative of the window it would be scaled over)
+        for tk in _SCALE_TIMERS:
+            if tk in s1:
+                quiet &= (s1[tk] >= s[tk]).all()
+        if flt:
+            quiet &= (s1["lost"].sum() == zero) & ~s1["gapped"].any()
+            # stochastic loss draws once per (link, tick): points with a
+            # live threshold may only coarsen while nothing is moving
+            quiet &= ~(thr_any & moving.any(-1)).any()
+        # ---- stride: distance to the next event ---------------------- #
+        g = xp.minimum(max_stride, xp.int32(ticks) - t)
+        g = imin(g, xp.where(start_tick > t, start_tick - t, _BIG))
+        if dyn:
+            g = imin(g, xp.where(p["fail_at"] > t,
+                                 p["fail_at"] - t, _BIG))
+            g = imin(g, xp.where(p["fail_until"] > t,
+                                 p["fail_until"] - t, _BIG))
+            if flap:
+                st_, per = p["flap_start"], p["flap_period"]
+                dn = p["flap_down"]
+                phase = (t - st_) % per
+                nxt = xp.minimum(per - phase,
+                                 xp.where(phase < dn, dn - phase, _BIG))
+                g = imin(g, xp.where(st_ > t, st_ - t, nxt))
+        if flt:
+            g = imin(g, xp.where(p["crash_at"] > t,
+                                 p["crash_at"] - t, _BIG))
+            g = imin(g, xp.where(p["crash_until"] > t,
+                                 p["crash_until"] - t, _BIG))
+        # finite bursts: scaled injection must not overshoot the tap
+        room = p["burst"] - inj1
+        g = fgap(g, xp.where(moving & xp.isfinite(room),
+                             xp.floor(xp.maximum(room, zero)
+                                      / xp.maximum(dinj, tiny)) + one,
+                             bigf))
+        if any_msg:
+            # message-window room shrinks while injection outruns
+            # delivery; never let a macro jam the window shut
+            dout = xp.maximum(dinj - ddel, zero)
+            wroom = p["m_win"] * p["m_bytes"] - (inj1 - del1)
+            g = fgap(g, xp.where((dout > tiny) & xp.isfinite(wroom),
+                                 xp.floor(xp.maximum(wroom, zero)
+                                          / xp.maximum(dout, tiny))
+                                 + one, bigf))
+        if dyn and Sn:
+            # weighted-ECMP flowlet bookkeeping gaps by k ticks under a
+            # macro; keep k at or below the idle gap so no spurious
+            # flowlet boundary opens
+            wec_move = (p["rmode"][..., None] == 1) & moving
+            g = imin(g, xp.where(wec_move, p["flet"][..., None], _BIG))
+        # exact fire landing: a window may end ON the tick a rate timer
+        # fires — the next fine step performs the fire with the state
+        # the fine reference had (rates are constant between fires in a
+        # quiet stretch), so DCQCN/CC recovery ramps coarsen between
+        # fires with zero phase drift.  ceil lands integral quotients
+        # on the right tick (floor(q)+1 is one late there); the small
+        # down-bias eats float noise in the division — an under-cap
+        # only costs one extra fine step, never a crossed fire
+        bias = f(1e-3)
+
+        def fire_gap(g, t0, t1, thr, rate):
+            run = t1 > t0          # this timer advanced this fine step
+            q = (thr - t1) / xp.maximum(rate, tiny)
+            gapf = xp.maximum(xp.ceil(q - bias), one)
+            return fgap(g, xp.where(run, gapf, bigf))
+
+        fdt = f(dt)
+        g = fire_gap(g, s["t_us"], s1["t_us"], p["r_tmr"], fdt)
+        g = fire_gap(g, s["a_tus"], s1["a_tus"], p["a_tmr"], fdt)
+        g = fire_gap(g, s["byts"], s1["byts"], p["bctr"],
+                     s1["byts"] - s["byts"])
+        if any_cc:
+            g = fire_gap(g, s["cc_tus"], s1["cc_tus"], p["cc_upd"], fdt)
+        k = xp.maximum(g, xp.int32(1))
+        return xp.where(quiet, k, xp.int32(1))
+
+    return stride

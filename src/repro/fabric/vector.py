@@ -75,6 +75,8 @@ from .messages import (HIST_BUCKETS, HIST_MIN_US, MSG_COUNT_EPS, hist_ratio,
                        percentile_from_counts)
 from .topology import NEVER_TICK
 from ._scan import pick_unroll
+from . import fused
+from .fused import AdaptiveConfig
 
 _STAGES = 4          # NIC egress, leaf uplink, spine, leaf downlink
 
@@ -683,6 +685,9 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
     any_cc, any_msg = o.get("cc", False), o.get("msg", False)
     Lm = o.get("Lm", 1)
     flt, flap = o.get("flt", False), o.get("flap", False)
+    # fused-kernel tier for the two priority water-fills ("ref" is the
+    # inline formulation; "pallas"/"interpret" need the jnp namespace)
+    impl = o.get("impl", "ref") if xp is not np else "ref"
     f = dtype
     bpt = f(1e9 / 8.0 * dt * 1e-6)       # bytes per (Gbps * tick)
     fdt = f(dt)
@@ -798,28 +803,20 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
         q0 = qm[..., 0, :, :]
         qtc = class_tot(q0)                       # [.., Q, P]
         budget0 = budget if upf is None else budget * upf
-        budget_left = budget0
-        fr, cans = [], []
-        for qi in range(N_QOS):
-            qsum = qtc[..., qi, :]
-            can = st["stage"][k] & ~s["paused"][..., qi, :] & (qsum > zero)
-            frac = xp.where(can,
-                            xp.minimum(one, budget_left /
-                                       xp.where(qsum > zero, qsum, one)),
-                            zero)
-            fr.append(frac)
-            cans.append(can)
-            # clamp leftover budget below 1e-6 of the link budget to
-            # zero (rounding crumbs after a class eats the whole budget
-            # must not become micro-byte trickles for the next class —
-            # they would trigger full-size discrete CNPs downstream);
-            # relative, so f32 and f64 backends agree with the scalar
-            # driver on every grant/no-grant decision (OutputPort.drain)
-            budget_left = budget_left - frac * qsum
-            budget_left = xp.where(budget_left < budget_crumb, zero,
-                                   budget_left)
-        frac_q = xp.stack(fr, -2)                 # [.., Q, P]
-        can_q = xp.stack(cans, -2)
+        # strict-priority budget grants as one fused water-fill stage:
+        # each class takes min(1, left/demand), leftover budget below
+        # 1e-6 of the link budget clamps to zero (rounding crumbs after
+        # a class eats the whole budget must not become micro-byte
+        # trickles for the next class — they would trigger full-size
+        # discrete CNPs downstream); relative, so f32 and f64 backends
+        # agree with the scalar driver on every grant/no-grant decision
+        # (OutputPort.drain).  The ref tier is op for op the unrolled
+        # loop it replaced; pallas/interpret run the VMEM kernel.
+        can_q = st["stage"][k] & ~s["paused"] & (qtc > zero)  # [.., Q, P]
+        frac_q = fused.priority_grants(
+            xp, qtc, can_q if impl == "ref"
+            else xp.where(can_q, one, zero),
+            budget0, budget_crumb, one, zero, impl=impl)
         if wrr:
             # weighted water-filling over backlogged unpaused classes,
             # unrolled Q rounds with the exact op order of
@@ -895,7 +892,17 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
         s[hi] = s[hi] + xp.where(full, s[lo], zero)
         s[lo] = xp.where(full, zero, s[lo])
 
-    def step(s, t):
+    def step(s, t, it=None):
+        # ``t`` is the simulated tick (timers, event windows, fault
+        # hashes); ``it`` the iteration counter indexing the slot-major
+        # delay rings.  The fine-tick backends pass it = t (identical
+        # expressions, so the scan program is unchanged); the adaptive
+        # backends advance t by the macro stride while it steps by one,
+        # keeping ring writes/reads dense — a delay of d ticks becomes
+        # d iterations, exact whenever the stride is 1 and within the
+        # documented coarsening bound otherwise.
+        if it is None:
+            it = t
         s = dict(s)
         now = (xp.asarray(t, dtype) + one) * fdt
         fold(s, "injected", "inj_lo")
@@ -1154,8 +1161,8 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
             # spray reorder settling: sprayed arrivals wait settle ticks
             # in a slot-major ring before receiver admission (per-flow
             # read offset; 0 = read the slot just written = pass-through)
-            s["sring"] = ring_set(s["sring"], t % Hs, fbm)
-            sidx = (t - p["settle"]) % Hs
+            s["sring"] = ring_set(s["sring"], it % Hs, fbm)
+            sidx = (it - p["settle"]) % Hs
             fbm = xp.take_along_axis(s["sring"], sidx[..., None, None, :],
                                      -3)[..., 0, :, :]
         arr_b = fbm[..., 0, :]
@@ -1241,15 +1248,13 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
         # QoS-classed arrivals [.., Q, R] (admission class x receiver)
         arr_cr = (st["cls_recv"] * arr_b[..., None, None, :]).sum(-1)
         arr_tot = arr_cr.sum(-2)
-        # admission: RNIC buffer space granted in QoS-priority order
+        # admission: RNIC buffer space granted in QoS-priority order —
+        # the second fused priority water-fill (HostDatapath.admit_link)
         space_r = xp.maximum(p["rnic_buf"] - s["qos_q"].sum(-2), zero)
-        acc = []
-        for q_i in range(N_QOS):
-            a = xp.minimum(arr_cr[..., q_i, :], space_r)
-            space_r = space_r - a
-            acc.append(a)
-        acc_cr = xp.stack(acc, -2)
-        accepted = sum(acc)
+        acc_cr = fused.priority_admit(xp, arr_cr, space_r, impl=impl)
+        accepted = acc_cr[..., 0, :]
+        for q_i in range(1, N_QOS):
+            accepted = accepted + acc_cr[..., q_i, :]
         if flt:
             # first byte accepted after a crash restart stamps the
             # crash-recovery latency (run_fabric step 3)
@@ -1299,15 +1304,15 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
                          -2)
         # ring layout [H, 2, R]: the write is a contiguous leading-axis
         # slice update, which XLA aliases in place inside the scan carry
-        s["ring"] = ring_set(s["ring"], t % H, parts)
+        s["ring"] = ring_set(s["ring"], it % H, parts)
         s["resident"] = s["resident"] + pool_drained
         s["strag_res"] = s["strag_res"] + strag_part
         s["drained"] = s["drained"] + drained
 
-        idx = (t - p["d2"]) % H                   # [.., 2, R]
+        idx = (it - p["d2"]) % H                  # [.., 2, R]
         r2 = xp.take_along_axis(s["ring"], idx[..., None, :, :],
                                 -3)[..., 0, :, :]
-        r2 = xp.where(t >= p["d2"], r2, zero)
+        r2 = xp.where(it >= p["d2"], r2, zero)
         for j, is_strag in ((0, False), (1, True)):
             r = r2[..., j, :]
             void = xp.minimum(r, s["esc_debt"])
@@ -1419,8 +1424,8 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
         fires = xp.stack([xp.where(f_esc, one, zero),
                           xp.where(f_wm, one, zero),
                           xp.where(pace_fire, one, zero)], -2)
-        s["cring"] = ring_set(s["cring"], t % Hc, fires)
-        cidx = (t - p["cnp_dly"]) % Hc
+        s["cring"] = ring_set(s["cring"], it % Hc, fires)
+        cidx = (it - p["cnp_dly"]) % Hc
         due = xp.take_along_axis(s["cring"], cidx[..., None, None, :],
                                  -3)[..., 0, :, :]
         for j in range(3):
@@ -1454,6 +1459,16 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
             # switch-asserted pause mask, carried so a crash can rebuild
             # the pause state of its access ports without the RNIC gate
             s["lpause"] = link_paused
+            # PFC-deadlock watchdog (faults.has_pause_cycle, vectorized):
+            # count a tick whenever the switch-asserted pause graph of
+            # any single class holds a directed cycle — the per-class
+            # [Q, P] mask lifts to node adjacencies through the static
+            # port -> (u, v) one-hot and closes in log2(N) squarings
+            n_dl = int(round(float(np.sqrt(st["dl_E"].shape[-1]))))
+            cyc = fused.cycle_flags(
+                xp, xp.where(link_paused, one, zero), st["dl_E"],
+                n_dl, one)
+            s["deadlock"] = s["deadlock"] + xp.where(cyc, one, zero)
         # the receiver RNIC gate: whole access link (legacy — broadcast
         # across the class axis) or per admission class (host_pfc_per_tc,
         # [.., Q, R] state gathered per stage-3 port)
@@ -1616,6 +1631,7 @@ def _init_state(xp, lead, fsp: FabricSweepParams, p, dtype):
         s["flt_drop"] = z()
         s["crash_rec"] = xp.full(lead + (R,), np.inf, dtype)
         s["lpause"] = xp.zeros(lead + (N_QOS, P), bool)
+        s["deadlock"] = z()
     return s
 
 
@@ -1646,6 +1662,10 @@ def _static(fsp: FabricSweepParams, xp, dtype):
         out["dnP"] = xp.asarray(fsp.dnP, dtype)
         out["candS"] = xp.asarray(fsp.candS)
         out["T1"] = xp.asarray(fsp.T1, dtype)
+    if fsp.any_flt:
+        # deadlock-watchdog scatter: port -> flattened (u, v) node pair
+        out["dl_E"] = xp.asarray(
+            fused.pause_pair_onehot(fsp.port_keys), dtype)
     return out
 
 
@@ -1710,8 +1730,8 @@ def _results(s, fsp: FabricSweepParams) -> Dict[str, np.ndarray]:
         out["dropped_pkts"] = np.asarray(s["flt_drop"], np.float64) \
             / fsp.pvals["f_mtu"]
         out["crash_recovery_us"] = np.asarray(s["crash_rec"], np.float64)
-        # the PFC-deadlock watchdog is scalar-only (graph walk)
-        out["deadlock_ticks"] = np.zeros(G)
+        # vectorized PFC-deadlock watchdog (faults.has_pause_cycle)
+        out["deadlock_ticks"] = np.asarray(s["deadlock"], np.float64)
     else:
         out["retransmit_bytes"] = np.zeros(G)
         out["dropped_pkts"] = np.zeros(G)
@@ -1783,15 +1803,17 @@ def _np_params(fsp: FabricSweepParams, dtype) -> Dict[str, np.ndarray]:
     return p
 
 
-def _opts(fsp: FabricSweepParams) -> dict:
+def _opts(fsp: FabricSweepParams, impl: str = "ref") -> dict:
     """Trace-time capability flags for :func:`_make_step`."""
     return {"dyn": fsp.dyn_route, "wrr": fsp.any_wrr,
             "host_tc": fsp.host_tc, "Hs": fsp.settle_ring,
             "Sn": fsp.n_spines, "cc": fsp.any_cc, "msg": fsp.any_msg,
-            "Lm": fsp.msg_ring, "flt": fsp.any_flt, "flap": fsp.any_flap}
+            "Lm": fsp.msg_ring, "flt": fsp.any_flt, "flap": fsp.any_flap,
+            "impl": impl}
 
 
-def _run_numpy(fsp: FabricSweepParams, dtype=np.float64):
+def _run_numpy(fsp: FabricSweepParams, dtype=np.float64,
+               adaptive: Optional[AdaptiveConfig] = None):
     p = _np_params(fsp, dtype)
     st = _static(fsp, np, dtype)
 
@@ -1802,8 +1824,29 @@ def _run_numpy(fsp: FabricSweepParams, dtype=np.float64):
     step = _make_step(np, ring_set, st, p, fsp.dt_us, fsp.ring_len, dtype,
                       fsp.cnp_ring, _opts(fsp))
     s = _init_state(np, (fsp.n_points,), fsp, p, dtype)
-    for t in range(fsp.ticks):
-        s = step(s, t)
+    if adaptive is None:
+        for t in range(fsp.ticks):
+            s = step(s, t)
+    else:
+        # adaptive host loop: fine step, then extrapolate over the quiet
+        # stride.  The delta comparison is safe on the pre-step dict
+        # because every scaled/compared key is freshly allocated by the
+        # step (only ring buffers mutate in place, and rings are never
+        # scaled).  k == 1 leaves the carry bit-identical to a fine tick.
+        stride = fused.make_stride_fn(np, fsp, p, _opts(fsp), adaptive,
+                                      dtype)
+        t = it = 0
+        while t < fsp.ticks:
+            s1 = step(s, np.int32(t), np.int32(it))
+            k = int(stride(s, s1, np.int32(t)))
+            if k > 1:
+                s1 = fused.macro_advance(np, s, s1, dtype(k - 1))
+            s = s1
+            t += k
+            it += 1
+        res = _results(s, fsp)
+        res["adaptive_iterations"] = np.full(fsp.n_points, it)
+        return res
     return _results(s, fsp)
 
 
@@ -1811,9 +1854,9 @@ _PROGRAMS: Dict[tuple, Callable] = {}
 _PROGRAMS_MAX = 8          # bound compiled-executable memory, as sweep.py
 
 
-def _jax_program(fsp: FabricSweepParams, unroll: int):
+def _jax_program(fsp: FabricSweepParams, unroll: int, impl: str = "ref"):
     key = (fsp.structure_key, fsp.n_points, fsp.ticks, fsp.ring_len,
-           fsp.cnp_ring, fsp.dt_us, unroll)
+           fsp.cnp_ring, fsp.dt_us, unroll, impl)
     fn = _PROGRAMS.get(key)
     if fn is not None:
         return fn
@@ -1829,7 +1872,7 @@ def _jax_program(fsp: FabricSweepParams, unroll: int):
 
     def one_point(s0, p):
         step = _make_step(jnp, ring_set, st, p, fsp.dt_us, H, dtype, Hc,
-                          _opts(fsp))
+                          _opts(fsp, impl))
 
         def body(s, t):
             return step(s, t), None
@@ -1847,11 +1890,11 @@ def _jax_program(fsp: FabricSweepParams, unroll: int):
     return fn
 
 
-def _run_jax(fsp: FabricSweepParams, unroll):
+def _run_jax(fsp: FabricSweepParams, unroll, impl: str = "ref"):
     import jax.numpy as jnp
 
     u = pick_unroll(None if unroll == "auto" else unroll)
-    fn = _jax_program(fsp, u)
+    fn = _jax_program(fsp, u, impl)
     p_np = _np_params(fsp, np.float32)
     s0 = _init_state(np, (fsp.n_points,), fsp, p_np, np.float32)
     p = {k: jnp.asarray(v) for k, v in p_np.items()}
@@ -1859,8 +1902,74 @@ def _run_jax(fsp: FabricSweepParams, unroll):
     return _results({k: np.asarray(v) for k, v in final.items()}, fsp)
 
 
+def _jax_adaptive_program(fsp: FabricSweepParams, cfg: AdaptiveConfig,
+                          impl: str):
+    key = ("adaptive", fsp.structure_key, fsp.n_points, fsp.ticks,
+           fsp.ring_len, fsp.cnp_ring, fsp.dt_us, impl, cfg.key())
+    fn = _PROGRAMS.get(key)
+    if fn is not None:
+        return fn
+    import jax
+    import jax.numpy as jnp
+
+    dtype = jnp.float32
+    st = _static(fsp, jnp, dtype)
+    ticks, H, Hc = fsp.ticks, fsp.ring_len, fsp.cnp_ring
+
+    def ring_set(ring, idx, v):
+        return ring.at[..., idx, :, :].set(v)
+
+    def run(s0, p):
+        # unlike the scan program the adaptive loop is batched, not
+        # vmapped: the stride is a whole-grid reduction, so every point
+        # advances in lockstep (a per-point stride would desynchronize
+        # the shared ring clock)
+        step = _make_step(jnp, ring_set, st, p, fsp.dt_us, H, dtype, Hc,
+                          _opts(fsp, impl))
+        stride = fused.make_stride_fn(jnp, fsp, p, _opts(fsp, impl), cfg,
+                                      dtype)
+
+        def cond(carry):
+            _, t, _ = carry
+            return t < ticks
+
+        def body(carry):
+            s, t, it = carry
+            s1 = step(s, t, it)
+            k = stride(s, s1, t)
+            km1 = k.astype(dtype) - dtype(1.0)
+            s2 = fused.macro_advance(jnp, s, s1, km1)
+            return s2, t + k, it + jnp.int32(1)
+
+        s, _, it = jax.lax.while_loop(
+            cond, body, (s0, jnp.int32(0), jnp.int32(0)))
+        return s, it
+
+    fn = jax.jit(run, donate_argnums=(0,))
+    while len(_PROGRAMS) >= _PROGRAMS_MAX:
+        _PROGRAMS.pop(next(iter(_PROGRAMS)))
+    _PROGRAMS[key] = fn
+    return fn
+
+
+def _run_jax_adaptive(fsp: FabricSweepParams, cfg: AdaptiveConfig,
+                      impl: str = "ref"):
+    import jax.numpy as jnp
+
+    fn = _jax_adaptive_program(fsp, cfg, impl)
+    p_np = _np_params(fsp, np.float32)
+    s0 = _init_state(np, (fsp.n_points,), fsp, p_np, np.float32)
+    p = {k: jnp.asarray(v) for k, v in p_np.items()}
+    final, iters = fn({k: jnp.asarray(v) for k, v in s0.items()}, p)
+    res = _results({k: np.asarray(v) for k, v in final.items()}, fsp)
+    res["adaptive_iterations"] = np.full(fsp.n_points, int(iters))
+    return res
+
+
 def run_fabric_sweep(scenarios: Sequence, backend: str = "jax",
-                     unroll="auto") -> Dict[str, np.ndarray]:
+                     unroll="auto", adaptive_dt: bool = False,
+                     adaptive: Optional[AdaptiveConfig] = None,
+                     impl: str = "auto") -> Dict[str, np.ndarray]:
     """Advance a grid of fabric scenarios through the full multi-host
     recurrence at once; returns ``{metric: array}`` aligned with the input
     order (arrays are ``[G]``, ``[G, F]`` or ``[G, R]`` — flow order is the
@@ -1870,10 +1979,29 @@ def run_fabric_sweep(scenarios: Sequence, backend: str = "jax",
     receiver/switch/flow *parameters* may vary freely (see
     :class:`FabricSweepParams`).  ``backend="numpy"`` runs the same step
     function batched under float64 — the verification reference.
+
+    ``adaptive_dt=True`` (or an explicit :class:`AdaptiveConfig` via
+    ``adaptive=``) turns on macro-tick coarsening: quiet stretches of the
+    whole grid advance ``k * dt`` per iteration in closed form, with fine
+    ticks near every queue/watermark/timer event (see
+    :mod:`repro.fabric.fused` for the quiet predicate, the event caps and
+    the documented equivalence bound).  The default ``adaptive_dt=False``
+    traces none of this machinery and reproduces today's results exactly.
+
+    ``impl`` selects the fused-stage kernel tier for the jax backend
+    (``"auto"`` -> Pallas on TPU, the inline reference elsewhere;
+    ``"interpret"`` runs the Pallas kernels under the interpreter so CPU
+    CI exercises the kernel path).  The numpy reference always runs the
+    inline formulation.
     """
     fsp = FabricSweepParams.from_scenarios(scenarios)
+    cfg = adaptive if adaptive is not None \
+        else (AdaptiveConfig() if adaptive_dt else None)
     if backend == "numpy":
-        return _run_numpy(fsp)
+        return _run_numpy(fsp, adaptive=cfg)
     if backend == "jax":
-        return _run_jax(fsp, unroll)
+        ri = fused.resolve_impl(impl)
+        if cfg is not None:
+            return _run_jax_adaptive(fsp, cfg, ri)
+        return _run_jax(fsp, unroll, ri)
     raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,322 @@
+"""Fused tick stages + adaptive time-stepping: correctness contracts.
+
+The contract under test (ISSUE 8 acceptance):
+
+* the fused priority water-fills (``priority_grants`` /
+  ``priority_admit``) are bit-identical between the inline ref tier and
+  the Pallas kernel run under the interpreter (float32), and the whole
+  jax engine with ``impl="interpret"`` reproduces ``impl="ref"`` output
+  arrays exactly;
+* ``adaptive_dt=False`` (the default) traces none of the adaptive
+  machinery — the numpy reference stays bit-equal to the PR 5/7 frozen
+  goldens already enforced by ``test_pfc_priority`` (re-asserted here on
+  one golden directly);
+* adaptive stepping honors the documented equivalence bound: per-flow
+  delivered bytes within ``AdaptiveConfig.rel_bytes_bound`` of the
+  fine-tick reference and completion timestamps quantized by at most
+  ``(max_stride + 1) * dt`` per crossed macro window (hypothesis
+  property over scenario shapes);
+* macro-ticks genuinely fire on quiet-tailed grids (the stride loop
+  takes measurably fewer iterations than ticks);
+* the vectorized PFC-deadlock watchdog agrees with the scalar
+  ``has_pause_cycle`` — exactly on synthetic pause masks (including
+  cyclic and split-TC cases) and end to end on a faulted PFC grid.
+"""
+import dataclasses
+import math
+import os
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.datapath import N_QOS
+from repro.fabric import fused
+from repro.fabric import scenarios as SC
+from repro.fabric import vector as V
+from repro.fabric.faults import FaultConfig, has_pause_cycle
+from repro.fabric.fused import (AdaptiveConfig, cycle_flags,
+                                pause_pair_onehot, priority_admit,
+                                priority_grants)
+from repro.fabric.vector import FabricSweepParams, run_fabric_sweep
+
+EXAMPLES = int(os.environ.get("FABRIC_TEST_EXAMPLES", "4"))
+
+
+# --------------------------------------------------------------------------- #
+# fused water-fill kernels: unit + tier equivalence
+# --------------------------------------------------------------------------- #
+def _rand_fill(seed, g=3, n=7):
+    rng = np.random.default_rng(seed)
+    demand = rng.uniform(0.0, 4.0, (g, N_QOS, n)).astype(np.float32)
+    can = (rng.random((g, N_QOS, n)) < 0.7).astype(np.float32)
+    budget = rng.uniform(0.0, 6.0, (g, n)).astype(np.float32)
+    crumb = np.full((g, n), 1e-3, np.float32)
+    return demand, can, budget, crumb
+
+
+def test_priority_grants_ref_is_strict_priority():
+    demand, can, budget, crumb = _rand_fill(0, g=1)
+    out = priority_grants(np, demand, can, budget, crumb,
+                          np.float32(1.0), np.float32(0.0))
+    # python re-derivation, one (class, port) at a time
+    for j in range(demand.shape[-1]):
+        left = budget[0, j]
+        for q in range(N_QOS):
+            d = demand[0, q, j]
+            want = 0.0
+            if can[0, q, j] > 0.5:
+                want = min(1.0, left / (d if d > 0.0 else 1.0))
+            assert out[0, q, j] == np.float32(want)
+            left = left - np.float32(want) * d
+            if left < crumb[0, j]:
+                left = np.float32(0.0)
+
+
+def test_priority_admit_ref_water_fills():
+    demand, _, budget, _ = _rand_fill(1, g=1)
+    out = priority_admit(np, demand, budget)
+    for j in range(demand.shape[-1]):
+        sp = budget[0, j]
+        for q in range(N_QOS):
+            want = min(demand[0, q, j], sp)
+            assert out[0, q, j] == np.float32(want)
+            sp = sp - want
+    assert (out.sum(-2) <= budget + 1e-5).all()
+
+
+def test_fused_kernels_interpret_matches_ref_bitwise():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    demand, can, budget, crumb = _rand_fill(2)
+    ref_g = priority_grants(np, demand, can, budget, crumb,
+                            np.float32(1.0), np.float32(0.0))
+    int_g = priority_grants(jnp, jnp.asarray(demand), jnp.asarray(can),
+                            jnp.asarray(budget), jnp.asarray(crumb),
+                            jnp.float32(1.0), jnp.float32(0.0),
+                            impl="interpret")
+    assert np.array_equal(ref_g, np.asarray(int_g))
+    ref_a = priority_admit(np, demand, budget)
+    int_a = priority_admit(jnp, jnp.asarray(demand),
+                           jnp.asarray(budget), impl="interpret")
+    assert np.array_equal(ref_a, np.asarray(int_a))
+
+
+def test_resolve_impl():
+    assert fused.resolve_impl("ref") == "ref"
+    assert fused.resolve_impl("interpret") == "interpret"
+    with pytest.raises(ValueError):
+        fused.resolve_impl("nope")
+
+
+# --------------------------------------------------------------------------- #
+# engine-level: interpret tier == ref tier, adaptive off == frozen golden
+# --------------------------------------------------------------------------- #
+def _incast_grid(sim_s=0.002, burst_mb=0.5, n=4, with_victim=True):
+    return [SC.incast(n, mode=m, burst_mb=burst_mb, sim_time_s=sim_s,
+                      pfc=p, with_victim=with_victim)
+            for m in ("jet", "ddio") for p in (False, True)]
+
+
+def test_jax_interpret_tier_matches_ref_tier_exactly():
+    pytest.importorskip("jax")
+    scens = _incast_grid()
+    ref = run_fabric_sweep(scens, backend="jax", impl="ref")
+    itp = run_fabric_sweep(scens, backend="jax", impl="interpret")
+    for k in ("flow_delivered_bytes", "flow_completion_us",
+              "flow_goodput_gbps", "pause_total_us",
+              "ecn_marked_bytes", "recv_goodput_gbps"):
+        a, b = np.asarray(ref[k]), np.asarray(itp[k])
+        both_nan = np.isnan(a) & np.isnan(b)
+        assert (both_nan | (a == b)).all(), k
+
+
+def test_adaptive_off_stays_on_golden():
+    # the frozen PR 5/7 golden (test_pfc_priority.GOLDEN) through the
+    # public API with adaptive_dt explicitly False: bit-for-bit the
+    # pre-adaptive numpy reference (goodput within the established
+    # 1e-13 float64 envelope of the scalar golden literals)
+    from test_pfc_priority import GOLDEN
+
+    sc = SC.incast(n_senders=8, mode="jet", pfc=True, burst_mb=1.0,
+                   sim_time_s=0.015)
+    out = run_fabric_sweep([sc], backend="numpy", adaptive_dt=False)
+    g = np.array(GOLDEN["incast8_jet_pfc"]["goodput"])
+    got = out["flow_goodput_gbps"][0]
+    rel = np.abs(got - g) / np.maximum(np.abs(g), 1e-30)
+    assert rel.max() <= 1e-13
+    comp = GOLDEN["incast8_jet_pfc"]["completion"]
+    got_c = out["flow_completion_us"][0]
+    for f, want in enumerate(comp):
+        if math.isinf(want):
+            assert math.isinf(got_c[f])
+        else:
+            assert abs(got_c[f] - want) <= 5e-13 * max(want, 1.0)
+
+
+# --------------------------------------------------------------------------- #
+# adaptive dt: equivalence bound + the machinery actually coarsens
+# --------------------------------------------------------------------------- #
+def _adaptive_iteration_count(scens, cfg):
+    """Run the numpy adaptive loop by hand, returning (iters, ticks,
+    results)."""
+    fsp = FabricSweepParams.from_scenarios(scens)
+    p = V._np_params(fsp, np.float64)
+    st = V._static(fsp, np, np.float64)
+
+    def ring_set(ring, idx, v):
+        ring[..., idx, :, :] = v
+        return ring
+
+    step = V._make_step(np, ring_set, st, p, fsp.dt_us, fsp.ring_len,
+                        np.float64, fsp.cnp_ring, V._opts(fsp))
+    stride = fused.make_stride_fn(np, fsp, p, V._opts(fsp), cfg,
+                                  np.float64)
+    s = V._init_state(np, (fsp.n_points,), fsp, p, np.float64)
+    t = it = 0
+    while t < fsp.ticks:
+        s1 = step(s, np.int32(t), np.int32(it))
+        k = int(stride(s, s1, np.int32(t)))
+        if k > 1:
+            s1 = fused.macro_advance(np, s, s1, np.float64(k - 1))
+        s, t, it = s1, t + k, it + 1
+    return it, fsp.ticks, V._results(s, fsp)
+
+
+def test_adaptive_coarsens_and_bounds_delivered():
+    # a drain-bounded grid (every burst finite): the incast drains,
+    # the tail is genuinely quiet, and the stride machinery must
+    # exploit it.  Open victim flows sit in a permanent DCQCN
+    # sawtooth — per-tick dynamics the stride correctly refuses to
+    # coarsen (covered by the bound tests below)
+    scens = _incast_grid(with_victim=False)
+    cfg = AdaptiveConfig()
+    iters, ticks, adap = _adaptive_iteration_count(scens, cfg)
+    assert iters < ticks * 0.5, (iters, ticks)
+    fine = run_fabric_sweep(scens, backend="numpy")
+    db_f = fine["flow_delivered_bytes"]
+    db_a = adap["flow_delivered_bytes"]
+    rel = np.abs(db_a - db_f) / np.maximum(db_f, 1.0)
+    assert rel.max() <= cfg.rel_bytes_bound, rel.max()
+
+
+def test_adaptive_public_api_matches_hand_loop():
+    scens = _incast_grid()
+    via_api = run_fabric_sweep(scens, backend="numpy", adaptive_dt=True)
+    _, _, by_hand = _adaptive_iteration_count(scens, AdaptiveConfig())
+    for k in ("flow_delivered_bytes", "flow_completion_us"):
+        a, b = np.asarray(via_api[k]), np.asarray(by_hand[k])
+        both_nan = np.isnan(a) & np.isnan(b)
+        assert (both_nan | (a == b)).all(), k
+
+
+def test_adaptive_jax_within_bound():
+    pytest.importorskip("jax")
+    scens = _incast_grid()
+    cfg = AdaptiveConfig()
+    fine = run_fabric_sweep(scens, backend="numpy")
+    ja = run_fabric_sweep(scens, backend="jax", adaptive_dt=True)
+    db_f = fine["flow_delivered_bytes"]
+    rel = np.abs(ja["flow_delivered_bytes"] - db_f) \
+        / np.maximum(db_f, 1.0)
+    # documented bound + the engine's float32 slack
+    assert rel.max() <= cfg.rel_bytes_bound + 5e-4, rel.max()
+
+
+def test_adaptive_disabled_by_onoff_trains():
+    # on/off burst trains have no closed form: stride stays 1 and the
+    # result is bit-equal to the fine reference
+    scens = [SC.incast(2, mode="jet", burst_mb=0.25, sim_time_s=0.001)]
+    for f in scens[0].flows:
+        f.on_off_us = (20.0, 20.0)
+    iters, ticks, adap = _adaptive_iteration_count(scens,
+                                                   AdaptiveConfig())
+    assert iters == ticks
+    fine = run_fabric_sweep(scens, backend="numpy")
+    assert np.array_equal(adap["flow_delivered_bytes"],
+                          fine["flow_delivered_bytes"])
+
+
+@pytest.mark.slow
+@settings(max_examples=EXAMPLES, deadline=None)
+@given(n=st.integers(2, 5), jet=st.booleans(), pfc=st.booleans(),
+       burst_q=st.integers(1, 4))
+def test_adaptive_equivalence_bound_property(n, jet, pfc, burst_q):
+    """Hypothesis property: coarsening never moves delivered bytes
+    beyond ``rel_bytes_bound`` nor completion stamps beyond the macro
+    quantization envelope."""
+    cfg = AdaptiveConfig()
+    scens = [SC.incast(n, mode="jet" if jet else "ddio",
+                       burst_mb=0.25 * burst_q, sim_time_s=0.002,
+                       pfc=pfc)]
+    fine = run_fabric_sweep(scens, backend="numpy")
+    adap = run_fabric_sweep(scens, backend="numpy", adaptive_dt=True,
+                            adaptive=cfg)
+    db_f = fine["flow_delivered_bytes"]
+    rel = np.abs(adap["flow_delivered_bytes"] - db_f) \
+        / np.maximum(db_f, 1.0)
+    assert rel.max() <= cfg.rel_bytes_bound, rel.max()
+    cf = fine["flow_completion_us"]
+    ca = adap["flow_completion_us"]
+    fin = np.isfinite(cf)
+    assert (np.isfinite(ca) == fin).all()
+    if fin.any():
+        dt = 1.0  # incast grids pack dt_us = 1.0
+        shift = np.abs(ca[fin] - cf[fin]).max()
+        # (max_stride + 1) * dt per crossed macro window; allow the
+        # delivered-byte drift to compound across a few windows
+        assert shift <= 4 * (cfg.max_stride + 1) * dt, shift
+
+
+# --------------------------------------------------------------------------- #
+# PFC-deadlock watchdog: synthetic + engine equivalence
+# --------------------------------------------------------------------------- #
+def test_cycle_flags_matches_has_pause_cycle_synthetic():
+    port_keys = [("a", "b"), ("b", "c"), ("c", "a"), ("b", "a")]
+    E = pause_pair_onehot(port_keys)
+    n = 3
+    cases = [
+        {(0, 0), (1, 0), (2, 0)},       # 3-cycle in one TC -> deadlock
+        {(0, 0), (1, 0)},               # open chain -> no
+        {(0, 0), (1, 1), (2, 2)},       # same edges split across TCs
+        set(),                          # nothing paused
+        {(0, 1), (3, 1)},               # a<->b ping-pong, one class
+        {(0, 0), (3, 1)},               # ping-pong split across TCs
+    ]
+    for case in cases:
+        lp = np.zeros((2, N_QOS, len(port_keys)))
+        pairs = []
+        for pi, tc in case:
+            lp[0, tc, pi] = 1.0
+            pairs.append((port_keys[pi], tc))
+        want = has_pause_cycle(pairs)
+        got = cycle_flags(np, lp, E, n, 1.0)
+        assert bool(got[0]) == want, case
+        assert not bool(got[1])         # the all-zero point never flags
+
+
+def test_deadlock_ticks_scalar_vs_numpy_engine():
+    base = SC.all_to_all(4, mode="ddio", msg_kb=256, pfc=True,
+                         sim_time_s=0.002)
+    scens = []
+    for _ in range(2):
+        sc = dataclasses.replace(base)
+        sc.fabric = dataclasses.replace(base.fabric)
+        sc.fabric.faults = FaultConfig()
+        scens.append(sc)
+    out = run_fabric_sweep(scens, backend="numpy")
+    for i, sc in enumerate(scens):
+        r = sc.run()
+        assert float(r.deadlock_ticks) == float(out["deadlock_ticks"][i])
+
+
+def test_deadlock_ticks_jax_matches_numpy():
+    pytest.importorskip("jax")
+    sc = SC.incast(4, mode="ddio", burst_mb=1.0, sim_time_s=0.002,
+                   pfc=True)
+    sc.fabric.faults = FaultConfig()
+    out_np = run_fabric_sweep([sc], backend="numpy")
+    out_jx = run_fabric_sweep([sc], backend="jax")
+    assert float(out_np["deadlock_ticks"][0]) == \
+        float(out_jx["deadlock_ticks"][0])
