@@ -34,7 +34,15 @@ Four parts:
    of the numpy engine's message bookkeeping (counts / completion
    times vs the scalar tracker) and the histogram-p99 error vs the
    scalar exact percentile, gating the documented ~4.6% bound.
-7. **Faults grid** — the robustness program: loss-rate x recovery-mode
+7. **Scale (pod) grid** — the sparse-incidence program: the same
+   3-level cross-pod incast grid at 64 and 256 hosts, each advanced as
+   ONE jax program; XLA's compiled cost analysis gives per-tick flops
+   at both sizes and the growth exponent
+   ``log(cost ratio) / log(host ratio)`` documents the ~linear
+   (sub-quadratic) scaling in fabric size that the dense ``[P, F]``
+   incidence cannot offer (its one-hot products grow with
+   flows x ports, i.e. quadratically in hosts).
+8. **Faults grid** — the robustness program: loss-rate x recovery-mode
    over the lossy 8-to-1 verbs incast as ONE vector program carrying
    the per-flow RTO/retransmit ledgers, plus a receiver crash--restart
    point; records warm speedup vs the scalar loop and gates the fault
@@ -288,6 +296,85 @@ def run_fabric_sweep_bench() -> List[Dict]:
         "unfinished_incast_points": int((~fin).sum()),
         "mean_victim_gbps": float(jx["victim_goodput_gbps"].mean()),
         "max_pause_fanout": int(jx["pause_fanout"].max()),
+    }]
+
+
+def _xla_flops(scens) -> Dict:
+    """Compiled-cost census of one vector-grid program: lower the
+    (cached) fixed-dt program for the grid and ask XLA's cost model for
+    the flop count.  Unlike the jaxpr op census (which counts program
+    *structure* and is size-independent), the compiled cost grows with
+    the array extents — exactly the quantity whose growth law the scale
+    bench gates."""
+    import jax
+    import jax.numpy as jnp
+
+    fsp = V.FabricSweepParams.from_scenarios(scens, sparse=True)
+    fn = V._jax_program(fsp, pick_unroll(None), "ref")
+    p_np = V._np_params(fsp, np.float32)
+    s0 = V._init_state(np, (fsp.n_points,), fsp, p_np, np.float32)
+    ca = jax.jit(fn).lower(
+        {k: jnp.asarray(v) for k, v in s0.items()},
+        {k: jnp.asarray(v) for k, v in p_np.items()}).compile() \
+        .cost_analysis()
+    if isinstance(ca, (list, tuple)):          # older jax returns [dict]
+        ca = ca[0] if ca else {}
+    return {"flops": float(ca.get("flops", float("nan"))),
+            "ticks": fsp.ticks, "flows": fsp.n_flows,
+            "ports": fsp.n_ports, "points": fsp.n_points}
+
+
+def run_scale_bench() -> List[Dict]:
+    """Pod-scale cost growth of the sparse-incidence engine: the same
+    3-level cross-pod incast grid at 64 and 256 hosts, each advanced
+    as ONE jax program.  The gated number is the growth exponent
+    ``log(flops ratio) / log(host ratio)`` of XLA's compiled per-tick
+    cost — segment-sum over a static incidence list is linear in
+    (flows + ports), so the exponent must stay well under 2 (the dense
+    one-hot engine's flows x ports products would put it at ~2)."""
+    sim_s = 0.002 if QUICK else 0.004
+    rows: List[Dict] = []
+    for hosts, (pods, leaves, hpl) in ((64, (2, 2, 16)),
+                                       (256, (4, 4, 16))):
+        scens, _ = SC.pod_incast_grid(
+            mode=("jet", "ddio"), pfc=(False,), pods=pods,
+            leaves_per_pod=leaves, hosts_per_leaf=hpl,
+            burst_mb=0.2, sim_time_s=sim_s)
+        cost = _xla_flops(scens)
+        t0 = time.time()
+        run_fabric_sweep(scens, backend="jax")
+        t_cold = time.time() - t0
+        t_warm, out = _best_of(lambda: run_fabric_sweep(scens,
+                                                        backend="jax"))
+        fin = np.isfinite(out["incast_completion_us"])
+        rows.append({
+            "hosts": hosts,
+            "pods": pods, "leaves_per_pod": leaves,
+            "hosts_per_leaf": hpl,
+            "grid_points": cost["points"],
+            "flows": cost["flows"], "ports": cost["ports"],
+            "ticks": cost["ticks"],
+            "flops_per_tick": cost["flops"] / cost["ticks"],
+            "jax_cold_s": t_cold, "jax_warm_s": t_warm,
+            "per_tick_ms_warm": t_warm / cost["ticks"] * 1e3,
+            "mean_incast_fct_us": (
+                float(out["incast_completion_us"][fin].mean())
+                if fin.any() else None),
+        })
+    small, big = rows
+    host_ratio = big["hosts"] / small["hosts"]
+    cost_ratio = big["flops_per_tick"] / small["flops_per_tick"]
+    warm_ratio = big["jax_warm_s"] / small["jax_warm_s"]
+    return [{
+        "host_ratio": host_ratio,
+        "flops_ratio": cost_ratio,
+        "warm_ratio": warm_ratio,
+        # compiled-cost growth law: 1.0 = linear in hosts, 2.0 = the
+        # dense engine's quadratic one-hot products
+        "growth_exponent": math.log(cost_ratio) / math.log(host_ratio),
+        "warm_growth_exponent": (math.log(warm_ratio)
+                                 / math.log(host_ratio)),
+        "sizes": rows,
     }]
 
 
@@ -568,6 +655,8 @@ def main() -> None:
     emit(NAME + "_sweep", sw, quiet=True)
     fs = run_fabric_sweep_bench()
     emit(NAME + "_vector", fs)
+    sc = run_scale_bench()
+    emit(NAME + "_scale", sc)
     rt = run_routing_bench()
     emit(NAME + "_routing", rt)
     ms = run_messages_bench()
@@ -582,6 +671,7 @@ def main() -> None:
         json.dump(_jsonable({"quick": QUICK, "incast": rows,
                              "equivalence": eq, "sweep": sw[0],
                              "fabric_sweep": fs[0],
+                             "scale": sc[0],
                              "routing": rt[0],
                              "messages": ms[0],
                              "faults": ft[0],
@@ -605,6 +695,15 @@ def main() -> None:
           f"{v['per_tick_ms_warm']:.3f} ms/tick warm, "
           f"{v['op_count_step']} ops/step ({v['op_kinds']} kinds), "
           f"compile {v['compile_s']:.1f}s")
+    sb = sc[0]
+    b64, b256 = sb["sizes"]
+    print(f"# pod scale {b64['hosts']} -> {b256['hosts']} hosts (one "
+          f"program each, {b256['flows']} flows / {b256['ports']} ports "
+          f"at {b256['hosts']}): compiled-cost growth exponent "
+          f"{sb['growth_exponent']:.2f} (1.0 linear, 2.0 dense-quadratic"
+          f"); warm {b64['per_tick_ms_warm']:.3f} -> "
+          f"{b256['per_tick_ms_warm']:.3f} ms/tick "
+          f"(exp {sb['warm_growth_exponent']:.2f})")
     a = ad[0]
     print(f"# adaptive dt, drain-bounded {a['grid_points']}-pt grid: "
           f"{a['adaptive_iterations']} iterations for {a['ticks']} ticks "

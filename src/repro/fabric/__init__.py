@@ -1,8 +1,10 @@
 """Multi-host RDCA fabric: Clos topologies, switches, hosts, driver, sweeps.
 
 - topology:  leaf–spine Clos graphs + presets (jet_testbed, incast_fabric)
-             with per-link up/down state and scheduled failure events
-             (`Topology.fail_link`)
+             and 3-level pod-of-pods fabrics (`make_pod_clos`), with
+             per-link up/down state and scheduled failure events
+             (`Topology.fail_link` / `flap_link`) — see "Choosing a
+             topology" below
 - routing:   first-class per-tick path selection (`RoutingConfig`):
              static ECMP / flowlet-weighted ECMP / adaptive
              least-congested / packet spray, with link-failure rerouting
@@ -45,8 +47,10 @@
 - scenarios: incast-N / all-to-all HPC / storage OLTP-OLAP-backup /
              mixed Jet+DDIO fleet / QoS-mixed storage (LOW bulk incast
              + HIGH on-off OLTP + NORMAL OLAP, per-TC vs per-link
-             pause) bundles + fabric_grid / mixed_fleet_grid /
-             qos_mixed_grid for building scenario grids
+             pause) / pod-scale cross-pod incast, shuffle and PFC-storm
+             bundles + fabric_grid / mixed_fleet_grid / qos_mixed_grid
+             / pod_incast_grid / pod_storm_grid for building scenario
+             grids
 - sweep:     vectorized receiver-datapath grid (jax.vmap + lax.scan over
              stacked single-host fluid state; numpy reference backend)
 - vector:    vectorized *fabric* grid — the whole multi-host tick body
@@ -54,7 +58,9 @@
              classes as a stacked [G, Q, R] block and a per-flow
              CNP-delay ring) as one vmap+scan program; switch state is
              classed too ([G, Q, P] occupancy/assert/pause via the
-             flow->TC one-hot, priority-unrolled drain grants)
+             flow->TC one-hot, priority-unrolled drain grants); 3-level
+             pod fabrics run a segmented-incidence ("sparse") variant
+             of the same program whose cost is linear in flows + ports
 - fused:     fused hot-tick stages for the vector engines (strict-
              priority drain grants + QoS receiver admission as single
              water-fill primitives with a Pallas kernel tier), the
@@ -93,6 +99,53 @@ Choosing an engine
     Matches the scalar driver to float32 round-off (float64 exact via
     ``backend="numpy"``) and turns minutes-per-grid into seconds.  Grid
     points must share topology *structure* (same flows/routes/ticks).
+
+Choosing a topology
+-------------------
+Two construction families, one :class:`~repro.fabric.topology.Topology`
+contract (named nodes, per-link rate and up/down schedule, route /
+candidate_paths / fail_link / flap_link):
+
+``clos(...)`` and the presets (``jet_testbed``, ``incast_fabric``)
+    2-level leaf–spine: hosts ``h{leaf}_{i}``, every leaf wired to
+    every spine.  Routes are 3 hops (same-leaf) or 5 hops (cross-leaf,
+    one spine choice).  The right size for last-mile receiver studies
+    — every dense-engine feature (dynamic routing, CC zoo, message
+    layer, fault injection, adaptive dt) is available.
+
+``make_pod_clos(pods, leaves_per_pod, hosts_per_leaf, ...)``
+    3-level pod-of-pods Clos: hosts ``p{pod}h{leaf}_{i}``, leaves
+    ``p{pod}l{leaf}``, per-pod spines ``p{pod}s{k}``, and a global
+    super-spine tier ``ss{k}`` with plane-aligned wiring (pod spine
+    ``k`` connects to super-spine ``k``).  Cross-pod routes are 7 hops
+    and climb two oversubscription points; tier speeds default to
+    100/200/400 Gbps.  ``pods=1`` degenerates to the 2-level fabric.
+    Partial wiring is legal: spines may serve a leaf subset, and
+    ``Topology.candidate_spines`` / ``route`` skip spines that cannot
+    reach both endpoints (raising ``unroutable`` only when *no*
+    candidate survives).
+
+Engine support: the scalar driver takes either family.  For vector
+sweeps, ``run_fabric_sweep(..., incidence="auto")`` (default) picks the
+dense one-hot program for 2-level grids and the segmented-incidence
+("sparse") program whenever a super-spine tier is present.  The sparse
+program freezes routes as incidence structure, so it supports static
+ECMP plus failure/flap windows — dynamic routing modes, the CC zoo,
+the message layer, FaultConfig injection and adaptive dt stay
+dense-only (it rejects them with clear errors); within that envelope
+it is bit-equal to the dense engine on 2-level grids and matches the
+scalar driver like any other engine (held by
+``tests/test_topology_pods.py``).  Its per-tick cost is linear in
+flows + ports instead of the dense flows x ports — the bench ``scale``
+section gates the measured growth exponent (~1.2 at 64 -> 256 hosts)
+below the dense engine's 2.0.
+
+Pod-scale scenario bundles: ``pod_incast`` (cross-pod fan-in through
+both oversubscription tiers, optional in-pod victim), ``pod_shuffle``
+(all-to-all across pods, ``uplink_util`` observability), and
+``pod_pfc_storm`` (small-buffer pause cascade climbing tiers), each
+with a ``*_grid`` companion that runs the mode x PFC (or buffer) grid
+as ONE sparse vector program.
 
 Engine performance
 ------------------
@@ -346,12 +399,15 @@ from .scenarios import (Scenario, all_to_all, fabric_grid, incast,
                         link_failure_incast, lossy_incast,
                         lossy_incast_grid, message_incast,
                         message_sweep_grid, mixed_fleet,
-                        mixed_fleet_grid, olap_shuffle, qos_mixed_grid,
+                        mixed_fleet_grid, olap_shuffle, pod_incast,
+                        pod_incast_grid, pod_pfc_storm, pod_shuffle,
+                        pod_storm_grid, qos_mixed_grid,
                         qos_mixed_storage, routing_grid, single_pair,
                         storage_mix)
 from .switch import OutputPort, Switch, SwitchConfig
 from .sweep import SweepParams, grid_configs, run_sweep
-from .topology import Link, Topology, clos, incast_fabric, jet_testbed
+from .topology import (Link, Topology, clos, incast_fabric, jet_testbed,
+                       make_pod_clos)
 from .vector import FabricSweepParams, run_fabric_sweep
 
 __all__ = [
@@ -366,9 +422,11 @@ __all__ = [
     "has_pause_cycle", "incast",
     "incast_fabric", "jet_testbed", "link_failure_incast",
     "lossy_incast", "lossy_incast_grid",
-    "make_controller", "message_incast", "message_sweep_grid",
-    "mixed_fleet", "mixed_fleet_grid", "olap_shuffle",
-    "percentile_from_counts", "qos_mixed_grid", "qos_mixed_storage",
+    "make_controller", "make_pod_clos", "message_incast",
+    "message_sweep_grid", "mixed_fleet", "mixed_fleet_grid",
+    "olap_shuffle", "percentile_from_counts", "pod_incast",
+    "pod_incast_grid", "pod_pfc_storm", "pod_shuffle", "pod_storm_grid",
+    "qos_mixed_grid", "qos_mixed_storage",
     "routing_grid", "run_fabric", "run_fabric_sweep", "run_sweep",
     "single_pair", "storage_mix",
 ]

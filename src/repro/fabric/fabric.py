@@ -9,10 +9,12 @@ Per 1 us fluid tick (same timebase as the single-host simulator):
    (:mod:`repro.fabric.routing`; ``static_ecmp`` keeps the frozen
    pre-routing-layer next hops, bit-for-bit);
 1. every flow's DCQCN machine offers bytes into its host NIC queue;
-2. queues forward in tier order (host->leaf, leaf->spine, spine->leaf,
-   leaf->host), so an uncongested byte traverses the fabric in one tick —
-   the cut-through limit, which keeps a 1-sender/1-receiver fabric
-   numerically equivalent to ``repro.core.run_sim``;
+2. queues forward in tier order (host->leaf, leaf->spine, and on
+   3-level fabrics spine->super-spine, super-spine->spine, then
+   spine->leaf, leaf->host), so an uncongested byte traverses the
+   fabric in one tick — the cut-through limit, which keeps a
+   1-sender/1-receiver fabric numerically equivalent to
+   ``repro.core.run_sim``;
 3. each receiver's :class:`ReceiverHost` advances one tick on the arrived
    bytes; its CNPs (RNIC watermark / Jet escape ECN) and the ECN marks the
    switches stamped on departing bytes are converted into per-flow CNPs
@@ -188,14 +190,21 @@ class FabricResult:
     # the vector prev-mat)
     pause_tc_fanout: Dict[int, int] = dataclasses.field(default_factory=dict)
     n_pausable_links: int = 0
+    # links whose failure window covered the whole horizon: they carried
+    # nothing and could pause nothing, so they are excluded from the
+    # pause_storm denominator (at aggregation) and from the
+    # uplink_imbalance mean — a dead uplink is a wiring fact, not a
+    # load-balance signal.  Flapping links keep some up-time and stay in.
+    dead_links: Set[LinkKey] = dataclasses.field(default_factory=set)
 
     def pause_storm(self) -> float:
         """PFC-storm severity: the worst traffic class's pause fan-out
         as a fraction of the candidate ingress links it *could* pause
-        under the active routing mode.  1.0 = some class paused every
-        candidate ingress at least once; 0.0 (never NaN) when nothing
-        paused or the fabric has no pausable links — same contract as
-        :meth:`uplink_imbalance`."""
+        under the active routing mode (links down for the entire window
+        are excluded from the denominator — they can never pause).
+        1.0 = some class paused every candidate ingress at least once;
+        0.0 (never NaN) when nothing paused or the fabric has no
+        pausable links — same contract as :meth:`uplink_imbalance`."""
         if not self.pause_tc_fanout or self.n_pausable_links <= 0:
             return 0.0
         return max(self.pause_tc_fanout.values()) / self.n_pausable_links
@@ -224,13 +233,16 @@ class FabricResult:
         return n / self.sim_us if self.sim_us > 0.0 and n else 0.0
 
     def uplink_imbalance(self) -> float:
-        """Load-balance quality: max/mean utilization over ALL fabric
-        uplinks (an idle uplink is imbalance — perfect spraying scores
-        1.0, everything piled on one of N uplinks scores N).  0.0
-        (never NaN) when the fabric has no uplinks or carried nothing,
-        so sweep summaries can aggregate it unconditionally — same
-        contract as :meth:`tagged_goodput`."""
-        vals = list(self.uplink_util.values())
+        """Load-balance quality: max/mean utilization over the fabric
+        uplinks that had any up-time (an idle-but-alive uplink is
+        imbalance — perfect spraying scores 1.0, everything piled on
+        one of N uplinks scores N — but a link that was down for the
+        whole window is wiring, not imbalance, and is excluded).  0.0
+        (never NaN) when the fabric has no live uplinks or carried
+        nothing, so sweep summaries can aggregate it unconditionally —
+        same contract as :meth:`tagged_goodput`."""
+        vals = [u for lk, u in self.uplink_util.items()
+                if lk not in self.dead_links]
         if not vals:
             return 0.0
         mean = sum(vals) / len(vals)
@@ -258,8 +270,6 @@ def run_fabric(topo: Topology, flows: List[Flow],
 
     # -- build components ---------------------------------------------------
     rcfg = fcfg.routing
-    spines = topo.spines
-    n_sp = len(spines)
     F = len(flows)
     fail_ticks = topo.failure_ticks(dt)
     if any(fcfg.receiver_cfg(h).host_pfc_per_tc
@@ -297,8 +307,15 @@ def run_fabric(topo: Topology, flows: List[Flow],
     next_hop: Dict[Tuple[str, int], str] = {}      # (node, fid) -> next node
     cross_flows: List[int] = []                    # rerouteable flow ids
     flow_leaves: Dict[int, Tuple[str, str]] = {}   # fid -> (src, dst leaf)
-    cur_spine: Dict[int, int] = {}                 # current spine index
+    cur_spine: Dict[int, int] = {}                 # current candidate index
     route_frac: Dict[int, Dict[str, float]] = {}   # fid -> {spine: frac}
+    # rerouteable flows only: the wired candidate structure.  cand_of is
+    # the first-hop spine per candidate (what the routing layer picks
+    # between); cand_paths_of the full interior node path per candidate
+    # — on a 3-level fabric choosing the pod spine chooses the plane, so
+    # everything below the source leaf is frozen per candidate.
+    cand_of: Dict[int, List[str]] = {}
+    cand_paths_of: Dict[int, List[List[str]]] = {}
     flow_reroutes: Dict[int, int] = {fid: 0 for fid in range(F)}
     for fid, f in enumerate(flows):
         nodes = topo.route(f.src, f.dst, fid)      # validates + static path
@@ -309,16 +326,34 @@ def run_fabric(topo: Topology, flows: List[Flow],
             next_hop[(sl, fid)] = f.dst
         else:
             next_hop[(dl, fid)] = f.dst
-            for s in spines:                       # any spine forwards down
-                next_hop[(s, fid)] = dl
-            if dyn:
-                # the leaf->spine hop is resolved per tick: no frozen
-                # next_hop entry; the drain falls through to route_frac
+            paths = topo.candidate_paths(f.src, f.dst)
+            cands = [p[1] for p in paths]
+            deep = any(len(p) > 3 for p in paths)  # transits super-spines
+            if rcfg.is_dynamic or (dyn and not deep):
+                # the leaf->spine hop is resolved per tick (or could be,
+                # under a failure schedule): freeze every hop *below*
+                # the source leaf on every candidate path and let the
+                # drain fall through to route_frac at the leaf
+                if len(set(cands)) != len(cands):
+                    raise ValueError(
+                        "dynamic routing needs a unique candidate path "
+                        "per first-hop spine; this fabric has several "
+                        "super-spines per plane — use static_ecmp or "
+                        "sspines_per_plane=1")
+                for p in paths:
+                    for a, b in zip(p[1:], p[2:]):
+                        next_hop[(a, fid)] = b
                 cross_flows.append(fid)
-                cur_spine[fid] = fid % n_sp
-                route_frac[fid] = {spines[fid % n_sp]: 1.0}
+                cand_of[fid] = cands
+                cand_paths_of[fid] = paths
+                k0 = fid % len(cands)
+                cur_spine[fid] = k0
+                route_frac[fid] = {cands[k0]: 1.0}
             else:
-                next_hop[(sl, fid)] = nodes[2]
+                # static route (including failure schedules on 3-level
+                # fabrics): freeze the chosen path end to end
+                for a, b in zip(nodes[1:], nodes[2:]):
+                    next_hop[(a, fid)] = b
         senders[fid] = SenderHost(
             line_rate_gbps=topo.access_gbps(f.src),
             offered_gbps=f.offered_gbps, burst_bytes=f.burst_bytes,
@@ -341,7 +376,7 @@ def run_fabric(topo: Topology, flows: List[Flow],
             nic_ports[f.src] = OutputPort(
                 topo.link(f.src, topo.host_leaf[f.src]), nic_cfg)
     switches: Dict[str, Switch] = {}
-    for name in topo.leaves + topo.spines:
+    for name in topo.leaves + topo.spines + topo.super_spines:
         out = [l for l in topo.links.values() if l.src == name]
         switches[name] = Switch(name, out, fcfg.switch)
     port_by_link: Dict[LinkKey, OutputPort] = {
@@ -360,12 +395,27 @@ def run_fabric(topo: Topology, flows: List[Flow],
             acc = (f.src, sl)
             if sl == dl:
                 ingress.setdefault((sl, f.dst), {})[fid] = (acc,)
+            elif fid in cand_paths_of:
+                last_hops = []
+                for p in cand_paths_of[fid]:
+                    prev = acc
+                    for a, b in zip(p, p[1:]):
+                        ingress.setdefault((a, b), {})[fid] = (prev,)
+                        prev = (a, b)
+                    last_hops.append(prev)
+                ingress.setdefault((dl, f.dst), {})[fid] = \
+                    tuple(last_hops)
             else:
-                for s in spines:
-                    ingress.setdefault((sl, s), {})[fid] = (acc,)
-                    ingress.setdefault((s, dl), {})[fid] = ((sl, s),)
-                ingress.setdefault((dl, f.dst), {})[fid] = tuple(
-                    (s, dl) for s in spines)
+                # frozen end-to-end route (static mode under a failure
+                # schedule on a 3-level fabric): exact chain provenance
+                prev = acc
+                node = sl
+                while node != dl:
+                    nh = next_hop[(node, fid)]
+                    ingress.setdefault((node, nh), {})[fid] = (prev,)
+                    prev = (node, nh)
+                    node = nh
+                ingress.setdefault((dl, f.dst), {})[fid] = (prev,)
         for lk, m in ingress.items():
             port_by_link[lk].static_ingress = m
 
@@ -381,18 +431,29 @@ def run_fabric(topo: Topology, flows: List[Flow],
         ring_b = [[0.0] * Hs for _ in range(F)]
         ring_m = [[0.0] * Hs for _ in range(F)]
 
-    # per-uplink carried bytes (load-balance observability)
+    # per-uplink carried bytes (load-balance observability): leaf->spine
+    # everywhere, plus spine->super-spine on 3-level fabrics
     uplink_tx: Dict[LinkKey, float] = {
-        l.key: 0.0 for leaf in topo.leaves for l in topo.uplinks(leaf)}
+        l.key: 0.0 for l in topo.fabric_uplinks()}
 
     # routing-step invariants: decision constants and the cross-leaf
     # flows grouped by (source leaf, dest leaf) — uplink occupancy is a
-    # per-source-leaf read and the up-mask a per-pair read, not per-flow
+    # per-pair candidate read and the up-mask a per-pair read, not
+    # per-flow.  pair_info carries the shared candidate structure: the
+    # first-hop spines and each candidate's interior link chain (the
+    # whole chain must be up for the candidate to count as up).
     route_buf = float(fcfg.switch.port_buffer_bytes)
     route_hyst = rcfg.hysteresis_frac * route_buf
     leaf_pairs: Dict[Tuple[str, str], List[int]] = {}
+    pair_info: Dict[Tuple[str, str],
+                    Tuple[List[str], List[List[LinkKey]]]] = {}
     for fid in cross_flows:
-        leaf_pairs.setdefault(flow_leaves[fid], []).append(fid)
+        pr = flow_leaves[fid]
+        leaf_pairs.setdefault(pr, []).append(fid)
+        if pr not in pair_info:
+            paths = cand_paths_of[fid]
+            pair_info[pr] = (cand_of[fid],
+                             [list(zip(p, p[1:])) for p in paths])
 
     # flowlet bookkeeping (weighted_ecmp): a flow opens a new flowlet —
     # and re-hashes — on its first NIC injection after an idle gap
@@ -462,17 +523,25 @@ def run_fabric(topo: Topology, flows: List[Flow],
 
     # candidate ingress links that PFC could ever pause (the routing-
     # aware denominator of FabricResult.pause_storm): every flow's
-    # access link plus, cross-leaf, the uplink/downlink of each
-    # candidate spine (all spines in dynamic-routing land, the frozen
-    # one under static ECMP) — the scalar twin of the vector prev-mat
+    # access link plus, cross-leaf, every interior link of each
+    # candidate path (all candidates in dynamic-routing land, the
+    # frozen path under static ECMP) — the scalar twin of the vector
+    # prev-mat
     pausable: Set[LinkKey] = set()
     for fid, f in enumerate(flows):
         sl, dl = flow_leaves[fid]
         pausable.add((f.src, sl))
-        if sl != dl:
-            for s in (spines if dyn else [next_hop[(sl, fid)]]):
-                pausable.add((sl, s))
-                pausable.add((s, dl))
+        if sl == dl:
+            continue
+        if fid in cand_paths_of:
+            for p in cand_paths_of[fid]:
+                pausable.update(zip(p, p[1:]))
+        else:
+            node = sl
+            while node != dl:
+                nh = next_hop[(node, fid)]
+                pausable.add((node, nh))
+                node = nh
 
     # -- per-flow CNP pacing at the receiver NP (DCQCN) ----------------------
     cnp_accum_us = {fid: math.inf for fid in senders}   # immediate first CNP
@@ -583,19 +652,32 @@ def run_fabric(topo: Topology, flows: List[Flow],
                                          tc_of[fid]))
         return killed
 
-    # the four forwarding stages of one tick, in traversal order; a port
+    # the forwarding stages of one tick, in traversal order; a port
     # drains once per tick, after every same-tick upstream stage has
     # deposited into it (cut-through: an uncongested byte crosses the
-    # whole fabric in one tick)
+    # whole fabric in one tick).  On a 2-tier fabric the super-spine
+    # stages are empty and the spine-down stage is exactly the old
+    # all-spine-port stage; on a 3-level fabric a spine's super-spine-
+    # facing ports drain before the super-spines and its leaf-facing
+    # ports after, so cross-pod bytes still cross in one tick.
+    sspine_set = set(topo.super_spines)
     stage_nic = [(None, p) for p in nic_ports.values()]
     stage_up = [(leaf, p) for leaf in topo.leaves
                 for p in switches[leaf].ports.values()
                 if p.link.dst not in hosts_set]
-    stage_spine = [(sp, p) for sp in topo.spines
-                   for p in switches[sp].ports.values()]
+    stage_s_up = [(sp, p) for sp in topo.spines
+                  for p in switches[sp].ports.values()
+                  if p.link.dst in sspine_set]
+    stage_ss = [(ss, p) for ss in topo.super_spines
+                for p in switches[ss].ports.values()]
+    stage_s_down = [(sp, p) for sp in topo.spines
+                    for p in switches[sp].ports.values()
+                    if p.link.dst not in sspine_set]
     stage_down = [(leaf, p) for leaf in topo.leaves
                   for p in switches[leaf].ports.values()
                   if p.link.dst in hosts_set]
+    stages = [st for st in (stage_nic, stage_up, stage_s_up, stage_ss,
+                            stage_s_down, stage_down) if st]
 
     _no_links: frozenset = frozenset()
     for t in range(ticks):
@@ -680,17 +762,19 @@ def run_fabric(topo: Topology, flows: List[Flow],
                         flet_k[fid] += 1
                     flet_last[fid] = t
 
-        # ---- 1.5 routing layer: per-tick spine selection ------------------ #
-        if rcfg.is_dynamic and n_sp and cross_flows:
-            occ_of_leaf: Dict[str, List[float]] = {}
+        # ---- 1.5 routing layer: per-tick candidate selection -------------- #
+        if rcfg.is_dynamic and cross_flows:
+            occ_of_pair: Dict[Tuple[str, str], List[float]] = {}
             for (sl, dl), pair_fids in leaf_pairs.items():
-                occ = occ_of_leaf.get(sl)
+                cands, plinks = pair_info[(sl, dl)]
+                nc = len(cands)
+                occ = occ_of_pair.get((sl, dl))
                 if occ is None:
                     up_ports = switches[sl].ports
-                    occ = occ_of_leaf[sl] = [up_ports[s].queued_bytes
-                                             for s in spines]
-                up = [(sl, s) not in down_now and (s, dl) not in down_now
-                      for s in spines]
+                    occ = occ_of_pair[(sl, dl)] = \
+                        [up_ports[s].queued_bytes for s in cands]
+                up = [all(lk not in down_now for lk in plinks[i])
+                      for i in range(nc)]
                 for fid in pair_fids:
                     cur = cur_spine[fid]
                     if rcfg.mode == "adaptive":
@@ -702,27 +786,27 @@ def run_fabric(topo: Topology, flows: List[Flow],
                         new = cur
                         if fid in flet_boundary or not up[cur]:
                             w = [max(route_buf - occ[i], 0.0)
-                                 if up[i] else 0.0 for i in range(n_sp)]
+                                 if up[i] else 0.0 for i in range(nc)]
                             if sum(w) > 0.0:
                                 new = weighted_pick(
                                     w, flowlet_hash(fid, flet_k[fid]))
                     else:                                   # spray
                         new = cur
                         fr = spray_weights(occ, up, route_buf, cur)
-                        route_frac[fid] = {spines[i]: fr[i]
-                                           for i in range(n_sp)
+                        route_frac[fid] = {cands[i]: fr[i]
+                                           for i in range(nc)
                                            if fr[i] > 0.0}
                     if new != cur:
                         flow_reroutes[fid] += 1
                         cur_spine[fid] = new
                     if rcfg.mode != "spray":
-                        route_frac[fid] = {spines[new]: 1.0}
+                        route_frac[fid] = {cands[new]: 1.0}
 
         # ---- 2. tier-ordered forwarding ----------------------------------- #
         arrivals: Dict[str, Dict[int, List[float]]] = {}
         if need_cc:
             tick_tx.clear()
-        for stage in (stage_nic, stage_up, stage_spine, stage_down):
+        for stage in stages:
             batches: Batches = {}
             flt_dropped += drain_stage(stage, arrivals, batches,
                                        down_now, t)
@@ -742,11 +826,18 @@ def run_fabric(topo: Topology, flows: List[Flow],
                 if sl == dl:
                     path = (nic_ports[f.src], switches[sl].ports[f.dst])
                 else:
-                    sp = spines[cur_spine[fid]] if fid in cur_spine \
-                        else next_hop[(sl, fid)]
-                    path = (nic_ports[f.src], switches[sl].ports[sp],
-                            switches[sp].ports[dl],
-                            switches[dl].ports[f.dst])
+                    # walk the flow's current frozen chain below its
+                    # first hop (2-tier: leaf->spine->leaf->host;
+                    # 3-level adds the super-spine transit)
+                    hop = cand_of[fid][cur_spine[fid]] \
+                        if fid in cur_spine else next_hop[(sl, fid)]
+                    ports = [nic_ports[f.src], switches[sl].ports[hop]]
+                    node = hop
+                    while node != f.dst:
+                        nh = next_hop[(node, fid)]
+                        ports.append(switches[node].ports[nh])
+                        node = nh
+                    path = tuple(ports)
                 qd = 0.0
                 util = 0.0
                 for port in path:
@@ -917,6 +1008,11 @@ def run_fabric(topo: Topology, flows: List[Flow],
     pause_tc_fanout: Dict[int, int] = {}
     for (lk, tc) in pause_tc_us:
         pause_tc_fanout[tc] = pause_tc_fanout.get(tc, 0) + 1
+    # links down for the entire window carried nothing and could pause
+    # nothing: drop them from the storm denominator and let
+    # uplink_imbalance() skip them (flaps always leave some up-time)
+    dead_links = {lk for lk, (a, u) in fail_ticks.items()
+                  if a <= 0 and u >= ticks}
     return FabricResult(
         per_host=per_host,
         flow_goodput_gbps=goodput,
@@ -949,5 +1045,6 @@ def run_fabric(topo: Topology, flows: List[Flow],
                            for h in crash_win},
         deadlock_ticks=deadlock_ticks,
         pause_tc_fanout=pause_tc_fanout,
-        n_pausable_links=len(pausable),
+        n_pausable_links=len(pausable - dead_links),
+        dead_links=dead_links,
     )

@@ -198,8 +198,12 @@ def hist_rel_error_bound(lo: float = HIST_MIN_US, hi: float = HIST_MAX_US,
     A value in bucket ``b`` lies in ``[lo*r^b, lo*r^(b+1))``; the
     estimate is the geometric midpoint ``lo*r^(b+0.5)``, at most a
     factor ``sqrt(r)`` away, i.e. relative error ``sqrt(r) - 1``.
-    Values clamped at either end of the domain are excluded from the
-    bound (don't sweep latencies outside [lo, hi]).
+    The bound only covers in-domain samples: latencies above ``hi``
+    land in the explicit overflow counter (:class:`LogHistogram`
+    ``overflow_count``), where no midpoint exists — a percentile that
+    lands in overflow is reported as ``hi`` (a *lower* bound) and
+    :meth:`LogHistogram.rel_error_bound` widens to ``inf`` so the
+    violation is signalled rather than silent.
     """
     return math.sqrt(hist_ratio(lo, hi, buckets)) - 1.0
 
@@ -238,16 +242,33 @@ class LogHistogram:
         self.lo, self.hi, self.buckets = lo, hi, buckets
         self.counts = [0] * buckets
         self.n = 0
+        # samples above hi: counted (they are real completions — n and
+        # percentile ranks include them) but kept out of the in-range
+        # buckets, whose midpoint estimate would otherwise silently
+        # report a value *below* the true latency
+        self.overflow_count = 0
 
     def add(self, v_us: float) -> None:
-        self.counts[hist_bucket(v_us, self.lo, self.hi, self.buckets)] += 1
+        if v_us > self.hi:
+            self.overflow_count += 1
+        else:
+            self.counts[hist_bucket(v_us, self.lo, self.hi,
+                                    self.buckets)] += 1
         self.n += 1
 
     def rel_error_bound(self) -> float:
+        """The documented midpoint bound — widened to ``inf`` when any
+        sample overflowed the domain (the overflow region has no
+        midpoint, so no finite bound holds)."""
+        if self.overflow_count:
+            return math.inf
         return hist_rel_error_bound(self.lo, self.hi, self.buckets)
 
     def percentile(self, q: float) -> float:
-        """Estimated q-th percentile; 0.0 on an empty histogram."""
+        """Estimated q-th percentile; 0.0 on an empty histogram.  A
+        rank that lands in the overflow region reports ``hi`` — an
+        explicit lower bound on the true value (check
+        :attr:`overflow_count` / :meth:`rel_error_bound`)."""
         if self.n == 0:
             return 0.0
         rank = max(1, min(self.n, int(math.ceil(q / 100.0 * self.n))))
@@ -256,27 +277,35 @@ class LogHistogram:
             acc += c
             if acc >= rank:
                 return hist_estimate(b, self.lo, self.hi, self.buckets)
-        return hist_estimate(self.buckets - 1, self.lo, self.hi,
-                             self.buckets)
+        return self.hi
 
 
 def percentile_from_counts(counts, q: float, lo: float = HIST_MIN_US,
-                           hi: float = HIST_MAX_US):
+                           hi: float = HIST_MAX_US, overflow=None):
     """Vectorized nearest-rank percentile over histogram count arrays.
 
     ``counts`` is any numpy-like array ``[..., B]`` (the vector engines'
     per-flow or per-point histograms); returns ``[...]`` midpoint
-    estimates, 0.0 where the histogram is empty.  Imports numpy lazily
-    so the scalar path stays dependency-free.
+    estimates, 0.0 where the histogram is empty.  ``overflow`` is an
+    optional ``[...]`` count of samples above ``hi`` (the vector twin
+    of :attr:`LogHistogram.overflow_count`): overflowed samples join
+    the rank denominator, and a rank landing in the overflow region
+    reports ``hi`` — an explicit lower bound — instead of an in-range
+    midpoint below the true value.  Imports numpy lazily so the scalar
+    path stays dependency-free.
     """
     import numpy as np
     c = np.asarray(counts, dtype=np.float64)
     buckets = c.shape[-1]
-    n = c.sum(axis=-1)
+    in_range = c.sum(axis=-1)
+    over = np.zeros_like(in_range) if overflow is None \
+        else np.asarray(overflow, dtype=np.float64)
+    n = in_range + over
     rank = np.maximum(1.0, np.minimum(n, np.ceil(q / 100.0 * n)))
     cum = np.cumsum(c, axis=-1)
     idx = np.argmax(cum >= rank[..., None], axis=-1)
     est = lo * hist_ratio(lo, hi, buckets) ** (idx + 0.5)
+    est = np.where(rank > in_range, hi, est)
     return np.where(n > 0, est, 0.0)
 
 
@@ -304,6 +333,11 @@ class MessageTracker:
         self.hw = 0                          # messages started
         self.done = 0                        # messages completed
         self.last_done_us = 0.0
+        # latencies above the shared histogram domain (HIST_MAX_US):
+        # exact percentiles are unaffected, but any histogram built
+        # from this flow would overflow — nonzero means the documented
+        # 4.6% bound does not hold for this flow's tail
+        self.overflow_count = 0
 
     @property
     def outstanding(self) -> int:
@@ -335,7 +369,10 @@ class MessageTracker:
         nd = min(msg_count(delivered, m), self.hw)
         extra = self.cfg.extra_us
         while self.done < nd:
-            self.latencies.append(now_us - self.starts[self.done] + extra)
+            lat = now_us - self.starts[self.done] + extra
+            self.latencies.append(lat)
+            if lat > HIST_MAX_US:
+                self.overflow_count += 1
             self.done += 1
             self.last_done_us = now_us
 

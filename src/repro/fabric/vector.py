@@ -79,6 +79,10 @@ from . import fused
 from .fused import AdaptiveConfig
 
 _STAGES = 4          # NIC egress, leaf uplink, spine, leaf downlink
+# sparse-incidence stage slots (3-level pod fabrics): NIC egress,
+# leaf uplink, spine uplink (-> super-spine), super-spine, spine
+# downlink, leaf downlink.  A 2-tier flow simply leaves slots 2-3 empty.
+_STAGES_SP = 6
 
 # pvals entries that stay integer (tick indices, codes, ring offsets)
 _INT_KEYS = frozenset(["d_base", "d_strag", "cnp_dly", "fail_at",
@@ -205,11 +209,38 @@ class FabricSweepParams:
     msg_ring: int = 1                    # Lm (message start-time ring)
     any_flt: bool = False                # any point attaches a FaultConfig
     any_flap: bool = False               # any point schedules link flaps
+    # -- sparse-incidence structure (3-level pod fabrics) --------------------
+    # Queue state becomes [.., 2, S, F] slot entries (S = _STAGES_SP):
+    # slot (s, f) holds flow f's bytes queued at ``port_of[s, f]``
+    # (n_ports = "slot unused").  ``prv_port`` is each slot's ingress
+    # port (PFC pause target), ``nxt_slot`` the next occupied slot a
+    # stage's drain output enqueues into (_STAGES_SP = "delivered").
+    sparse: bool = False
+    port_of: Optional[np.ndarray] = None     # [6, F] int32
+    prv_port: Optional[np.ndarray] = None    # [6, F] int32
+    nxt_slot: Optional[np.ndarray] = None    # [6, F] int32
+    pack_fail: bool = False              # sparse grid with failure windows
+    # candidate-ingress pause structure under failure schedules: the
+    # scalar driver treats shallow (intra-pod, multi-candidate) flows as
+    # rerouteable, so their last-hop queue pauses *every* candidate
+    # downlink and every candidate hop joins the pausable denominator
+    # (OutputPort.static_ingress semantics).  [2, E] (flow, target port)
+    # extra pause pairs, plus the candidate hop ports for n_pausable.
+    pause_extra: Optional[np.ndarray] = None
+    pausable_extra: Optional[np.ndarray] = None
 
     @classmethod
-    def from_scenarios(cls, scens: Sequence) -> "FabricSweepParams":
+    def from_scenarios(cls, scens: Sequence,
+                       sparse: bool = False) -> "FabricSweepParams":
         """Pack a grid of :class:`~repro.fabric.scenarios.Scenario`-likes
-        (anything with ``.topology``, ``.flows``, ``.fabric``)."""
+        (anything with ``.topology``, ``.flows``, ``.fabric``).
+
+        ``sparse=True`` packs the segmented-incidence structure instead
+        of the dense port x flow one-hots — required for 3-level
+        (super-spine) topologies, and the scalable choice for any large
+        static fabric.  Sparse packing supports static ECMP plus
+        failure/flap windows; dynamic routing modes, the CC zoo, the
+        message layer and FaultConfig injection stay dense-only."""
         if not scens:
             raise ValueError("empty fabric sweep grid")
         s0 = scens[0]
@@ -242,6 +273,34 @@ class FabricSweepParams:
         any_msg = any(m is not None for s in scens for m in msg_of(s))
         any_cc = any(c is not None and c.algo != "dcqcn"
                      for s in scens for c in cc_of(s))
+        pods = any(s.topology.super_spines for s in scens)
+        pack_fail = False
+        if sparse:
+            # sparse incidence freezes routes as structure: static ECMP
+            # only, with failure/flap windows as per-point parameters
+            if any(s.fabric.routing.is_dynamic for s in scens):
+                raise ValueError(
+                    "sparse incidence supports static_ecmp routing only; "
+                    "dynamic routing modes need the dense engine "
+                    "(2-tier topologies)")
+            if any_cc:
+                raise ValueError("sparse incidence does not support the "
+                                 "CC zoo (timely/hpcc); use the dense "
+                                 "engine")
+            if any_msg:
+                raise ValueError("sparse incidence does not support the "
+                                 "message layer; use the dense engine")
+            if any_flt:
+                raise ValueError("sparse incidence does not support "
+                                 "FaultConfig injection; use the dense "
+                                 "engine")
+            pack_fail = dyn         # only failure/flap schedules remain
+            dyn = False
+        elif pods:
+            raise ValueError(
+                "3-level (super-spine) topologies need the sparse-"
+                "incidence engine: run_fabric_sweep(..., "
+                "incidence='auto' or 'sparse')")
         if any_msg:
             for s in scens:
                 for m in msg_of(s):
@@ -302,7 +361,65 @@ class FabricSweepParams:
         Sn = len(topo0.spines)
         cols = np.arange(F)
         upP = dnP = candS = crossF = T1 = init_spine = None
-        if not dyn:
+        port_of = prv_port = nxt_slot = None
+        pause_extra = pausable_extra = None
+        if sparse:
+            # six tier-ordered stage slots; each flow occupies the slots
+            # of its frozen route (2/4/6 hops) and every port belongs to
+            # exactly one slot, so per-(port, TC) totals are segment
+            # sums over the S*F (slot, flow) entries instead of [P, F]
+            # one-hot products — cost grows with flows x hops, not
+            # flows x ports
+            slot_of = {3: (0, 5), 5: (0, 1, 4, 5), 7: tuple(range(6))}
+            stage_ports = np.full((_STAGES_SP, F), -1, np.int64)
+            for fid, nodes in enumerate(routes):
+                slots = slot_of.get(len(nodes))
+                if slots is None:
+                    raise ValueError(
+                        f"unsupported route length {len(nodes)}")
+                for sl_i, hop in zip(slots, zip(nodes, nodes[1:])):
+                    stage_ports[sl_i, fid] = add(hop, sl_i)
+            # scalar twin under failure schedules: run_fabric treats a
+            # shallow (intra-pod, multi-candidate) flow as rerouteable,
+            # so its last-hop queue pauses the whole candidate downlink
+            # set and every candidate hop joins the pausable ports
+            # (OutputPort.static_ingress semantics); deep super-spine
+            # routes stay frozen exact chains in both drivers
+            ex_f, ex_p, cand_ports = [], [], []
+            if pack_fail:
+                for fid, f in enumerate(flows0):
+                    if len(routes[fid]) != 5:
+                        continue
+                    paths = topo0.candidate_paths(f.src, f.dst)
+                    if len(paths) <= 1:
+                        continue
+                    frozen_dn = stage_ports[4, fid]
+                    for pth in paths:
+                        pu = add((pth[0], pth[1]), 1)
+                        pd = add((pth[1], pth[2]), 4)
+                        cand_ports += [pu, pd]
+                        if pd != frozen_dn:
+                            ex_f.append(fid)
+                            ex_p.append(pd)
+            if ex_f:
+                pause_extra = np.array([ex_f, ex_p], np.int32)
+            if cand_ports:
+                pausable_extra = np.array(sorted(set(cand_ports)),
+                                          np.int32)
+            P = len(port_id)
+            port_keys = list(port_id)
+            port_of = np.where(stage_ports >= 0, stage_ports,
+                               P).astype(np.int32)
+            prv_port = np.full((_STAGES_SP, F), P, np.int32)
+            nxt_slot = np.full((_STAGES_SP, F), _STAGES_SP, np.int32)
+            for fid in range(F):
+                used = np.flatnonzero(stage_ports[:, fid] >= 0)
+                for a, b in zip(used, used[1:]):
+                    nxt_slot[a, fid] = b
+                    prv_port[b, fid] = stage_ports[a, fid]
+            occ, dest = [], []
+            prev_onehot = np.zeros((0, F, 0))
+        elif not dyn:
             stage_ports = np.full((_STAGES, F), -1, np.int32)
             prev_port = np.full((_STAGES, F), -1, np.int32)
             for fid, nodes in enumerate(routes):
@@ -412,14 +529,15 @@ class FabricSweepParams:
         ridx = {h: i for i, h in enumerate(recv_hosts)}
         recv_of = np.array([ridx[f.dst] for f in flows0], np.int32)
         qos_of = np.array([int(f.qos) for f in flows0], np.int32)
-        stage_mask = np.zeros((_STAGES, P), bool)
+        n_stages = _STAGES_SP if sparse else _STAGES
+        stage_mask = np.zeros((n_stages, P), bool)
         for p, st in enumerate(port_stage):
             stage_mask[st, p] = True
         recv_onehot = np.zeros((R, F))
         recv_onehot[recv_of, cols] = 1.0
         owner_recv = np.full(P, -1, np.int32)
         for (a, b), pid in port_id.items():
-            if port_stage[pid] == 3:
+            if port_stage[pid] == n_stages - 1:
                 owner_recv[pid] = ridx[b]
 
         # ---- stacked per-point parameters -------------------------------- #
@@ -490,12 +608,13 @@ class FabricSweepParams:
                      else s.fabric.cnp_delay_us) / dt)))
                 for f in s.flows])
             rc = s.fabric.routing
-            if dyn:
+            if dyn or pack_fail:
                 ft = s.topology.failure_ticks(dt)
                 nv = (NEVER_TICK, NEVER_TICK)
                 pv["fail_at"].append([ft.get(k, nv)[0] for k in port_keys])
                 pv["fail_until"].append([ft.get(k, nv)[1]
                                          for k in port_keys])
+            if dyn:
                 pv["rmode"].append(rc.mode_code())
                 pv["flet"].append(max(1, int(round(rc.flowlet_gap_us
                                                    / dt))))
@@ -628,14 +747,16 @@ class FabricSweepParams:
         Lm = int(pvals["m_win"].max()) + 4 if any_msg else 1
 
         h = hashlib.sha1()
-        extras = [a for a in (upP, dnP, candS, crossF, T1, init_spine)
+        extras = [a for a in (upP, dnP, candS, crossF, T1, init_spine,
+                              port_of, prv_port, nxt_slot,
+                              pause_extra, pausable_extra)
                   if a is not None]
         for arr in (stage_mask, *occ, *dest, recv_onehot, recv_of, qos_of,
                     prev_onehot, owner_recv, *extras):
             h.update(np.ascontiguousarray(arr).tobytes())
         h.update(repr((F, P, R, ticks, dt, H, Hc, Hs, Sn, dyn, any_wrr,
                        host_tc, any_cc, any_msg, Lm, any_flt,
-                       any_flap)).encode())
+                       any_flap, sparse, pack_fail)).encode())
         return cls(port_keys=port_keys, recv_hosts=recv_hosts,
                    flow_tags=[f.tag for f in flows0],
                    stage_mask=stage_mask, occ=occ, dest=dest,
@@ -649,7 +770,11 @@ class FabricSweepParams:
                    host_tc=host_tc, settle_ring=Hs,
                    n_spines=Sn if dyn else 0,
                    any_cc=any_cc, any_msg=any_msg, msg_ring=Lm,
-                   any_flt=any_flt, any_flap=any_flap)
+                   any_flt=any_flt, any_flap=any_flap,
+                   sparse=sparse, port_of=port_of, prv_port=prv_port,
+                   nxt_slot=nxt_slot, pack_fail=pack_fail,
+                   pause_extra=pause_extra,
+                   pausable_extra=pausable_extra)
 
 
 # --------------------------------------------------------------------------- #
@@ -1505,13 +1630,21 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
             rmask = roff < new_d[..., None, :]
             lat = now - s["mring"] + p["m_extra"][..., None, :]
             s["m_lat"] = s["m_lat"] + xp.where(rmask, lat, zero).sum(-2)
-            # fixed-bucket log histogram (messages.hist_bucket arithmetic)
+            # fixed-bucket log histogram (messages.hist_bucket
+            # arithmetic); latencies above the histogram ceiling land in
+            # the explicit overflow counter instead of the last bucket,
+            # so pod-scale cross-tier tails can't silently report a
+            # midpoint below the true value (LogHistogram.overflow_count)
             bi = xp.floor(xp.log(xp.maximum(lat, hist_lo) / hist_lo)
                           * inv_lr).astype(xp.int32)
+            over = bi > HIST_BUCKETS - 1
             bi = xp.clip(bi, 0, HIST_BUCKETS - 1)
             inc = (arangeB == bi[..., None, :, :]) \
-                & rmask[..., None, :, :]           # [.., B, L, F]
+                & rmask[..., None, :, :] \
+                & ~over[..., None, :, :]           # [.., B, L, F]
             s["m_hist"] = s["m_hist"] + xp.where(inc, one, zero).sum(-2)
+            s["m_over"] = s["m_over"] + xp.where(rmask & over, one,
+                                                 zero).sum(-2)
             s["m_done"] = done + new_d
             s["m_last"] = xp.where(new_d > 0, now, s["m_last"])
 
@@ -1545,6 +1678,471 @@ def _make_step(xp, ring_set, st, p, dt: float, H: int, dtype, Hc: int = 1,
     return step
 
 
+def _make_step_sparse(xp, ring_set, st, p, dt: float, H: int, dtype,
+                      Hc: int = 1, opts: Optional[dict] = None):
+    """Build the sparse-incidence ``step(state, t)`` (pod-scale fabrics).
+
+    Tick semantics match :func:`_make_step` exactly, but queue state
+    lives as ``[.., 2, S, F]`` *slot* entries (S = 6 tier-ordered stage
+    slots; slot ``(s, f)`` is queued at port ``port_of[s, f]``) instead
+    of the dense ``[.., 2, P, F]`` port x flow matrix.  Per-(port, TC)
+    totals are segment-sums over the S*F (slot, flow) entries and every
+    per-port decision (drain fraction, buffer scale, ECN knee, PFC
+    assert) comes back to the flows as a padded flat gather at the
+    static ``tc * (P+1) + port`` indices — per-tick cost grows with
+    flows x hops, not flows x ports, which is what lets a 256-512-host
+    pod sweep trace as one jax program.
+
+    Supported per-point features: static ECMP, failure/flap windows,
+    strict/WRR scheduling, per-TC switch PFC and per-TC host PFC, burst
+    trains, the CNP ring and the full receiver block.  Dynamic routing,
+    the CC zoo, the message layer and FaultConfig injection stay on the
+    dense engine (:meth:`FabricSweepParams.from_scenarios` rejects them
+    with a clear error under ``sparse=True``).
+    """
+    o = opts or {}
+    wrr, host_tc = o.get("wrr", False), o.get("host_tc", False)
+    impl = o.get("impl", "ref") if xp is not np else "ref"
+    fail = "fail_at" in p
+    flap = "flap_start" in p
+    f = dtype
+    S = _STAGES_SP
+    F = int(st["recv_of"].shape[0])
+    P = int(st["stage"].shape[-1])
+    Ppad = P + 1                     # column P = "slot unused" dummy
+    QPpad = N_QOS * Ppad
+    if xp is np:
+        def seg_sum(vals, idx, size):
+            """Batched segment-sum: scatter-add ``vals`` [.., N] at
+            ``idx`` [N] into [.., size]."""
+            lead = vals.shape[:-1]
+            vf = np.ascontiguousarray(vals).reshape(-1, vals.shape[-1])
+            acc = np.zeros((vf.shape[0], size), vals.dtype)
+            np.add.at(acc, (np.arange(vf.shape[0])[:, None],
+                            np.asarray(idx)[None, :]), vf)
+            return acc.reshape(lead + (size,))
+    else:
+        def seg_sum(vals, idx, size):
+            return xp.zeros(vals.shape[:-1] + (size,),
+                            vals.dtype).at[..., idx].add(vals)
+
+    def segQ(vals, idx):
+        """Scatter flow values to [.., Q, P] per-(TC, port) totals
+        (dummy pad column sliced off)."""
+        return seg_sum(vals, idx, QPpad) \
+            .reshape(vals.shape[:-1] + (N_QOS, Ppad))[..., :P]
+
+    def gQ(x_qp, idx):
+        """Gather a per-(TC, port) array [.., Q, P] back to flows: zero
+        pad column for unused slots, flatten, fancy-gather at the flat
+        (tc, port) indices (``idx`` [F] or [S, F])."""
+        pad = xp.zeros(x_qp.shape[:-1] + (1,), x_qp.dtype)
+        xf = xp.concatenate([x_qp, pad], -1)
+        return xf.reshape(xf.shape[:-2] + (QPpad,))[..., idx]
+
+    bpt = f(1e9 / 8.0 * dt * 1e-6)       # bytes per (Gbps * tick)
+    fdt = f(dt)
+    zero, one, tiny = f(0.0), f(1.0), f(1e-30)
+    half, inf = f(0.5), f(np.inf)
+    eps_q = f(1e-9)
+    arangeF = xp.arange(F, dtype=xp.int32)
+    budget = p["gbps"] * bpt
+    budget_crumb = budget * f(1e-6)
+    buf_tc = p["buf"][..., None, None]
+    kmin_th = p["kmin"][..., None] * buf_tc
+    ecn_on = p["ecn_en"] > 0.5
+    can_assert = p["can_assert"] > 0.5
+    sxoff = p["sw_xoff"][..., None]
+    sxon = p["sw_xon"][..., None]
+    onoff = p["off_us"] > zero
+    period = xp.where(onoff, p["on_us"] + p["off_us"], one)
+    jet = p["jet"] > 0.5
+    avail_dram = xp.maximum(zero, p["membw"] - p["cpu_bw"])
+    jet_cap = xp.minimum(p["pcie"], p["line1"] * 4.0) * bpt
+    strag_share = xp.where(jet, p["sfrac"], zero)
+    inv_knee = one / (p["knee"] * p["ddio"])
+    rx_pfc_en = p["pfc_en"] > 0.5
+    wm_en = p["wm_cnp"] > 0.5
+    linecap = xp.minimum(p["line"], p["cap"])
+    if wrr:
+        quantaQ = p["quanta"][..., None]            # [.., Q, 1]
+        is_wrr = (p["sched"] == 1)[..., None, None]  # [.., 1, 1]
+    if host_tc:
+        hpfc_b = (p["hpfc"] > half)[..., None, :]   # [.., 1, R]
+        rx_pfc_tc = rx_pfc_en[..., None, :]
+        xoffQ = p["xoff"][..., None, :]
+        xonQ = p["xon"][..., None, :]
+
+    def cut(s, fire):
+        """DCQCN on_cnp for flows where ``fire`` holds."""
+        s = dict(s)
+        s["rt"] = xp.where(fire, s["rc"], s["rt"])
+        s["rc"] = xp.where(
+            fire, xp.maximum(p["minr"], s["rc"] * (1.0 - s["alpha"] / 2.0)),
+            s["rc"])
+        s["alpha"] = xp.where(
+            fire, xp.minimum(one, (1.0 - p["g"]) * s["alpha"] + p["g"]),
+            s["alpha"])
+        for k in ("t_us", "byts", "t_stage", "b_stage", "a_tus"):
+            s[k] = xp.where(fire, zero, s[k])
+        return s
+
+    def qtc_all(qm):
+        """Full per-(TC, port) occupancy [.., Q, P]: one scatter of all
+        S*F slot entries (each port hosts exactly one slot's entries)."""
+        v = qm[..., 0, :, :]
+        return segQ(v.reshape(v.shape[:-2] + (S * F,)), st["qp_flat"])
+
+    def drain(s, k, upf=None):
+        """Stage-k ports forward up to rate*dt — the dense drain's
+        grants on the slot-k row.  Returns per-flow drained [.., 2, F]
+        (the slot row IS the port-level provenance)."""
+        qm = s["qm"]
+        qrow = qm[..., :, k, :]                   # [.., 2, F]
+        qtc = segQ(qrow[..., 0, :], st["qp_idx"][k])
+        budget0 = budget if upf is None else budget * upf
+        can_q = st["stage"][k] & ~s["paused"] & (qtc > zero)
+        frac_q = fused.priority_grants(
+            xp, qtc, can_q if impl == "ref"
+            else xp.where(can_q, one, zero),
+            budget0, budget_crumb, one, zero, impl=impl)
+        if wrr:
+            rem = xp.where(can_q, qtc, zero)
+            alloc = xp.zeros_like(qtc)
+            bl = budget0
+            for _ in range(N_QOS):
+                wq = xp.where(rem > zero, quantaQ, zero)
+                wsum = wq.sum(-2)                 # [.., P]
+                share = bl[..., None, :] * wq \
+                    / xp.maximum(wsum, tiny)[..., None, :]
+                take = xp.minimum(share, rem)
+                alloc = alloc + take
+                rem = rem - take
+                bl = bl - take.sum(-2)
+                bl = xp.where(bl < budget_crumb, zero, bl)
+            frac_wrr = xp.where(qtc > zero,
+                                alloc / xp.maximum(qtc, tiny), zero)
+            frac_q = xp.where(is_wrr, frac_wrr, frac_q)
+        frac_f = gQ(frac_q, st["qp_idx"][k])      # [.., F]
+        out = qrow * frac_f[..., None, :]
+        left = qrow - out
+        # sub-1e-9 residues vanish with their marks (dense drain)
+        can_f = gQ(xp.where(can_q, one, zero), st["qp_idx"][k])
+        gone = (can_f > half) & (left[..., 0, :] < eps_q)
+        left = xp.where(gone[..., None, :], zero, left)
+        s["qm"] = qm - (qrow - left)[..., :, None, :] * st["row_oh"][k]
+        return s, out
+
+    def enqueue(s, A, k):
+        """Batch-enqueue stage-k output ``A`` [.., 2, F] at each flow's
+        next slot: proportional split of the class partition, one ECN
+        knee per (port, TC) against pre-batch occupancy."""
+        dq = st["dq_idx"][k]
+        qtc = qtc_all(s["qm"])
+        tot_q = segQ(A[..., 0, :], dq)
+        space_q = xp.maximum(buf_tc - qtc, zero)
+        scale_q = xp.where(tot_q > space_q,
+                           space_q / xp.maximum(tot_q, tiny), one)
+        take = A * gQ(scale_q, dq)[..., None, :]
+        lost = (A - take)[..., 0, :]
+        s["inj_lo"] = s["inj_lo"] - lost
+        s["sw_dropped"] = s["sw_dropped"] + lost.sum(-1)
+        mark_q = ecn_on[..., None, :] & (qtc > kmin_th)
+        mark_f = gQ(xp.where(mark_q, one, zero), dq)
+        dm = xp.where(mark_f > half,
+                      take[..., 0, :] - take[..., 1, :], zero)
+        s["ecn_marked"] = s["ecn_marked"] + dm.sum(-1)
+        s["qm"] = s["qm"] + \
+            (take + dm[..., None, :] * st["selm"])[..., :, None, :] \
+            * st["nxt_oh"][k]
+        return s
+
+    fold_at = f(65536.0)
+
+    def fold(s, hi, lo):
+        full = xp.abs(s[lo]) >= fold_at
+        s[hi] = s[hi] + xp.where(full, s[lo], zero)
+        s[lo] = xp.where(full, zero, s[lo])
+
+    def step(s, t, it=None):
+        if it is None:
+            it = t
+        s = dict(s)
+        now = (xp.asarray(t, dtype) + one) * fdt
+        fold(s, "injected", "inj_lo")
+        fold(s, "delivered", "deliv_lo")
+
+        # ---- 0. link failure / flap windows ------------------------------- #
+        upf = None
+        if fail:
+            downP = (t >= p["fail_at"]) & (t < p["fail_until"])   # [.., P]
+            edgeP = t == p["fail_at"]
+            if flap:
+                since = t - p["flap_start"]
+                live = t >= p["flap_start"]
+                downP = downP | (live
+                                 & (since % p["flap_period"]
+                                    < p["flap_down"]))
+                edgeP = edgeP | (live & (since % p["flap_period"] == 0))
+            upf = xp.where(downP, zero, one)
+            failf = xp.where(edgeP, one, zero)
+            failp = xp.concatenate(
+                [failf, xp.zeros(failf.shape[:-1] + (1,), failf.dtype)],
+                -1)
+            fail_sf = failp[..., st["port_of"]]               # [.., S, F]
+            lostF = (s["qm"][..., 0, :, :] * fail_sf).sum(-2)
+            s["inj_lo"] = s["inj_lo"] - lostF
+            s["sw_dropped"] = s["sw_dropped"] + lostF.sum(-1)
+            s["qm"] = s["qm"] * (one - fail_sf)[..., None, :, :]
+
+        # ---- 1. senders: DCQCN advance + offer ---------------------------- #
+        adv = now > p["start"]
+        adv_dt = xp.where(adv, fdt, zero)
+        a_tus = s["a_tus"] + adv_dt
+        a_fire = adv & (a_tus >= p["a_tmr"])
+        s["alpha"] = xp.where(a_fire, (1.0 - p["g"]) * s["alpha"],
+                              s["alpha"])
+        s["a_tus"] = xp.where(a_fire, zero, a_tus)
+        t_us = s["t_us"] + adv_dt
+        byts = xp.where(adv, s["byts"] + s["rc"] * bpt, s["byts"])
+        t_fire = adv & (t_us >= p["r_tmr"])
+        s["t_stage"] = s["t_stage"] + t_fire
+        s["t_us"] = xp.where(t_fire, zero, t_us)
+        b_fire = adv & (byts >= p["bctr"])
+        s["b_stage"] = s["b_stage"] + b_fire
+        s["byts"] = xp.where(b_fire, zero, byts)
+        fired = t_fire | b_fire
+        stage = xp.minimum(s["t_stage"], s["b_stage"])
+        s["rt"] = xp.where(fired & (stage == p["fth"]),
+                           xp.minimum(p["dline"], s["rt"] + p["ai"]),
+                           s["rt"])
+        s["rt"] = xp.where(fired & (stage > p["fth"]),
+                           xp.minimum(p["dline"], s["rt"] + p["hai"]),
+                           s["rt"])
+        s["rc"] = xp.where(fired,
+                           xp.minimum(p["dline"],
+                                      0.5 * (s["rc"] + s["rt"])),
+                           s["rc"])
+
+        gbps = xp.minimum(s["rc"], linecap)
+        room = xp.maximum(p["burst"] - (s["injected"] + s["inj_lo"]), zero)
+        active = adv & (~onoff | (xp.fmod(now - p["start"], period)
+                                  < p["on_us"]))
+        offer = xp.where(active, xp.minimum(gbps * bpt, room), zero)
+        # source-side backpressure at the NIC queue (slot 0's port)
+        qtcI = qtc_all(s["qm"])
+        tot_q = segQ(offer, st["qp_idx"][0])
+        space_q = xp.maximum(buf_tc - qtcI, zero)
+        scale_q = xp.where(tot_q > space_q,
+                           space_q / xp.maximum(tot_q, tiny), one)
+        take_f = offer * gQ(scale_q, st["qp_idx"][0])
+        s["inj_lo"] = s["inj_lo"] + take_f
+        s["qm"] = s["qm"] + take_f[..., None, None, :] * st["sel_inj"]
+
+        # ---- 2. tier-ordered forwarding (cut-through within the tick) ---- #
+        out = None
+        for k in range(S):
+            if not st["stage_any"][k]:
+                continue
+            s, out = drain(s, k, upf)
+            if k in (1, 2):
+                # fabric-uplink tx accounting (leaf->spine, spine->ss)
+                txk = seg_sum(out[..., 0, :], st["port_of"][k], Ppad)
+                s["tx"] = s["tx"] + txk[..., :P]
+            if k < S - 1:
+                s = enqueue(s, out, k)
+        arr_b = out[..., 0, :]
+        arr_m = out[..., 1, :]
+
+        # ---- 3. receivers advance one tick (HostDatapath, stacked) -------- #
+        arr_rb = st["recv_onehot"] * arr_b[..., None, :]
+        arr_cr = (st["cls_recv"] * arr_b[..., None, None, :]).sum(-1)
+        arr_tot = arr_cr.sum(-2)
+        space_r = xp.maximum(p["rnic_buf"] - s["qos_q"].sum(-2), zero)
+        acc_cr = fused.priority_admit(xp, arr_cr, space_r, impl=impl)
+        accepted = acc_cr[..., 0, :]
+        for q_i in range(1, N_QOS):
+            accepted = accepted + acc_cr[..., q_i, :]
+        s["rnic_drop"] = s["rnic_drop"] + (arr_tot - accepted)
+        s["qos_q"] = s["qos_q"] + acc_cr
+
+        ws = p["qp_bytes"] + s["resident"]
+        miss = xp.clip((ws - p["ddio"]) * inv_knee, zero, one)
+        s["miss_sum"] = s["miss_sum"] + xp.where(jet, zero, miss)
+        ddio_bw = xp.where(miss > 1e-9,
+                           xp.minimum(p["pcie"],
+                                      avail_dram / (2.0 * miss + tiny)),
+                           p["pcie"])
+        budget_r = xp.where(jet, jet_cap, ddio_bw * bpt)
+        pool_free = xp.maximum(zero, p["pool"] - s["resident"])
+        spill = jet & (pool_free / p["pool"] < p["safe"])
+        pf = xp.where(jet, pool_free, inf)
+        drained = pool_drained = fallback = zero
+        new_q = []
+        for q_i in range(N_QOS):
+            qq = s["qos_q"][..., q_i, :]
+            take = xp.minimum(xp.minimum(qq, budget_r), pf)
+            if q_i == N_QOS - 1:        # LOW spills instead of waiting
+                take = xp.where(spill, xp.minimum(qq, budget_r), take)
+                spilled = xp.where(spill, take, zero)
+            else:
+                spilled = zero
+            pf = pf - (take - spilled)
+            budget_r = budget_r - take
+            new_q.append(qq - take)
+            drained = drained + take
+            pool_drained = pool_drained + (take - spilled)
+            fallback = fallback + spilled
+        s["qos_q"] = xp.stack(new_q, -2)
+        s["nic_dram"] = s["nic_dram"] + \
+            xp.where(jet, fallback, drained * 2.0 * miss)
+        s["mem_fb"] = s["mem_fb"] + fallback
+        strag_part = pool_drained * strag_share
+        parts = xp.stack([pool_drained * (1.0 - strag_share), strag_part],
+                         -2)
+        s["ring"] = ring_set(s["ring"], it % H, parts)
+        s["resident"] = s["resident"] + pool_drained
+        s["strag_res"] = s["strag_res"] + strag_part
+        s["drained"] = s["drained"] + drained
+
+        idx = (it - p["d2"]) % H                  # [.., 2, R]
+        r2 = xp.take_along_axis(s["ring"], idx[..., None, :, :],
+                                -3)[..., 0, :, :]
+        r2 = xp.where(it >= p["d2"], r2, zero)
+        for j, is_strag in ((0, False), (1, True)):
+            r = r2[..., j, :]
+            void = xp.minimum(r, s["esc_debt"])
+            s["esc_debt"] = s["esc_debt"] - void
+            r = r - void
+            repay = xp.minimum(void, s["repl_debt"])
+            s["repl_debt"] = s["repl_debt"] - repay
+            s["repl_mem"] = xp.maximum(zero, s["repl_mem"] - repay)
+            s["resident"] = xp.maximum(zero, s["resident"] - r)
+            if is_strag:
+                s["strag_res"] = xp.maximum(zero, s["strag_res"] - r)
+
+        # Jet escape ladder (paper Algorithm 1)
+        avail = xp.maximum(zero, p["pool"] - s["resident"]) / p["pool"]
+        esc_on = jet & (avail < p["safe"])
+        can_rep = s["repl_mem"] < p["mem_esc"]
+        x_rep = xp.where(esc_on & can_rep,
+                         xp.maximum(zero,
+                                    xp.minimum(s["strag_res"],
+                                               p["mem_esc"]
+                                               - s["repl_mem"])),
+                         zero)
+        s["resident"] = s["resident"] - x_rep
+        s["strag_res"] = s["strag_res"] - x_rep
+        s["esc_debt"] = s["esc_debt"] + x_rep
+        s["repl_debt"] = s["repl_debt"] + x_rep
+        s["repl_mem"] = s["repl_mem"] + x_rep
+        s["esc_dram"] = s["esc_dram"] + 0.1 * x_rep
+        s["replaces"] = s["replaces"] + (x_rep > zero)
+        x_cop = xp.where(esc_on & ~can_rep, s["strag_res"], zero)
+        s["resident"] = s["resident"] - x_cop
+        s["strag_res"] = s["strag_res"] - x_cop
+        s["esc_debt"] = s["esc_debt"] + x_cop
+        s["esc_dram"] = s["esc_dram"] + x_cop
+        s["copies"] = s["copies"] + (x_cop > zero)
+        avail2 = xp.maximum(zero, p["pool"] - s["resident"]) / p["pool"]
+        in_danger = esc_on & (avail2 < p["danger"])
+        s["ecn_tus"] = xp.where(in_danger, s["ecn_tus"] + fdt, s["ecn_tus"])
+        esc_fire = in_danger & (s["ecn_tus"] >= p["cnp_iv"])
+        s["ecn_tus"] = xp.where(esc_fire, zero, s["ecn_tus"])
+        s["cnps"] = s["cnps"] + esc_fire
+        s["ecns"] = s["ecns"] + esc_fire
+        s["pool_sum"] = s["pool_sum"] + xp.where(jet, s["resident"], zero)
+        s["pool_peak"] = xp.maximum(s["pool_peak"],
+                                    xp.where(jet, s["resident"], zero))
+
+        # receiver congestion signalling
+        q_frac = s["qos_q"].sum(-2) / p["rnic_buf"]
+        if host_tc:
+            frac_c = s["qos_q"] / (p["rnic_buf"] / f(N_QOS))[..., None, :]
+            sel = xp.where(hpfc_b, frac_c, q_frac[..., None, :])
+            s["pfc"] = rx_pfc_tc & xp.where(s["pfc"], sel >= xonQ,
+                                            sel > xoffQ)
+            pfc_any = s["pfc"].any(-2)
+        else:
+            s["pfc"] = rx_pfc_en & xp.where(s["pfc"], q_frac >= p["xon"],
+                                            q_frac > p["xoff"])
+            pfc_any = s["pfc"]
+        s["pfc_us"] = s["pfc_us"] + xp.where(pfc_any, fdt, zero)
+        cnp_tus = s["cnp_tus"] + fdt
+        wm_fire = wm_en & (q_frac > p["ecn_th"]) \
+            & (cnp_tus >= p["cnp_iv"])
+        s["cnp_tus"] = xp.where(wm_fire, zero, cnp_tus)
+        s["cnps"] = s["cnps"] + wm_fire
+
+        # ---- 4. feedback routes back to the senders ----------------------- #
+        share_cr = xp.where(arr_cr > zero,
+                            acc_cr / xp.maximum(arr_cr, tiny), zero)
+        deliv = arr_b * share_cr[..., st["cls_of"], st["recv_of"]]
+        s["deliv_lo"] = s["deliv_lo"] + deliv
+        s["inj_lo"] = s["inj_lo"] - (arr_b - deliv)
+        s["completion"] = xp.where(
+            xp.isinf(s["completion"])
+            & (s["delivered"] + s["deliv_lo"] >= p["burst_done"]),
+            now, s["completion"])
+
+        has_arr = arr_tot > zero
+        heavy_new = xp.argmax(arr_rb, -1).astype(xp.int32)
+        s["heavy"] = xp.where(has_arr, heavy_new, s["heavy"])
+        is_heavy = arangeF == s["heavy"][..., st["recv_of"]]
+        f_esc = is_heavy & esc_fire[..., st["recv_of"]]
+        f_wm = is_heavy & wm_fire[..., st["recv_of"]]
+        s["backlog"] = s["backlog"] + arr_m
+        pace_tus = s["pace_tus"] + fdt
+        pace_fire = (s["backlog"] > zero) & (pace_tus >= p["cnp_iv_f"])
+        s["pace_tus"] = xp.where(pace_fire, zero, pace_tus)
+        s["backlog"] = xp.where(pace_fire, zero, s["backlog"])
+        fires = xp.stack([xp.where(f_esc, one, zero),
+                          xp.where(f_wm, one, zero),
+                          xp.where(pace_fire, one, zero)], -2)
+        s["cring"] = ring_set(s["cring"], it % Hc, fires)
+        cidx = (it - p["cnp_dly"]) % Hc
+        due = xp.take_along_axis(s["cring"], cidx[..., None, None, :],
+                                 -3)[..., 0, :, :]
+        for j in range(3):
+            s = cut(s, due[..., j, :] > half)
+
+        # ---- 5. per-priority PFC pause propagation ------------------------ #
+        q0s = s["qm"][..., 0, :, :]                           # [.., S, F]
+        qtcP = qtc_all(s["qm"])
+        frac_occ = qtcP / buf_tc
+        s["asserted"] = can_assert[..., None, :] & \
+            xp.where(s["asserted"], frac_occ >= sxon, frac_occ > sxoff)
+        # a slot contributes a pause iff its flow's class is asserted at
+        # its own port; the pause targets the slot's ingress port on the
+        # flow's class — one gather + one scatter over the S*F entries
+        af = gQ(xp.where(s["asserted"], one, zero), st["qp_idx"])
+        contrib = xp.where((af > half) & (q0s > zero), one, zero)
+        link_paused = segQ(
+            contrib.reshape(contrib.shape[:-2] + (S * F,)),
+            st["pp_flat"]) > zero                             # [.., Q, P]
+        if "ex_f" in st:
+            # candidate-ingress semantics under failure schedules: a
+            # shallow flow's last-hop (slot 5) contribution also pauses
+            # its non-chosen candidate downlinks (the scalar driver's
+            # OutputPort.static_ingress targeting)
+            extra = contrib[..., 5, :][..., st["ex_f"]]       # [.., E]
+            link_paused = link_paused | (segQ(extra, st["ex_flat"])
+                                         > zero)
+        link_any = link_paused.any(-2)
+        s["pause_us"] = s["pause_us"] + xp.where(link_any, fdt, zero)
+        s["pause_tc_us"] = s["pause_tc_us"] + \
+            xp.where(link_paused, fdt, zero)
+        s["ever_paused"] = s["ever_paused"] | link_any
+        rx_gate = s["pfc"][..., st["owner_clamp"]] & st["owner_valid"]
+        if host_tc:
+            s["paused"] = link_paused | rx_gate
+        else:
+            s["paused"] = link_paused | rx_gate[..., None, :]
+        return s
+
+    return step
+
+
 def _init_state(xp, lead, fsp: FabricSweepParams, p, dtype):
     """Zero/steady-state carry; ``lead`` is () under vmap, (G,) for numpy."""
     F, P, R, H = (fsp.n_flows, fsp.n_ports, fsp.n_recv, fsp.ring_len)
@@ -1564,8 +2162,9 @@ def _init_state(xp, lead, fsp: FabricSweepParams, p, dtype):
         # CNP propagation ring (slot-major, 3 notification sources)
         "cring": z(Hc, 3, F),
         # ports (axis -3: 0 = queued bytes, 1 = ECN-marked subset);
-        # PFC state is classed: [Q, P] per-(TC, port) assert/pause masks
-        "qm": z(2, P, F),
+        # sparse grids queue per (stage slot, flow) instead of
+        # (port, flow); PFC state stays classed [Q, P] in both layouts
+        "qm": z(2, _STAGES_SP if fsp.sparse else P, F),
         "asserted": xp.zeros(lead + (N_QOS, P), bool),
         "paused": xp.zeros(lead + (N_QOS, P), bool),
         "pause_us": z(P),
@@ -1589,6 +2188,9 @@ def _init_state(xp, lead, fsp: FabricSweepParams, p, dtype):
         # fleet counters
         "ecn_marked": z(), "sw_dropped": z(),
     }
+    if fsp.sparse:
+        # per-uplink carried bytes (fabric_uplinks utilization metrics)
+        s["tx"] = z(P)
     if fsp.dyn_route:
         # routing carry: current spine choice (static hash seed), reroute
         # counts and per-uplink carried bytes
@@ -1618,6 +2220,7 @@ def _init_state(xp, lead, fsp: FabricSweepParams, p, dtype):
         s["m_lat"] = z(F)
         s["m_last"] = z(F)
         s["m_hist"] = z(HIST_BUCKETS, F)
+        s["m_over"] = z(F)
     if fsp.any_flt:
         # fault-layer carries: the per-flow recovery ledger (lost bytes,
         # RTO timer/backoff stage, go-back-N gap flag), retransmit and
@@ -1638,8 +2241,6 @@ def _init_state(xp, lead, fsp: FabricSweepParams, p, dtype):
 def _static(fsp: FabricSweepParams, xp, dtype):
     P, F = fsp.n_ports, fsp.n_flows
     owner = fsp.owner_recv
-    sel = np.zeros((2, 2, 1, 1))
-    sel[0, 0], sel[1, 1] = 1.0, 1.0
     cls_onehot = np.zeros((N_QOS, F))
     cls_onehot[fsp.qos_of, np.arange(F)] = 1.0
     out = {
@@ -1647,16 +2248,71 @@ def _static(fsp: FabricSweepParams, xp, dtype):
         "cls_recv": xp.asarray(cls_onehot[:, None, :]
                                * fsp.recv_onehot[None, :, :], dtype),
         "stage": xp.asarray(fsp.stage_mask),
-        "occ": [xp.asarray(a, dtype) for a in fsp.occ],
-        "dest": [xp.asarray(a, dtype) for a in fsp.dest],
         "recv_onehot": xp.asarray(fsp.recv_onehot, dtype),
         "recv_of": xp.asarray(fsp.recv_of),
-        "prev_mat": xp.asarray(fsp.prev_onehot.reshape(P * F, P), dtype),
         "owner_clamp": xp.asarray(np.maximum(owner, 0)),
         "owner_valid": xp.asarray(owner >= 0),
+    }
+    if fsp.sparse:
+        # segmented-incidence gather/scatter indices: flat
+        # tc * (P + 1) + port addresses with column P the "slot unused"
+        # dummy, so every per-(port, TC) reduction is one scatter over
+        # the S*F slot entries and every read back one flat gather
+        S = _STAGES_SP
+        Ppad = P + 1
+        po = fsp.port_of.astype(np.int64)                 # [S, F]
+        qos = fsp.qos_of.astype(np.int64)                 # [F]
+        qp = qos[None, :] * Ppad + po
+        pp = qos[None, :] * Ppad + fsp.prv_port.astype(np.int64)
+        cols = np.arange(F)
+        dq_idx, nxt_oh = [], []
+        for k in range(S - 1):
+            nx = fsp.nxt_slot[k].astype(np.int64)         # [F]
+            tp = po[np.minimum(nx, S - 1), cols]
+            tp = np.where(nx < S, tp, P)
+            dq_idx.append(xp.asarray((qos * Ppad + tp).astype(np.int32)))
+            nxt_oh.append(xp.asarray(
+                (nx[None, :] == np.arange(S)[:, None]).astype(np.float64),
+                dtype))
+        sel_inj = np.zeros((2, S, 1))
+        sel_inj[0, 0, 0] = 1.0
+        selm = np.zeros((2, 1))
+        selm[1, 0] = 1.0
+        out.update({
+            "qp_idx": xp.asarray(qp.astype(np.int32)),
+            "qp_flat": xp.asarray(qp.reshape(-1).astype(np.int32)),
+            "pp_flat": xp.asarray(pp.reshape(-1).astype(np.int32)),
+            "port_of": xp.asarray(fsp.port_of),
+            "dq_idx": dq_idx,
+            "nxt_oh": nxt_oh,
+            "row_oh": [xp.asarray(np.eye(S)[k][:, None], dtype)
+                       for k in range(S)],
+            "sel_inj": xp.asarray(sel_inj, dtype),
+            "selm": xp.asarray(selm, dtype),
+            # trace-time skip of slots with no ports (a 2-tier sparse
+            # grid leaves the super-spine slots 2-3 empty)
+            "stage_any": [bool(fsp.stage_mask[k].any())
+                          for k in range(S)],
+        })
+        if fsp.pause_extra is not None:
+            # candidate-ingress pause pairs (failure schedules): gather
+            # the last-hop contribution of flow ex_f, scatter it onto
+            # its extra candidate downlink on the flow's class
+            exf = fsp.pause_extra[0].astype(np.int64)
+            exp_ = fsp.pause_extra[1].astype(np.int64)
+            out["ex_f"] = xp.asarray(exf.astype(np.int32))
+            out["ex_flat"] = xp.asarray(
+                (qos[exf] * Ppad + exp_).astype(np.int32))
+        return out
+    sel = np.zeros((2, 2, 1, 1))
+    sel[0, 0], sel[1, 1] = 1.0, 1.0
+    out.update({
+        "occ": [xp.asarray(a, dtype) for a in fsp.occ],
+        "dest": [xp.asarray(a, dtype) for a in fsp.dest],
+        "prev_mat": xp.asarray(fsp.prev_onehot.reshape(P * F, P), dtype),
         "sel0": xp.asarray(sel[0], dtype),
         "sel1": xp.asarray(sel[1], dtype),
-    }
+    })
     if fsp.dyn_route:
         out["upP"] = xp.asarray(fsp.upP, dtype)
         out["dnP"] = xp.asarray(fsp.dnP, dtype)
@@ -1717,12 +2373,30 @@ def _results(s, fsp: FabricSweepParams) -> Dict[str, np.ndarray]:
         "recv_mem_fallback_bytes": np.asarray(s["mem_fb"], np.float64),
     }
     # candidate ingress links that can ever receive a pause = ports with
-    # prev_onehot support (the scalar driver's `pausable` set exactly)
-    n_pausable = int((fsp.prev_onehot.sum((0, 1)) > 0).sum())
-    out["n_pausable_links"] = np.full(G, n_pausable)
-    out["pause_storm"] = (out["pause_tc_fanout"].max(-1)
-                          / max(n_pausable, 1) if n_pausable
-                          else np.zeros(G))
+    # ingress support (the scalar driver's `pausable` set exactly);
+    # links down for the entire window can neither pause nor carry, so
+    # they leave the storm/imbalance denominators (FabricResult's
+    # zero-uptime exclusion, mirrored per grid point)
+    if fsp.sparse:
+        pmask = np.zeros(fsp.n_ports, bool)
+        pmask[fsp.prv_port[fsp.prv_port < fsp.n_ports]] = True
+        if fsp.pausable_extra is not None:
+            # candidate hops of shallow flows under failure schedules
+            pmask[fsp.pausable_extra] = True
+    elif fsp.prev_onehot.size:
+        pmask = fsp.prev_onehot.sum((0, 1)) > 0
+    else:
+        pmask = np.zeros(fsp.n_ports, bool)
+    if "fail_at" in fsp.pvals:
+        dead = (fsp.pvals["fail_at"] <= 0) \
+            & (fsp.pvals["fail_until"] >= fsp.ticks)         # [G, P]
+    else:
+        dead = np.zeros((G, fsp.n_ports), bool)
+    n_pausable = (pmask[None, :] & ~dead).sum(-1)            # [G]
+    out["n_pausable_links"] = n_pausable
+    out["pause_storm"] = np.where(
+        n_pausable > 0,
+        out["pause_tc_fanout"].max(-1) / np.maximum(n_pausable, 1), 0.0)
     if fsp.any_flt:
         out["retransmit_bytes"] = np.asarray(s["retx"],
                                              np.float64).sum(-1)
@@ -1747,12 +2421,22 @@ def _results(s, fsp: FabricSweepParams) -> Dict[str, np.ndarray]:
         hist = np.asarray(s["m_hist"], np.float64).sum(-1)   # [G, B]
         lat_sum = np.asarray(s["m_lat"], np.float64).sum(-1)
         mbytes = np.where(mmask, fsp.pvals["m_bytes"], 0.0)
+        # latencies above the histogram ceiling sit in the explicit
+        # overflow counter; the percentile estimator returns the bucket
+        # ceiling for ranks inside the overflow mass instead of a
+        # silent midpoint below the true value
+        ovf = np.where(mmask, np.asarray(s["m_over"], np.float64), 0.0)
+        ov_tot = ovf.sum(-1)
         out["msg_count"] = cnt
         out["msg_count_total"] = tot
         out["msg_hist"] = hist
-        out["msg_p50_us"] = percentile_from_counts(hist, 50.0)
-        out["msg_p99_us"] = percentile_from_counts(hist, 99.0)
-        out["msg_p999_us"] = percentile_from_counts(hist, 99.9)
+        out["msg_overflow_count"] = ov_tot
+        out["msg_p50_us"] = percentile_from_counts(hist, 50.0,
+                                                   overflow=ov_tot)
+        out["msg_p99_us"] = percentile_from_counts(hist, 99.0,
+                                                   overflow=ov_tot)
+        out["msg_p999_us"] = percentile_from_counts(hist, 99.9,
+                                                    overflow=ov_tot)
         out["msg_lat_mean_us"] = np.where(
             tot > 0.0, lat_sum / np.maximum(tot, 1.0), 0.0)
         out["msg_rate_mops"] = tot / sim_us
@@ -1767,20 +2451,27 @@ def _results(s, fsp: FabricSweepParams) -> Dict[str, np.ndarray]:
         rr = np.asarray(s["reroutes"], np.float64)
         out["flow_reroutes"] = rr
         out["reroute_count"] = rr.sum(-1)
-        # per-uplink utilization (stage-1 ports; NaN-safe zeros elsewhere)
+    else:
+        out["reroute_count"] = np.zeros(G)
+    if "tx" in s:
+        # per-uplink utilization (leaf->spine ports; sparse pod grids
+        # add the spine->super-spine tier — fabric_uplinks' set); links
+        # dead for the whole window leave the mean/max, matching
+        # FabricResult.uplink_imbalance's zero-uptime exclusion
         tx = np.asarray(s["tx"], np.float64)
         cap = fsp.pvals["gbps"] * 1e9 / 8.0 * (sim_us * 1e-6)
         util = np.where(cap > 0.0, tx / np.maximum(cap, 1e-30), 0.0)
-        up_mask = fsp.stage_mask[1]
+        up_mask = (fsp.stage_mask[1] | fsp.stage_mask[2]) if fsp.sparse \
+            else fsp.stage_mask[1]
+        alive = up_mask[None, :] & ~dead
         out["uplink_util"] = np.where(up_mask[None, :], util, 0.0)
         if up_mask.any():
-            out["uplink_util_max"] = util[:, up_mask].max(-1)
-            out["uplink_util_mean"] = util[:, up_mask].mean(-1)
+            out["uplink_util_max"] = np.where(alive, util, 0.0).max(-1)
+            out["uplink_util_mean"] = np.where(alive, util, 0.0).sum(-1) \
+                / np.maximum(alive.sum(-1), 1)
         else:
             out["uplink_util_max"] = np.zeros(G)
             out["uplink_util_mean"] = np.zeros(G)
-    else:
-        out["reroute_count"] = np.zeros(G)
     return out
 
 
@@ -1821,8 +2512,9 @@ def _run_numpy(fsp: FabricSweepParams, dtype=np.float64,
         ring[..., idx, :, :] = v
         return ring
 
-    step = _make_step(np, ring_set, st, p, fsp.dt_us, fsp.ring_len, dtype,
-                      fsp.cnp_ring, _opts(fsp))
+    mk = _make_step_sparse if fsp.sparse else _make_step
+    step = mk(np, ring_set, st, p, fsp.dt_us, fsp.ring_len, dtype,
+              fsp.cnp_ring, _opts(fsp))
     s = _init_state(np, (fsp.n_points,), fsp, p, dtype)
     if adaptive is None:
         for t in range(fsp.ticks):
@@ -1871,8 +2563,9 @@ def _jax_program(fsp: FabricSweepParams, unroll: int, impl: str = "ref"):
         return ring.at[..., idx, :, :].set(v)
 
     def one_point(s0, p):
-        step = _make_step(jnp, ring_set, st, p, fsp.dt_us, H, dtype, Hc,
-                          _opts(fsp, impl))
+        mk = _make_step_sparse if fsp.sparse else _make_step
+        step = mk(jnp, ring_set, st, p, fsp.dt_us, H, dtype, Hc,
+                  _opts(fsp, impl))
 
         def body(s, t):
             return step(s, t), None
@@ -1969,7 +2662,8 @@ def _run_jax_adaptive(fsp: FabricSweepParams, cfg: AdaptiveConfig,
 def run_fabric_sweep(scenarios: Sequence, backend: str = "jax",
                      unroll="auto", adaptive_dt: bool = False,
                      adaptive: Optional[AdaptiveConfig] = None,
-                     impl: str = "auto") -> Dict[str, np.ndarray]:
+                     impl: str = "auto",
+                     incidence: str = "auto") -> Dict[str, np.ndarray]:
     """Advance a grid of fabric scenarios through the full multi-host
     recurrence at once; returns ``{metric: array}`` aligned with the input
     order (arrays are ``[G]``, ``[G, F]`` or ``[G, R]`` — flow order is the
@@ -1993,10 +2687,29 @@ def run_fabric_sweep(scenarios: Sequence, backend: str = "jax",
     ``"interpret"`` runs the Pallas kernels under the interpreter so CPU
     CI exercises the kernel path).  The numpy reference always runs the
     inline formulation.
+
+    ``incidence`` picks the queue-state layout: ``"dense"`` is the
+    [2, P, F] port x flow formulation, ``"sparse"`` the segmented
+    [2, 6, F] slot incidence whose per-tick cost grows with
+    flows x hops instead of flows x ports — required for 3-level
+    (super-spine) pod fabrics and the scalable choice for any large
+    static grid.  ``"auto"`` (default) selects sparse exactly when the
+    topology has a super-spine tier, so existing 2-tier grids keep the
+    dense engine bit-for-bit.  Sparse supports static ECMP plus
+    failure/flap windows; dynamic routing, the CC zoo, the message
+    layer, fault injection and ``adaptive_dt`` stay dense-only.
     """
-    fsp = FabricSweepParams.from_scenarios(scenarios)
+    if incidence not in ("auto", "dense", "sparse"):
+        raise ValueError(f"unknown incidence {incidence!r}")
+    sparse = incidence == "sparse" or (
+        incidence == "auto"
+        and any(bool(s.topology.super_spines) for s in scenarios))
+    fsp = FabricSweepParams.from_scenarios(scenarios, sparse=sparse)
     cfg = adaptive if adaptive is not None \
         else (AdaptiveConfig() if adaptive_dt else None)
+    if fsp.sparse and cfg is not None:
+        raise ValueError("adaptive_dt macro-ticking is dense-engine "
+                         "only; run sparse grids at the fine tick")
     if backend == "numpy":
         return _run_numpy(fsp, adaptive=cfg)
     if backend == "jax":

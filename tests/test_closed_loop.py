@@ -41,6 +41,7 @@ def pool_sweep():
     return scens, pts, scalar, out_np, out_jx
 
 
+@pytest.mark.slow
 def test_pool_shrink_throttles_senders(pool_sweep):
     """The loop itself: less pool -> more escape-ladder ECN -> CNPs cut
     the incast senders -> lower receiver goodput, longer incast FCT."""
@@ -69,6 +70,7 @@ def test_pool_shrink_throttles_senders(pool_sweep):
     assert sc_ecn[-1] > 0
 
 
+@pytest.mark.slow
 def test_pool_sweep_vector_matches_scalar(pool_sweep):
     """PR 2-style acceptance bounds on the closed-loop incast-8 grid."""
     scens, _, scalar, out_np, out_jx = pool_sweep
@@ -97,6 +99,7 @@ def _qos_incast(**kw):
     return sc
 
 
+@pytest.mark.slow
 def test_qos_flows_scalar_matches_vector():
     sc = _qos_incast()
     r = sc.run()
@@ -126,6 +129,7 @@ def _delayed(delay_us):
     return sc
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("delay_us", [0.0, 20.0])
 def test_cnp_delay_scalar_matches_vector(delay_us):
     sc = _delayed(delay_us)
@@ -147,6 +151,7 @@ def test_cnp_delay_changes_dynamics():
     assert g0 != pytest.approx(g200, rel=1e-6)
 
 
+@pytest.mark.slow
 def test_cnp_delay_nonzero_closed_loop():
     """The escape-ladder ECN -> delayed CNP -> DCQCN loop at a nonzero
     propagation delay: scalar pending-heap vs vector delay-ring
@@ -171,6 +176,7 @@ def test_cnp_delay_nonzero_closed_loop():
 # --------------------------------------------------------------------------- #
 # per-flow CNP delay (Flow.cnp_delay_us overrides FabricConfig)
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 def test_per_flow_cnp_delay_overrides_config():
     """Flows carry their own NP->RP delay: a mixed-delay fleet must
     differ from every uniform-delay fleet and agree across engines."""

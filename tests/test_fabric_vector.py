@@ -85,6 +85,7 @@ def storage():
 # --------------------------------------------------------------------------- #
 # equivalence anchors
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 @pytest.mark.parametrize("mode", ["ddio", "jet"])
 def test_single_pair_matches_run_sim(mode):
     ref = S.run_sim(S.testbed_100g(mode, sim_time_s=0.005))
@@ -95,6 +96,7 @@ def test_single_pair_matches_run_sim(mode):
         assert got == pytest.approx(ref.goodput_gbps, rel=tol), backend
 
 
+@pytest.mark.slow
 def test_numpy_backend_exact_vs_scalar(incast8):
     scens, ref = incast8
     out = run_fabric_sweep(scens, backend="numpy")
@@ -131,6 +133,7 @@ def test_jax_backend_matches_scalar_incast8(incast8):
     assert out["switch_dropped_bytes"].max() > 0
 
 
+@pytest.mark.slow
 def test_jax_backend_matches_scalar_storage(storage):
     for kind, (scens, ref) in storage.items():
         out = run_fabric_sweep(scens, backend="jax")
@@ -141,6 +144,7 @@ def test_jax_backend_matches_scalar_storage(storage):
         assert not np.isfinite(ref["flow_completion_us"]).any()
 
 
+@pytest.mark.slow
 def test_victim_goodput_no_nan(incast8):
     scens, ref = incast8
     out = run_fabric_sweep(scens, backend="numpy")
@@ -185,6 +189,7 @@ def test_grid_rejects_membw_schedule():
 # --------------------------------------------------------------------------- #
 # property: vectorized == scalar on random small fabrics
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 @settings(max_examples=12, deadline=None)
 @given(st.integers(1, 2), st.integers(2, 3), st.integers(1, 2),
        st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),

@@ -70,6 +70,7 @@ class _Boom(RuntimeError):
     pass
 
 
+@pytest.mark.slow
 def test_crash_restart_resumes_identically(tmp_path):
     """Train 6 steps with a crash at step 4; the restarted run must land on
     the same final loss as an uninterrupted run."""

@@ -45,7 +45,7 @@ from repro.fabric.topology import incast_fabric
 from repro.fabric.vector import run_fabric_sweep
 
 SIM_S = 0.002
-EXAMPLES = int(os.environ.get("FABRIC_TEST_EXAMPLES", "5"))
+EXAMPLES = int(os.environ.get("FABRIC_TEST_EXAMPLES", "2"))
 DEEP_EXAMPLES = max(20, EXAMPLES)
 
 

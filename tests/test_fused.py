@@ -40,7 +40,7 @@ from repro.fabric.fused import (AdaptiveConfig, cycle_flags,
                                 priority_grants)
 from repro.fabric.vector import FabricSweepParams, run_fabric_sweep
 
-EXAMPLES = int(os.environ.get("FABRIC_TEST_EXAMPLES", "4"))
+EXAMPLES = int(os.environ.get("FABRIC_TEST_EXAMPLES", "2"))
 
 
 # --------------------------------------------------------------------------- #
@@ -119,6 +119,7 @@ def _incast_grid(sim_s=0.002, burst_mb=0.5, n=4, with_victim=True):
             for m in ("jet", "ddio") for p in (False, True)]
 
 
+@pytest.mark.slow
 def test_jax_interpret_tier_matches_ref_tier_exactly():
     pytest.importorskip("jax")
     scens = _incast_grid()
@@ -132,6 +133,7 @@ def test_jax_interpret_tier_matches_ref_tier_exactly():
         assert (both_nan | (a == b)).all(), k
 
 
+@pytest.mark.slow
 def test_adaptive_off_stays_on_golden():
     # the frozen PR 5/7 golden (test_pfc_priority.GOLDEN) through the
     # public API with adaptive_dt explicitly False: bit-for-bit the
@@ -201,6 +203,7 @@ def test_adaptive_coarsens_and_bounds_delivered():
     assert rel.max() <= cfg.rel_bytes_bound, rel.max()
 
 
+@pytest.mark.slow
 def test_adaptive_public_api_matches_hand_loop():
     scens = _incast_grid()
     via_api = run_fabric_sweep(scens, backend="numpy", adaptive_dt=True)
@@ -211,6 +214,7 @@ def test_adaptive_public_api_matches_hand_loop():
         assert (both_nan | (a == b)).all(), k
 
 
+@pytest.mark.slow
 def test_adaptive_jax_within_bound():
     pytest.importorskip("jax")
     scens = _incast_grid()
@@ -296,6 +300,7 @@ def test_cycle_flags_matches_has_pause_cycle_synthetic():
         assert not bool(got[1])         # the all-zero point never flags
 
 
+@pytest.mark.slow
 def test_deadlock_ticks_scalar_vs_numpy_engine():
     base = SC.all_to_all(4, mode="ddio", msg_kb=256, pfc=True,
                          sim_time_s=0.002)
@@ -311,6 +316,7 @@ def test_deadlock_ticks_scalar_vs_numpy_engine():
         assert float(r.deadlock_ticks) == float(out["deadlock_ticks"][i])
 
 
+@pytest.mark.slow
 def test_deadlock_ticks_jax_matches_numpy():
     pytest.importorskip("jax")
     sc = SC.incast(4, mode="ddio", burst_mb=1.0, sim_time_s=0.002,

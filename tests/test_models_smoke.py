@@ -70,6 +70,7 @@ def test_layer_structure_covers_config(name):
             arch.num_layers // arch.cross_attn_every
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ["h2o-danube-1.8b", "zamba2-1.2b",
                                   "xlstm-125m", "gemma-7b",
                                   "musicgen-large"])
@@ -97,6 +98,7 @@ def test_prefill_decode_matches_forward(tiny_setups, name):
     assert np.isfinite(np.asarray(lg_dec)).all()
 
 
+@pytest.mark.slow
 def test_swa_ring_buffer_decode_matches_window_attention():
     """Danube with a tiny window: decoding past the window must equal
     attention over only the last `window` tokens."""

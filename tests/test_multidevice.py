@@ -14,6 +14,7 @@ import pytest
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+@pytest.mark.slow
 def test_multidevice_suite():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")

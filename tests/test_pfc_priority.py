@@ -39,7 +39,7 @@ from repro.fabric.fabric import FabricConfig, Flow, run_fabric
 from repro.fabric.switch import N_TC, OutputPort, SwitchConfig
 from repro.fabric.vector import run_fabric_sweep
 
-EXAMPLES = int(os.environ.get("FABRIC_TEST_EXAMPLES", "6"))
+EXAMPLES = int(os.environ.get("FABRIC_TEST_EXAMPLES", "2"))
 # the slow-marked deep variants also follow the env var (CI's slow job
 # raises it), but never drop below their own floor
 DEEP_EXAMPLES = max(30, EXAMPLES)
@@ -122,7 +122,12 @@ def _check_scalar_golden(r, g):
     assert r.incast_completion_us == g["incast_fct"]
 
 
-@pytest.mark.parametrize("key", sorted(GOLDEN))
+# one golden key stays in the fast tier as the bit-equality smoke;
+# the full key set rides the slow job
+@pytest.mark.parametrize("key", [
+    "incast8_ddio_pfc",
+    pytest.param("incast8_jet_pfc", marks=pytest.mark.slow),
+    pytest.param("mixed_fleet_pfc", marks=pytest.mark.slow)])
 def test_scalar_single_tc_bit_equal_to_pre_refactor(key):
     """Classed switch, single-TC workload: bit-equal to the per-link
     driver the refactor replaced — in both pause modes."""
@@ -131,7 +136,10 @@ def test_scalar_single_tc_bit_equal_to_pre_refactor(key):
                          GOLDEN[key])
 
 
-@pytest.mark.parametrize("key", sorted(GOLDEN))
+@pytest.mark.parametrize("key", [
+    "incast8_ddio_pfc",
+    pytest.param("incast8_jet_pfc", marks=pytest.mark.slow),
+    pytest.param("mixed_fleet_pfc", marks=pytest.mark.slow)])
 def test_scalar_per_tc_pause_breakdown_single_tc(key):
     """With one TC in use, the per-priority breakdown carries the whole
     pause budget on that class and sums back to pause_link_us."""
@@ -164,6 +172,7 @@ def _maxrel(a, b):
                         / np.maximum(np.abs(b[m]), 1e-9)))
 
 
+@pytest.mark.slow
 def test_vector_single_tc_equivalent_to_per_link(single_tc_grid):
     """1-TC == old per-link pause in the vector engines: the per-TC and
     legacy grid points agree with each other and with the pre-refactor
@@ -194,6 +203,7 @@ def test_vector_single_tc_equivalent_to_per_link(single_tc_grid):
     assert tc_np[0, [0, 2]].sum() == tc_np[1, 1:].sum() == 0.0
 
 
+@pytest.mark.slow
 def test_vector_single_tc_golden_mixed_fleet():
     """Same 1-TC == per-link contract on the closed-loop mixed_fleet
     scenario (escape-ladder CNPs active), vs the pre-refactor goldens."""
@@ -309,6 +319,7 @@ def test_qos_mixed_low_spill_at_fleet_scale(qos_mixed_pair):
     assert per_tc.per_host["h1_0"].mem_fallback_bytes > 0
 
 
+@pytest.mark.slow
 def test_qos_mixed_grid_vector_matches_scalar(qos_mixed_pair):
     per_tc, legacy = qos_mixed_pair
     scens, pts = SC.qos_mixed_grid()        # per_tc x pool grid
@@ -371,6 +382,7 @@ def _hol_isolation_case(n_bulk, bulk_gbps, vic_gbps, cls_pick, buf_kb):
     assert baseline > 0
 
 
+@pytest.mark.slow
 @settings(max_examples=EXAMPLES, deadline=None)
 @given(st.integers(3, 5), st.integers(50, 70), st.integers(5, 35),
        st.integers(0, 5), st.integers(256, 640))
@@ -430,6 +442,7 @@ def _equivalence_case(n_leaves, per_leaf, n_spines, flow_specs):
     np.testing.assert_allclose(out["pause_tc_total_us"][0], per_cls)
 
 
+@pytest.mark.slow
 @settings(max_examples=EXAMPLES, deadline=None)
 @given(st.integers(1, 2), st.integers(2, 3), st.integers(1, 2),
        st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),

@@ -75,6 +75,7 @@ def test_replace_keeps_recyclable_size_constant():
     assert pool.available_bytes == 4 * 4096
 
 
+@pytest.mark.slow
 @given(st.integers(1, 16), st.integers(0, 16))
 @settings(max_examples=30, deadline=None)
 def test_device_pool_alloc_release(n_slots, n_alloc):

@@ -4,6 +4,7 @@ accounting."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.launch import hlo_analysis
@@ -17,6 +18,7 @@ from repro.parallel.compression import (dequantize_int8_rowwise,
 @settings(max_examples=50, deadline=None)
 @given(st.lists(st.integers(1, 6), min_size=1, max_size=3),
        st.integers(1, 257), st.integers(0, 2 ** 31 - 1))
+@pytest.mark.slow
 def test_rowwise_int8_shapes_and_error_bound(lead, last, seed):
     """q keeps x's shape; scale drops the last dim; |x - deq| <= scale/2
     per row (symmetric rounding bound)."""
@@ -43,6 +45,7 @@ def test_rowwise_int8_zero_and_extremes():
     assert int(np.abs(np.asarray(q)).max()) == 127
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
 def test_rowwise_int8_scale_invariance(n, seed):

@@ -43,7 +43,7 @@ from repro.fabric.vector import FabricSweepParams, run_fabric_sweep
 from test_pfc_priority import GOLDEN, _check_scalar_golden, \
     _golden_scenario, _maxrel
 
-EXAMPLES = int(os.environ.get("FABRIC_TEST_EXAMPLES", "5"))
+EXAMPLES = int(os.environ.get("FABRIC_TEST_EXAMPLES", "2"))
 DEEP_EXAMPLES = max(20, EXAMPLES)
 
 
@@ -151,6 +151,7 @@ def test_static_ecmp_scalar_bit_equal(key):
     assert r.uplink_imbalance() > 0.0
 
 
+@pytest.mark.slow
 def test_static_ecmp_vector_within_established_bounds():
     """Vector engines under an explicit static RoutingConfig: numpy
     ~1e-13, jax <= 5e-4 against the golden literals."""
@@ -176,8 +177,13 @@ def _scalar_ref(sc):
         np.array([r.flow_completion_us[f] for f in range(F)])
 
 
-@pytest.mark.parametrize("mode", ["static_ecmp", "weighted_ecmp",
-                                  "adaptive", "spray"])
+# static stays in the fast tier as the smoke case; the dynamic modes
+# re-run the same scalar reference and ride the slow job
+@pytest.mark.parametrize("mode", [
+    "static_ecmp",
+    pytest.param("weighted_ecmp", marks=pytest.mark.slow),
+    pytest.param("adaptive", marks=pytest.mark.slow),
+    pytest.param("spray", marks=pytest.mark.slow)])
 def test_dynamic_modes_numpy_matches_scalar(mode):
     """Every routing mode under a mid-burst link failure: the float64
     numpy backend reproduces the scalar driver (goodput, completion,
@@ -196,6 +202,7 @@ def test_dynamic_modes_numpy_matches_scalar(mode):
         [r.flow_reroutes[f] for f in range(len(sc.flows))])
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("mode", ["adaptive", "spray"])
 def test_dynamic_modes_with_pfc_numpy_matches_scalar(mode):
     """Candidate-ingress pause targeting agrees across engines when a
@@ -210,6 +217,7 @@ def test_dynamic_modes_with_pfc_numpy_matches_scalar(mode):
         r.ecn_marked_bytes, rel=1e-9, abs=1e-6)
 
 
+@pytest.mark.slow
 def test_uplink_util_matches_scalar():
     sc = SC.link_failure_incast(routing="adaptive", sim_time_s=0.004,
                                 burst_mb=1.0)
@@ -224,6 +232,7 @@ def test_uplink_util_matches_scalar():
     assert out["uplink_util_max"][0] >= out["uplink_util_mean"][0] > 0.0
 
 
+@pytest.mark.slow
 def test_spray_settle_delays_delivery():
     """The reorder-settling penalty pushes completion later (never
     earlier), and settle=0 is pass-through."""
@@ -282,6 +291,7 @@ def test_routing_grid_reroutes_and_util(routing_grid_out):
         assert out["uplink_util_max"][i] > 0.0
 
 
+@pytest.mark.slow
 def test_restore_gives_dynamic_fct_advantage():
     """With the link restored before sim end, every mode completes but
     adaptive/spray beat static's post-failure FCT outright."""
@@ -313,6 +323,7 @@ def _adaptive_vs_static_case(n_senders, burst_kb, fail_spine, fail_at_us):
     assert adaptive >= static * 0.99 - 1e-6
 
 
+@pytest.mark.slow
 @settings(max_examples=EXAMPLES, deadline=None)
 @given(st.integers(3, 6), st.integers(200, 1500), st.integers(0, 1),
        st.integers(20, 3000))
@@ -437,6 +448,7 @@ def test_receiver_host_per_class_pause_unit():
     assert legacy.pfc_pause_us > 0
 
 
+@pytest.mark.slow
 def test_host_per_tc_pfc_isolates_classes_on_access_link():
     """Fabric-level: a LOW bulk incast fills the receiver RNIC buffer;
     with the classed host gate the HIGH flow keeps its goodput, with the
@@ -535,6 +547,7 @@ def test_host_per_tc_gate_stays_lossless():
 # --------------------------------------------------------------------------- #
 # satellite: multi-receiver OLAP shuffle scenario
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 def test_olap_shuffle_multi_receiver():
     sc = SC.olap_shuffle(n_mappers=3, n_reducers=3, shuffle_mb=0.6,
                          sim_time_s=0.006)

@@ -83,6 +83,7 @@ def test_param_counts_match_public_sizes():
 # --------------------------------------------------------------------------- #
 # end-to-end: tiny model trains and the loss actually decreases
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 def test_train_loss_decreases(tmp_path):
     from repro.data import pipeline
     from repro.optim import adamw
@@ -139,6 +140,7 @@ def test_dryrun_multipod_shards_pod_axis():
                 r["arch"], r["shape"], r["mesh"])
 
 
+@pytest.mark.slow
 def test_dryrun_cli_end_to_end(tmp_path):
     """The dry-run CLI lowers + compiles + records a cell in a fresh
     subprocess (8 placeholder devices, custom 2x4 mesh)."""
@@ -163,6 +165,7 @@ def test_dryrun_cli_end_to_end(tmp_path):
 # --------------------------------------------------------------------------- #
 # benchmark harness: paper-claim bands (C4, C8) via the public bench API
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 def test_bench_receiver_datapath_claims():
     import sys
     sys.path.insert(0, REPO)

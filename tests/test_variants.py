@@ -18,6 +18,7 @@ from repro.train import steps as steps_mod
 REPO = os.path.join(os.path.dirname(__file__), "..")
 
 
+@pytest.mark.slow
 def test_accum_matches_full_batch_single_device():
     """Gradient accumulation equals the full-batch step bit-for-nearly."""
     cfg = dataclasses.replace(tiny_config(ARCHS["starcoder2-15b"]),
