@@ -52,6 +52,12 @@ Four parts:
    exactly zero packets — only real wire loss or go-back-N duplicate
    discards may feed ``dropped_pkts``).
 
+9. **Farm** — the chunked sweep farm (``repro.fabric.farm``) vs the
+   monolithic single-program run on the 64-point incast grid: gates
+   exact result equality (chunk padding + structure envelope must not
+   perturb any real point), zero program-cache recompiles after
+   warmup, and the multiprocess warm speedup on multi-core hosts.
+
 Everything is also written machine-readable to
 ``experiments/bench/BENCH_fabric.json`` so the perf trajectory is
 tracked across PRs.  ``--quick`` shrinks sim time and grids for CI.
@@ -625,6 +631,79 @@ def run_adaptive_bench() -> List[Dict]:
     }]
 
 
+def run_farm_bench() -> List[Dict]:
+    """Sweep farm vs the monolithic single-program run on the
+    64-point incast grid (16-pt with ``--quick``).
+
+    Three gated promises: (1) **equal results** — the farm's chunked,
+    envelope-forced programs must reproduce the monolithic run exactly
+    (``dev_farm_vs_mono`` is an exact-zero ceiling); (2) **zero
+    recompiles after warmup** — a second farm pass over the same plan
+    must hit the program cache on every chunk
+    (``recompiles_after_warmup``, exact-zero); (3) **warm speedup** —
+    on a multi-core host the multiprocess farm beats the monolithic
+    program >=2x (``speedup_warm``; the quick floor is lower because CI
+    runs single-core in-process dispatch, where chunking can only cost
+    a little, never win).  The multiprocess timing re-spawns the worker
+    pool per rep, so it includes the real dispatch overhead an
+    overnight run pays; workers share the on-disk XLA cache when
+    ``JAX_COMPILATION_CACHE_DIR`` is set."""
+    import tempfile
+    import warnings as _warnings
+
+    from repro.fabric.farm import run_farm
+
+    scens, _ = SC.build_grid("incast", quick=QUICK)
+    chunk = 8 if QUICK else 16
+    cpus = os.cpu_count() or 1
+    workers = min(4, cpus) if (not QUICK and cpus >= 2) else 0
+
+    run_fabric_sweep(scens, backend="jax")               # compile mono
+    t_mono, mono = _best_of(lambda: run_fabric_sweep(scens,
+                                                     backend="jax"))
+
+    with _warnings.catch_warnings():
+        # single-device fallback is expected on CI hosts
+        _warnings.simplefilter("ignore", RuntimeWarning)
+        warm = run_farm(scens, workers=0, chunk_size=chunk,
+                        backend="jax", artifacts=False)   # chunk compile
+        t_farm_ip, farm = _best_of(lambda: run_farm(
+            scens, workers=0, chunk_size=chunk, backend="jax",
+            artifacts=False))
+    recompiles = sum(r["compiles"]
+                     for r in farm["manifest"]["records"])
+
+    dev = 0.0
+    for k in mono:
+        a = np.asarray(mono[k], np.float64)
+        b = np.asarray(farm["results"][k], np.float64)
+        a = np.where(np.isfinite(a), a, -1.0)
+        b = np.where(np.isfinite(b), b, -1.0)
+        dev = max(dev, float(np.max(np.abs(a - b))))
+
+    t_farm = t_farm_ip
+    if workers > 1:
+        with tempfile.TemporaryDirectory() as td:
+            t_farm, _ = _best_of(lambda: run_farm(
+                "incast", quick=QUICK, workers=workers,
+                chunk_size=chunk, backend="jax", out_dir=td), reps=2)
+
+    return [{
+        "grid_points": len(scens),
+        "chunk_size": chunk,
+        "chunks": len(warm["manifest"]["records"]),
+        "workers": workers,
+        "mono_warm_s": t_mono,
+        "farm_inprocess_warm_s": t_farm_ip,
+        "farm_warm_s": t_farm,
+        "speedup_warm": t_mono / t_farm,
+        "dev_farm_vs_mono": dev,
+        "recompiles_after_warmup": recompiles,
+        "warmup_compiles": sum(r["compiles"] for r in
+                               warm["manifest"]["records"]),
+    }]
+
+
 def _jsonable(obj):
     """Strict-JSON payload: non-finite floats become None (json.dump's
     Infinity/NaN literals break jq / JSON.parse on the CI artifact)."""
@@ -665,6 +744,8 @@ def main() -> None:
     emit(NAME + "_faults", ft)
     ad = run_adaptive_bench()
     emit(NAME + "_adaptive", ad)
+    fm = run_farm_bench()
+    emit(NAME + "_farm", fm)
 
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(JSON_PATH, "w") as f:
@@ -675,7 +756,8 @@ def main() -> None:
                              "routing": rt[0],
                              "messages": ms[0],
                              "faults": ft[0],
-                             "adaptive": ad[0]}), f, indent=2)
+                             "adaptive": ad[0],
+                             "farm": fm[0]}), f, indent=2)
 
     worst_eq = max(r["rel_err"] for r in eq)
     s, v = sw[0], fs[0]
@@ -737,6 +819,13 @@ def main() -> None:
           f"(p999 {ff['sel_p999_us_worst']:.0f} us); crash recovery "
           f"{ff['crash_recovery_us']:.0f} us (engine dev "
           f"{ff['crash_recovery_dev_us']:.1e})")
+    fa = fm[0]
+    print(f"# farm {fa['grid_points']} pts in {fa['chunks']} chunks of "
+          f"{fa['chunk_size']} ({fa['workers']} workers): warm "
+          f"x{fa['speedup_warm']:.2f} vs monolithic "
+          f"({fa['mono_warm_s']:.2f}s -> {fa['farm_warm_s']:.2f}s); "
+          f"dev {fa['dev_farm_vs_mono']:.1e}, "
+          f"{fa['recompiles_after_warmup']} recompiles after warmup")
     print(f"# machine-readable: {os.path.abspath(JSON_PATH)}")
 
 

@@ -1,0 +1,212 @@
+"""Bench trajectory dashboard: gated metrics over the BENCH_*.json
+history.
+
+:mod:`benchmarks.check_bench_regression` compares one fresh bench run
+against the single checked-in ``bench_floors.json`` snapshot — which
+catches a cliff but not a slow slide: three PRs each losing 15% of a
+warm speedup all pass a 20% gate individually.  This tool closes that
+gap by looking at the *history*:
+
+* ``--snapshot`` archives the current ``experiments/bench/BENCH_*.json``
+  files into ``experiments/bench/history/`` stamped with their mtime
+  (CI calls this after every bench run, so history accrues one snapshot
+  per push; locally it is opt-in).
+* The default run scans every snapshot plus the current files, builds a
+  per-gated-metric trajectory table (one row per metric from
+  ``bench_floors.json``, one column per snapshot), and writes it as
+  markdown (``experiments/bench/TRAJECTORY.md``) and json
+  (``TRAJECTORY.json``).
+* Any gated metric whose **latest** value is worse than its
+  **best-ever** by more than 20% (respecting the floor/ceiling
+  direction) is flagged — and fails the run under ``--strict``.
+
+Quick-mode and full-mode runs measure different envelopes (smaller
+grids amortize compiles differently), so best-ever is computed only
+over snapshots with the same ``quick`` flag as the latest run.
+
+  PYTHONPATH=src python -m benchmarks.bench_trajectory [--snapshot]
+      [--strict] [--bench-dir DIR] [--floors FILE]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import time
+from typing import Dict, List, Optional, Tuple
+
+from .common import OUT_DIR
+
+SLIDE = 0.20          # worse-than-best-ever tolerance
+HISTORY_SUBDIR = "history"
+FLOORS_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "bench_floors.json")
+
+
+def _history_dir(bench_dir: str) -> str:
+    return os.path.join(bench_dir, HISTORY_SUBDIR)
+
+
+def snapshot(bench_dir: str = OUT_DIR) -> List[str]:
+    """Archive current BENCH_*.json files into the history dir, stamped
+    with their mtime (idempotent: an existing stamp is not rewritten)."""
+    hdir = _history_dir(bench_dir)
+    os.makedirs(hdir, exist_ok=True)
+    copied = []
+    for path in sorted(glob.glob(os.path.join(bench_dir,
+                                              "BENCH_*.json"))):
+        base = os.path.splitext(os.path.basename(path))[0]
+        stamp = time.strftime("%Y%m%d-%H%M%S",
+                              time.localtime(os.path.getmtime(path)))
+        dst = os.path.join(hdir, f"{base}_{stamp}.json")
+        if not os.path.exists(dst):
+            shutil.copyfile(path, dst)
+            copied.append(dst)
+    return copied
+
+
+def _load(path: str) -> Optional[dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def collect(bench_dir: str = OUT_DIR) -> List[Tuple[str, dict]]:
+    """(label, bench-dict) pairs, history first, current files last —
+    i.e. chronological, so the last entry is the latest measurement."""
+    entries = []
+    for path in sorted(glob.glob(os.path.join(_history_dir(bench_dir),
+                                              "BENCH_*.json"))):
+        d = _load(path)
+        if d is not None:
+            label = os.path.splitext(os.path.basename(path))[0]
+            entries.append((label.replace("BENCH_", ""), d))
+    for path in sorted(glob.glob(os.path.join(bench_dir,
+                                              "BENCH_*.json"))):
+        d = _load(path)
+        if d is not None:
+            entries.append(("current", d))
+    return entries
+
+
+def trajectories(entries: List[Tuple[str, dict]],
+                 floors: dict) -> List[dict]:
+    """One record per gated metric: its full value trajectory, the
+    best-ever among like-mode snapshots, the latest value, and whether
+    the latest slid >20% off the best."""
+    out = []
+    for section, rules in floors.items():
+        for field, spec in rules.items():
+            kind = spec["kind"]
+            traj = []
+            for label, bench in entries:
+                row = bench.get(section)
+                val = row.get(field) if isinstance(row, dict) else None
+                if isinstance(val, bool) or \
+                        not isinstance(val, (int, float)):
+                    val = None
+                traj.append({"run": label, "value": val,
+                             "quick": bool(bench.get("quick"))})
+            seen = [t for t in traj if t["value"] is not None]
+            rec = {"section": section, "field": field, "kind": kind,
+                   "trajectory": traj, "latest": None, "best": None,
+                   "flagged": False}
+            if seen:
+                latest = seen[-1]
+                like = [t["value"] for t in seen
+                        if t["quick"] == latest["quick"]]
+                best = max(like) if kind == "floor" else min(like)
+                rec["latest"] = latest["value"]
+                rec["best"] = best
+                if kind == "floor":
+                    rec["flagged"] = latest["value"] < \
+                        best * (1.0 - SLIDE)
+                else:
+                    limit = best * (1.0 + SLIDE) if best > 0 \
+                        else 1e-12
+                    rec["flagged"] = latest["value"] > limit
+            out.append(rec)
+    return out
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "—"
+    return f"{v:.4g}"
+
+
+def render_markdown(recs: List[dict],
+                    entries: List[Tuple[str, dict]]) -> str:
+    labels = [label for label, _ in entries]
+    lines = ["# Bench trajectory (gated metrics)", "",
+             f"Snapshots, oldest → latest: {', '.join(labels)}", "",
+             "| metric | kind | " + " | ".join(labels)
+             + " | best | slide |",
+             "|---|---|" + "---|" * (len(labels) + 2)]
+    for r in recs:
+        vals = " | ".join(_fmt(t["value"]) for t in r["trajectory"])
+        flag = "**FLAGGED**" if r["flagged"] else "ok"
+        lines.append(f"| {r['section']}.{r['field']} | {r['kind']} | "
+                     f"{vals} | {_fmt(r['best'])} | {flag} |")
+    lines.append("")
+    lines.append(f"Flag rule: latest worse than best-ever (same "
+                 f"quick/full mode) by more than {SLIDE:.0%}.")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.bench_trajectory",
+        description="Per-metric trajectory over BENCH_*.json history.")
+    ap.add_argument("--bench-dir", default=OUT_DIR)
+    ap.add_argument("--floors", default=FLOORS_PATH)
+    ap.add_argument("--snapshot", action="store_true",
+                    help="archive current BENCH files into history/ "
+                         "before scanning")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when any gated metric slid >20% off "
+                         "its best-ever")
+    args = ap.parse_args(argv)
+
+    if args.snapshot:
+        for path in snapshot(args.bench_dir):
+            print(f"archived {path}")
+
+    with open(args.floors) as f:
+        floors = json.load(f)
+    entries = collect(args.bench_dir)
+    if not entries:
+        print(f"no BENCH_*.json found under {args.bench_dir}")
+        return 0
+    recs = trajectories(entries, floors)
+
+    md = render_markdown(recs, entries)
+    md_path = os.path.join(args.bench_dir, "TRAJECTORY.md")
+    json_path = os.path.join(args.bench_dir, "TRAJECTORY.json")
+    with open(md_path, "w") as f:
+        f.write(md)
+    with open(json_path, "w") as f:
+        json.dump({"snapshots": [label for label, _ in entries],
+                   "metrics": recs}, f, indent=2)
+    print(md)
+    print(f"wrote {md_path} and {json_path}")
+
+    flagged = [r for r in recs if r["flagged"]]
+    for r in flagged:
+        print(f"FLAGGED {r['section']}.{r['field']}: latest "
+              f"{_fmt(r['latest'])} vs best-ever {_fmt(r['best'])} "
+              f"({r['kind']})")
+    if flagged and args.strict:
+        print(f"\ntrajectory check FAILED ({len(flagged)} metric(s) "
+              f"slid >{SLIDE:.0%} off best-ever)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main(sys.argv[1:]))

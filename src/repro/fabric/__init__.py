@@ -50,7 +50,8 @@
              pause) / pod-scale cross-pod incast, shuffle and PFC-storm
              bundles + fabric_grid / mixed_fleet_grid / qos_mixed_grid
              / pod_incast_grid / pod_storm_grid for building scenario
-             grids
+             grids; the named-grid registry (`GRIDS` / `build_grid`)
+             and `chunk_plan` behind the sweep farm
 - sweep:     vectorized receiver-datapath grid (jax.vmap + lax.scan over
              stacked single-host fluid state; numpy reference backend)
 - vector:    vectorized *fabric* grid — the whole multi-host tick body
@@ -68,6 +69,15 @@
              adaptive time-stepping machinery (quiet-stride predicate,
              closed-form macro-tick advance) — see "Engine
              performance" below
+- farm:      sweep farm (`run_farm`, `python -m repro.fabric.farm`):
+             any scenario grid executed as fixed-shape chunks across
+             local jax devices and/or a multiprocess worker pool, with
+             versioned run artifacts and resume — see "Running sweeps
+             at farm scale" below
+- artifacts: versioned run-artifact layer behind the farm
+             (`experiments/runs/<run_id>/`: manifest + per-chunk
+             result shards + merged table; atomic writes, resume
+             contract)
 - _scan:     shared lax.scan compile-cost machinery (unroll autotune,
              donated carries, persistent XLA compilation cache)
 
@@ -130,12 +140,14 @@ sweeps, ``run_fabric_sweep(..., incidence="auto")`` (default) picks the
 dense one-hot program for 2-level grids and the segmented-incidence
 ("sparse") program whenever a super-spine tier is present.  The sparse
 program freezes routes as incidence structure, so it supports static
-ECMP plus failure/flap windows — dynamic routing modes, the CC zoo,
-the message layer, FaultConfig injection and adaptive dt stay
-dense-only (it rejects them with clear errors); within that envelope
-it is bit-equal to the dense engine on 2-level grids and matches the
-scalar driver like any other engine (held by
-``tests/test_topology_pods.py``).  Its per-tick cost is linear in
+ECMP plus failure/flap windows *and* the full CC zoo (per-flow
+DCQCN / Timely / HPCC — per-flow state plus segment-summed per-port
+telemetry, bit-equal to the dense formulation on 2-tier grids, held by
+``tests/test_sparse_cc.py``); dynamic routing modes, the message
+layer, FaultConfig injection and adaptive dt stay dense-only (it
+rejects them with clear errors).  Within that envelope it is bit-equal
+to the dense engine on 2-level grids and matches the scalar driver
+like any other engine (held by ``tests/test_topology_pods.py``).  Its per-tick cost is linear in
 flows + ports instead of the dense flows x ports — the bench ``scale``
 section gates the measured growth exponent (~1.2 at 64 -> 256 hosts)
 below the dense engine's 2.0.
@@ -195,6 +207,55 @@ wall clock moves while the census is flat it is runtime);
 honestly (on CPU the ``lax.while_loop`` per-iteration overhead can eat
 the iteration savings; the win is the iteration count, which is what
 transfers to accelerators).
+
+Running sweeps at farm scale
+----------------------------
+One ``run_fabric_sweep`` call is one process, one device, one XLA
+program over the whole grid — the right shape up to a few hundred
+points, and exactly wrong beyond that.  ``repro.fabric.farm``
+(``run_farm(...)`` / ``python -m repro.fabric.farm --grid pod_storm
+--workers N``) runs any grid — a registry name from
+``scenarios.GRIDS``, a picklable ``GridSpec``, or a raw scenario list —
+as **fixed-shape chunks**:
+
+- **Chunking + padding semantics.**  ``scenarios.chunk_plan`` cuts the
+  grid into full chunks of ``chunk_size`` plus one remainder padded up
+  to the next power of two (at most two program shapes per run, so at
+  most two compiles after the caches are cold).  Padding replicates a
+  real scenario; vmap lanes are independent and every result is
+  per-point, so padded lanes are sliced off without perturbing real
+  points.  Because capability flags (CC/messages/faults/…) and ring
+  lengths are any-over-points, a chunk of a heterogeneous grid would
+  naturally trace a *different* program — the farm prevents that by
+  passing the full grid's **structure envelope**
+  (``FabricSweepParams.envelope()``) into every chunk's packing, which
+  floors flags and ring sizes to the monolithic values.  Net effect,
+  gated in the bench ``farm`` section and ``tests/test_farm.py``: at
+  fixed dt, chunked results are **bit-identical** to the monolithic
+  program (``adaptive_dt`` is the one exception — its macro-stride is
+  a grid-wide lockstep reduction, so chunk membership legitimately
+  changes stride schedules; the farm therefore always runs fixed dt).
+- **Dispatch.**  ``workers <= 1`` stays in-process: a one-deep
+  prefetch thread packs chunk k+1 while chunk k computes, and chunks
+  round-robin across local jax devices when
+  ``repro.parallel.compat.farm_dispatch_probe()`` allows (on jax < 0.6
+  or single-device hosts it *warns and degrades* to one device).
+  ``workers > 1`` fans chunks to a ``spawn`` pool; workers rebuild the
+  grid from the registry name (scenario closures don't pickle), share
+  the on-disk XLA cache via ``JAX_COMPILATION_CACHE_DIR``, and write
+  their own shards.
+- **Artifact layout + resume contract.**  Each run writes
+  ``experiments/runs/<run_id>/``: ``manifest.json`` (grid spec, chunk
+  plan, structure envelope + key, config hash, git SHA, engine,
+  per-chunk wall/compile timings, status), ``chunk_NNNN.npz`` shards
+  (real points only, written atomically), and the merged ``result.npz``
+  table in input order.  ``run_farm(..., run_id=..., resume=True)``
+  re-reads the manifest, verifies the grid fingerprint, and executes
+  only chunks whose shards are missing or unreadable — kill a run at
+  50% and the restart completes the other half (CI smoke-tests
+  exactly this).  ``benchmarks/bench_trajectory.py`` reads the
+  ``BENCH_*.json`` history the same artifacts-first way for the
+  per-metric trajectory dashboard.
 
 The routing layer
 -----------------
@@ -390,12 +451,14 @@ within the histogram bound).
 from .cc import CC_ALGOS, CcConfig, HpccRate, TimelyRate, make_controller
 from .fabric import (FabricConfig, FabricResult, Flow, burst_done_bytes,
                      run_fabric)
+from .farm import GridSpec, run_farm
 from .faults import FaultConfig, FlowRecovery, has_pause_cycle
 from .hosts import HostFeedback, ReceiverHost, SenderHost
 from .messages import (LogHistogram, MessageConfig, MessageTracker,
                        exact_percentile, percentile_from_counts)
 from .routing import ROUTING_MODES, RoutingConfig
-from .scenarios import (Scenario, all_to_all, fabric_grid, incast,
+from .scenarios import (GRIDS, Scenario, all_to_all, build_grid,
+                        chunk_plan, fabric_grid, incast, incast_grid,
                         link_failure_incast, lossy_incast,
                         lossy_incast_grid, message_incast,
                         message_sweep_grid, mixed_fleet,
@@ -413,13 +476,15 @@ from .vector import FabricSweepParams, run_fabric_sweep
 __all__ = [
     "CC_ALGOS", "CcConfig", "FabricConfig", "FabricResult",
     "FabricSweepParams", "FaultConfig", "Flow", "FlowRecovery",
+    "GRIDS", "GridSpec",
     "HostFeedback", "HpccRate", "Link",
     "LogHistogram", "MessageConfig", "MessageTracker", "OutputPort",
     "ROUTING_MODES", "ReceiverHost", "RoutingConfig", "Scenario",
     "SenderHost", "Switch", "SwitchConfig", "SweepParams", "TimelyRate",
-    "Topology", "all_to_all", "burst_done_bytes", "clos",
+    "Topology", "all_to_all", "build_grid", "burst_done_bytes",
+    "chunk_plan", "clos",
     "exact_percentile", "fabric_grid", "grid_configs",
-    "has_pause_cycle", "incast",
+    "has_pause_cycle", "incast", "incast_grid",
     "incast_fabric", "jet_testbed", "link_failure_incast",
     "lossy_incast", "lossy_incast_grid",
     "make_controller", "make_pod_clos", "message_incast",
@@ -427,6 +492,6 @@ __all__ = [
     "olap_shuffle", "percentile_from_counts", "pod_incast",
     "pod_incast_grid", "pod_pfc_storm", "pod_shuffle", "pod_storm_grid",
     "qos_mixed_grid", "qos_mixed_storage",
-    "routing_grid", "run_fabric", "run_fabric_sweep", "run_sweep",
-    "single_pair", "storage_mix",
+    "routing_grid", "run_fabric", "run_fabric_sweep", "run_farm",
+    "run_sweep", "single_pair", "storage_mix",
 ]

@@ -562,3 +562,108 @@ def pod_storm_grid(buffer_kb: Sequence[float] = (32.0, 64.0, 128.0),
     return fabric_grid(
         lambda buffer_kb: pod_pfc_storm(buffer_kb=buffer_kb, **kw),
         buffer_kb=list(buffer_kb))
+
+
+# --------------------------------------------------------------------------- #
+# Farm layer: named grids + chunk plans
+# --------------------------------------------------------------------------- #
+def incast_grid(mode: Sequence[str] = ("jet", "ddio"),
+                pfc: Sequence[bool] = (False, True),
+                burst_mb: Sequence[float] = tuple(
+                    0.25 * (i + 1) for i in range(16)),
+                n_senders: int = 4,
+                sim_time_s: float = 0.002,
+                ) -> Tuple[List[Scenario], List[dict]]:
+    """Receiver mode x PFC x burst-size grid over :func:`incast` — the
+    farm's canonical 64-point 2-tier workload (burst size is a pure
+    numeric axis, so chunks of this grid trivially share structure)."""
+    return fabric_grid(
+        lambda mode, pfc, burst_mb: incast(
+            n_senders=n_senders, mode=mode, pfc=pfc, burst_mb=burst_mb,
+            sim_time_s=sim_time_s),
+        mode=list(mode), pfc=list(pfc), burst_mb=list(burst_mb))
+
+
+#: Named grids the farm can rebuild by name inside worker processes
+#: (Scenario objects embed receiver-config closures and do not pickle;
+#: workers re-materialize the grid from this registry instead).  Each
+#: entry maps name -> (builder, quick-kwargs): the builder returns
+#: ``(scenarios, point-dicts)``; the quick kwargs shrink the grid for
+#: smoke runs (``build_grid(name, quick=True)``).
+GRIDS: Dict[str, Tuple[Callable[..., Tuple[List[Scenario], List[dict]]],
+                       dict]] = {
+    "incast": (incast_grid,
+               dict(burst_mb=(0.25, 0.5, 1.0, 2.0), n_senders=4,
+                    sim_time_s=0.001)),
+    "mixed_fleet": (mixed_fleet_grid,
+                    dict(pool_mb=(12.0, 4.0), burst_mb=(1.0,),
+                         sim_time_s=0.002)),
+    "qos_mixed": (qos_mixed_grid, dict(sim_time_s=0.001)),
+    "routing": (routing_grid,
+                dict(modes=("static_ecmp", "adaptive"),
+                     sim_time_s=0.001)),
+    "message_sweep": (message_sweep_grid,
+                      dict(msg_kb=(64.0,), window=(1, 16),
+                           verb=("write",), algo=("dcqcn", "timely"),
+                           sim_time_s=0.001)),
+    "lossy_incast": (lossy_incast_grid,
+                     dict(loss_rate=(0.01,), sim_time_s=0.001)),
+    "pod_incast": (pod_incast_grid, dict(sim_time_s=0.002)),
+    "pod_storm": (pod_storm_grid,
+                  dict(buffer_kb=(32.0, 64.0), sim_time_s=0.002)),
+}
+
+
+def build_grid(name: str, quick: bool = False,
+               **overrides) -> Tuple[List[Scenario], List[dict]]:
+    """Materialize a named grid from :data:`GRIDS`.
+
+    ``quick=True`` applies the registry's shrunken axes (smoke-test
+    size); explicit ``overrides`` win over both defaults and quick
+    kwargs.  This is the farm's worker-side entry point: a
+    ``(name, quick, overrides)`` triple is picklable where a scenario
+    list is not, and rebuilding is deterministic, so every worker sees
+    the identical grid."""
+    if name not in GRIDS:
+        raise ValueError(f"unknown grid {name!r}; "
+                         f"pick one of {sorted(GRIDS)}")
+    builder, quick_kw = GRIDS[name]
+    kw = dict(quick_kw) if quick else {}
+    kw.update(overrides)
+    return builder(**kw)
+
+
+def chunk_plan(n_points: int, chunk_size: int) -> List[dict]:
+    """Split ``n_points`` grid points into fixed-shape chunks.
+
+    Full chunks use exactly ``chunk_size`` points; the remainder is
+    padded *up* to the next power of two (capped at ``chunk_size``), so
+    a farm run compiles at most two program shapes regardless of grid
+    size — the padding points replicate real scenarios and are sliced
+    off after the run (vmap lanes are independent, so padded lanes
+    cannot perturb real results).
+
+    Returns a list of ``{"chunk": k, "start": i, "stop": j,
+    "padded": m}`` dicts where ``stop - start`` is the real point count
+    and ``padded >= stop - start`` is the dispatch shape.
+    """
+    if chunk_size <= 0:
+        raise ValueError("chunk_size must be positive")
+    if n_points <= 0:
+        raise ValueError("empty grid")
+    plan = []
+    start = 0
+    while start < n_points:
+        stop = min(start + chunk_size, n_points)
+        real = stop - start
+        if real == chunk_size:
+            padded = chunk_size
+        else:
+            padded = 1
+            while padded < real:
+                padded *= 2
+            padded = min(padded, chunk_size)
+        plan.append({"chunk": len(plan), "start": start, "stop": stop,
+                     "padded": padded})
+        start = stop
+    return plan

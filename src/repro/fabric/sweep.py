@@ -91,8 +91,15 @@ class SweepParams:
     dt_us: float
     ring_len: int
 
+    def envelope(self) -> dict:
+        """Structure envelope for chunked execution (see the farm layer):
+        passing this to :meth:`from_configs` on a slice of the grid floors
+        the ring length so every chunk traces the same program shape."""
+        return {"ring_len": self.ring_len}
+
     @classmethod
-    def from_configs(cls, configs: Sequence[SimConfig]) -> "SweepParams":
+    def from_configs(cls, configs: Sequence[SimConfig],
+                     envelope: dict | None = None) -> "SweepParams":
         if not configs:
             raise ValueError("empty sweep grid")
         dt = configs[0].dt_us
@@ -112,6 +119,8 @@ class SweepParams:
             d_b.append(max(1, int(hold / dt)))
             d_s.append(max(1, int(hold * c.straggler_mult / dt)))
         ring = int(max(max(d_b), max(d_s))) + 2
+        if envelope:
+            ring = max(ring, int(envelope.get("ring_len", 0)))
         return cls(vals=vals, d_base=np.array(d_b, np.int32),
                    d_strag=np.array(d_s, np.int32),
                    n_points=len(configs), ticks=ticks, dt_us=dt,
@@ -415,10 +424,16 @@ def _run_jax(sp: SweepParams, unroll="auto") -> Dict[str, np.ndarray]:
 
 
 def run_sweep(configs: Sequence[SimConfig], backend: str = "jax",
-              unroll="auto") -> Dict[str, np.ndarray]:
+              unroll="auto",
+              envelope: dict | None = None) -> Dict[str, np.ndarray]:
     """Advance every config in ``configs`` through the full fluid recurrence
-    at once; returns {metric: array[P]} aligned with the input order."""
-    sp = SweepParams.from_configs(configs)
+    at once; returns {metric: array[P]} aligned with the input order.
+
+    ``envelope`` (from :meth:`SweepParams.envelope` of the full grid) floors
+    the ring length so chunked runs of a larger grid share one compiled
+    program shape; per-point results are unchanged (release slots past a
+    point's own delay are never read)."""
+    sp = SweepParams.from_configs(configs, envelope=envelope)
     if backend == "numpy":
         out = _run_numpy(sp)
     elif backend == "jax":

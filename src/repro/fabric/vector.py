@@ -229,9 +229,27 @@ class FabricSweepParams:
     pause_extra: Optional[np.ndarray] = None
     pausable_extra: Optional[np.ndarray] = None
 
+    def envelope(self) -> dict:
+        """Chunk-boundary envelope of this packing: the capability
+        flags and ring horizons a *sub-grid* packing must be floored at
+        to trace the identical program (pass to
+        :meth:`from_scenarios` via ``envelope=``).  Pack the full grid
+        once, then pack each chunk under the full grid's envelope — the
+        chunks then share one ``structure_key`` (one cached compilation
+        per canonical chunk shape) and reproduce the monolithic run
+        bit-for-bit."""
+        return {"ring_len": self.ring_len, "cnp_ring": self.cnp_ring,
+                "settle_ring": self.settle_ring,
+                "msg_ring": self.msg_ring,
+                "dyn": self.dyn_route or self.pack_fail,
+                "wrr": self.any_wrr, "host_tc": self.host_tc,
+                "cc": self.any_cc, "msg": self.any_msg,
+                "flt": self.any_flt, "flap": self.any_flap}
+
     @classmethod
-    def from_scenarios(cls, scens: Sequence,
-                       sparse: bool = False) -> "FabricSweepParams":
+    def from_scenarios(cls, scens: Sequence, sparse: bool = False,
+                       envelope: Optional[dict] = None
+                       ) -> "FabricSweepParams":
         """Pack a grid of :class:`~repro.fabric.scenarios.Scenario`-likes
         (anything with ``.topology``, ``.flows``, ``.fabric``).
 
@@ -239,8 +257,20 @@ class FabricSweepParams:
         of the dense port x flow one-hots — required for 3-level
         (super-spine) topologies, and the scalable choice for any large
         static fabric.  Sparse packing supports static ECMP plus
-        failure/flap windows; dynamic routing modes, the CC zoo, the
-        message layer and FaultConfig injection stay dense-only."""
+        failure/flap windows and the CC zoo; dynamic routing modes, the
+        message layer and FaultConfig injection stay dense-only.
+
+        ``envelope`` (see :meth:`envelope`) floors the capability flags
+        and ring horizons at the values of a *larger* grid this packing
+        is a chunk of.  The flags (``dyn``/``wrr``/``cc``/``msg``/
+        ``flt``/…) and ring lengths (``ring_len``/``cnp_ring``/…) are
+        normally "any/max over the grid", so slicing a heterogeneous
+        grid would give each chunk a different compiled program *and*
+        different semantics than the monolithic run.  Passing the full
+        grid's envelope forces every chunk onto the monolithic grid's
+        program structure, which is what makes chunked execution
+        bit-identical to the one-program run (the sweep-farm contract,
+        held by ``tests/test_farm.py``)."""
         if not scens:
             raise ValueError("empty fabric sweep grid")
         s0 = scens[0]
@@ -273,20 +303,29 @@ class FabricSweepParams:
         any_msg = any(m is not None for s in scens for m in msg_of(s))
         any_cc = any(c is not None and c.algo != "dcqcn"
                      for s in scens for c in cc_of(s))
+        # chunk-boundary envelope: floor the capability flags at the
+        # enclosing grid's, so every chunk traces the monolithic
+        # program (a chunk with no msg/cc/fault/dynamic points must not
+        # silently compile the cheaper structure)
+        env = dict(envelope or {})
+        dyn = dyn or bool(env.get("dyn"))
+        any_wrr = any_wrr or bool(env.get("wrr"))
+        any_flt = any_flt or bool(env.get("flt"))
+        any_flap = any_flap or bool(env.get("flap"))
+        host_tc = host_tc or bool(env.get("host_tc"))
+        any_msg = any_msg or bool(env.get("msg"))
+        any_cc = any_cc or bool(env.get("cc"))
         pods = any(s.topology.super_spines for s in scens)
         pack_fail = False
         if sparse:
             # sparse incidence freezes routes as structure: static ECMP
-            # only, with failure/flap windows as per-point parameters
+            # only, with failure/flap windows and the CC zoo as
+            # per-point parameters
             if any(s.fabric.routing.is_dynamic for s in scens):
                 raise ValueError(
                     "sparse incidence supports static_ecmp routing only; "
                     "dynamic routing modes need the dense engine "
                     "(2-tier topologies)")
-            if any_cc:
-                raise ValueError("sparse incidence does not support the "
-                                 "CC zoo (timely/hpcc); use the dense "
-                                 "engine")
             if any_msg:
                 raise ValueError("sparse incidence does not support the "
                                  "message layer; use the dense engine")
@@ -745,6 +784,16 @@ class FabricSweepParams:
         # message start-time ring: the window bound keeps outstanding
         # <= W+1; +4 leaves slack for float32 count jitter at boundaries
         Lm = int(pvals["m_win"].max()) + 4 if any_msg else 1
+        # chunk-boundary envelope: ring horizons are grid maxima, so a
+        # chunk's rings are floored at the enclosing grid's to share the
+        # monolithic program's shapes (a longer ring is semantically
+        # inert — unread slots hold zeros)
+        H = max(H, int(env.get("ring_len", 0)))
+        Hc = max(Hc, int(env.get("cnp_ring", 0)))
+        if dyn:
+            Hs = max(Hs, int(env.get("settle_ring", 0)))
+        if any_msg:
+            Lm = max(Lm, int(env.get("msg_ring", 0)))
 
         h = hashlib.sha1()
         extras = [a for a in (upP, dnP, candS, crossF, T1, init_spine,
@@ -1695,13 +1744,17 @@ def _make_step_sparse(xp, ring_set, st, p, dt: float, H: int, dtype,
 
     Supported per-point features: static ECMP, failure/flap windows,
     strict/WRR scheduling, per-TC switch PFC and per-TC host PFC, burst
-    trains, the CNP ring and the full receiver block.  Dynamic routing,
-    the CC zoo, the message layer and FaultConfig injection stay on the
+    trains, the CNP ring, the CC zoo (DCQCN/Timely/HPCC per flow — the
+    delay/INT telemetry walks the route slots in tier order, so the
+    per-leg RTT sum accumulates in the dense engine's leg order and
+    2-tier grids stay bit-equal) and the full receiver block.  Dynamic
+    routing, the message layer and FaultConfig injection stay on the
     dense engine (:meth:`FabricSweepParams.from_scenarios` rejects them
     with a clear error under ``sparse=True``).
     """
     o = opts or {}
     wrr, host_tc = o.get("wrr", False), o.get("host_tc", False)
+    any_cc = o.get("cc", False)
     impl = o.get("impl", "ref") if xp is not np else "ref"
     fail = "fail_at" in p
     flap = "flap_start" in p
@@ -1772,6 +1825,20 @@ def _make_step_sparse(xp, ring_set, st, p, dt: float, H: int, dtype,
         rx_pfc_tc = rx_pfc_en[..., None, :]
         xoffQ = p["xoff"][..., None, :]
         xonQ = p["xon"][..., None, :]
+    if any_cc:
+        # algorithm lanes (CcConfig.code: 0 dcqcn, 1 timely, 2 hpcc)
+        is_dcqcn = p["cc_algo"] == 0
+        timely_m = p["cc_algo"] == 1
+        hpcc_m = p["cc_algo"] == 2
+        inv_brtt = one / p["base_rtt"]              # [.., F]
+        u_floor = f(0.01)
+        # padded per-port budget for the telemetry gathers (column P =
+        # "slot unused", budget 0 -> the leg drops out, as the dense
+        # engine's zero one-hot columns)
+        budget_pad = xp.concatenate(
+            [budget, xp.zeros(budget.shape[:-1] + (1,), budget.dtype)],
+            -1)
+        po_flat = st["port_of"].reshape(S * F)      # [S*F] flat slots
 
     def cut(s, fire):
         """DCQCN on_cnp for flows where ``fire`` holds."""
@@ -1897,18 +1964,21 @@ def _make_step_sparse(xp, ring_set, st, p, dt: float, H: int, dtype,
 
         # ---- 1. senders: DCQCN advance + offer ---------------------------- #
         adv = now > p["start"]
-        adv_dt = xp.where(adv, fdt, zero)
+        # the DCQCN timer machinery only moves DCQCN-lane flows; the CC
+        # block after forwarding writes the timely/hpcc rates instead
+        dadv = (adv & is_dcqcn) if any_cc else adv
+        adv_dt = xp.where(dadv, fdt, zero)
         a_tus = s["a_tus"] + adv_dt
-        a_fire = adv & (a_tus >= p["a_tmr"])
+        a_fire = dadv & (a_tus >= p["a_tmr"])
         s["alpha"] = xp.where(a_fire, (1.0 - p["g"]) * s["alpha"],
                               s["alpha"])
         s["a_tus"] = xp.where(a_fire, zero, a_tus)
         t_us = s["t_us"] + adv_dt
-        byts = xp.where(adv, s["byts"] + s["rc"] * bpt, s["byts"])
-        t_fire = adv & (t_us >= p["r_tmr"])
+        byts = xp.where(dadv, s["byts"] + s["rc"] * bpt, s["byts"])
+        t_fire = dadv & (t_us >= p["r_tmr"])
         s["t_stage"] = s["t_stage"] + t_fire
         s["t_us"] = xp.where(t_fire, zero, t_us)
-        b_fire = adv & (byts >= p["bctr"])
+        b_fire = dadv & (byts >= p["bctr"])
         s["b_stage"] = s["b_stage"] + b_fire
         s["byts"] = xp.where(b_fire, zero, byts)
         fired = t_fire | b_fire
@@ -1941,10 +2011,17 @@ def _make_step_sparse(xp, ring_set, st, p, dt: float, H: int, dtype,
 
         # ---- 2. tier-ordered forwarding (cut-through within the tick) ---- #
         out = None
+        if any_cc:
+            txPp = xp.zeros(budget_pad.shape, budget_pad.dtype)
         for k in range(S):
             if not st["stage_any"][k]:
                 continue
             s, out = drain(s, k, upf)
+            if any_cc:
+                # per-tick drained bytes per port: the txRate leg of the
+                # HPCC-style INT signal (run_fabric's tick_tx)
+                txPp = txPp + seg_sum(out[..., 0, :], st["port_of"][k],
+                                      Ppad)
             if k in (1, 2):
                 # fabric-uplink tx accounting (leaf->spine, spine->ss)
                 txk = seg_sum(out[..., 0, :], st["port_of"][k], Ppad)
@@ -1953,6 +2030,62 @@ def _make_step_sparse(xp, ring_set, st, p, dt: float, H: int, dtype,
                 s = enqueue(s, out, k)
         arr_b = out[..., 0, :]
         arr_m = out[..., 1, :]
+
+        # ---- 2.2 delay/INT telemetry -> CC zoo updates -------------------- #
+        # end-of-forwarding queue state along each flow's route slots,
+        # folded into rtt = base + sum(q/budget) and util = max per-hop
+        # (txRate/B + qlen/(B*T)) — the dense engine's leg loop as
+        # padded gathers at port_of[k].  Slots are visited in tier
+        # order, so on a 2-tier grid the qd accumulation order matches
+        # the dense legs (occ0, occ1, occ2, occ3) term for term.
+        if any_cc:
+            v = s["qm"][..., 0, :, :]
+            qPp = seg_sum(v.reshape(v.shape[:-2] + (S * F,)), po_flat,
+                          Ppad)                               # [.., P+1]
+            qd = zero
+            util = zero
+            for k in range(S):
+                if not st["stage_any"][k]:
+                    continue
+                po_k = st["port_of"][k]                       # [F]
+                q_l = qPp[..., po_k]
+                tx_l = txPp[..., po_k]
+                b_l = budget_pad[..., po_k]
+                ok = b_l > zero
+                qd = qd + xp.where(ok, q_l / xp.maximum(b_l, tiny), zero)
+                u_l = xp.where(ok, (tx_l + q_l * (fdt * inv_brtt))
+                               / xp.maximum(b_l, tiny), zero)
+                util = xp.maximum(util, u_l)
+            rtt = p["base_rtt"] + qd * fdt
+            ctus = s["cc_tus"] + fdt
+            fire = ctus >= p["cc_upd"]
+            s["cc_tus"] = xp.where(fire, zero, ctus)
+            # Timely: smoothed RTT gradient picks the branch
+            ft = fire & timely_m
+            diff = rtt - s["prev_rtt"]
+            rd_new = (1.0 - p["tl_a"]) * s["rtt_diff"] + p["tl_a"] * diff
+            s["prev_rtt"] = xp.where(ft, rtt, s["prev_rtt"])
+            s["rtt_diff"] = xp.where(ft, rd_new, s["rtt_diff"])
+            grad = rd_new * inv_brtt
+            rc = s["rc"]
+            r_tim = xp.where(
+                rtt < p["t_low"], rc + p["tl_add"],
+                xp.where(rtt > p["t_high"],
+                         rc * (one - p["tl_beta"]
+                               * (one - p["t_high"] / rtt)),
+                         xp.where(grad <= zero, rc + p["tl_add"],
+                                  rc * xp.maximum(
+                                      zero, one - p["tl_beta"] * grad))))
+            rc_tim = xp.minimum(p["line"],
+                                xp.maximum(p["cc_minr"], r_tim))
+            # HPCC: drive max per-hop utilization toward eta
+            fh = fire & hpcc_m
+            mult = xp.clip(p["hp_eta"] / xp.maximum(util, u_floor),
+                           half, f(2.0))
+            rc_hp = xp.minimum(p["line"],
+                               xp.maximum(p["cc_minr"],
+                                          rc * mult + p["hp_ai"]))
+            s["rc"] = xp.where(ft, rc_tim, xp.where(fh, rc_hp, rc))
 
         # ---- 3. receivers advance one tick (HostDatapath, stacked) -------- #
         arr_rb = st["recv_onehot"] * arr_b[..., None, :]
@@ -2104,7 +2237,11 @@ def _make_step_sparse(xp, ring_set, st, p, dt: float, H: int, dtype,
         due = xp.take_along_axis(s["cring"], cidx[..., None, None, :],
                                  -3)[..., 0, :, :]
         for j in range(3):
-            s = cut(s, due[..., j, :] > half)
+            fire_c = due[..., j, :] > half
+            if any_cc:
+                # timely/hpcc ignore CNPs (CongestionControl.on_cnp)
+                fire_c = fire_c & is_dcqcn
+            s = cut(s, fire_c)
 
         # ---- 5. per-priority PFC pause propagation ------------------------ #
         q0s = s["qm"][..., 0, :, :]                           # [.., S, F]
@@ -2544,14 +2681,20 @@ def _run_numpy(fsp: FabricSweepParams, dtype=np.float64,
 
 _PROGRAMS: Dict[tuple, Callable] = {}
 _PROGRAMS_MAX = 8          # bound compiled-executable memory, as sweep.py
+# monotonic count of program-cache misses (new traces) in this process:
+# the sweep farm's zero-recompile assertion reads it before/after each
+# chunk — after the first chunk per canonical shape it must not move
+PROGRAM_COMPILES = 0
 
 
 def _jax_program(fsp: FabricSweepParams, unroll: int, impl: str = "ref"):
+    global PROGRAM_COMPILES
     key = (fsp.structure_key, fsp.n_points, fsp.ticks, fsp.ring_len,
            fsp.cnp_ring, fsp.dt_us, unroll, impl)
     fn = _PROGRAMS.get(key)
     if fn is not None:
         return fn
+    PROGRAM_COMPILES += 1
     import jax
     import jax.numpy as jnp
 
@@ -2597,11 +2740,13 @@ def _run_jax(fsp: FabricSweepParams, unroll, impl: str = "ref"):
 
 def _jax_adaptive_program(fsp: FabricSweepParams, cfg: AdaptiveConfig,
                           impl: str):
+    global PROGRAM_COMPILES
     key = ("adaptive", fsp.structure_key, fsp.n_points, fsp.ticks,
            fsp.ring_len, fsp.cnp_ring, fsp.dt_us, impl, cfg.key())
     fn = _PROGRAMS.get(key)
     if fn is not None:
         return fn
+    PROGRAM_COMPILES += 1
     import jax
     import jax.numpy as jnp
 
@@ -2663,7 +2808,9 @@ def run_fabric_sweep(scenarios: Sequence, backend: str = "jax",
                      unroll="auto", adaptive_dt: bool = False,
                      adaptive: Optional[AdaptiveConfig] = None,
                      impl: str = "auto",
-                     incidence: str = "auto") -> Dict[str, np.ndarray]:
+                     incidence: str = "auto",
+                     envelope: Optional[dict] = None
+                     ) -> Dict[str, np.ndarray]:
     """Advance a grid of fabric scenarios through the full multi-host
     recurrence at once; returns ``{metric: array}`` aligned with the input
     order (arrays are ``[G]``, ``[G, F]`` or ``[G, R]`` — flow order is the
@@ -2696,15 +2843,24 @@ def run_fabric_sweep(scenarios: Sequence, backend: str = "jax",
     static grid.  ``"auto"`` (default) selects sparse exactly when the
     topology has a super-spine tier, so existing 2-tier grids keep the
     dense engine bit-for-bit.  Sparse supports static ECMP plus
-    failure/flap windows; dynamic routing, the CC zoo, the message
-    layer, fault injection and ``adaptive_dt`` stay dense-only.
+    failure/flap windows and the CC zoo (per-flow DCQCN/Timely/HPCC);
+    dynamic routing, the message layer, fault injection and
+    ``adaptive_dt`` stay dense-only.
+
+    ``envelope`` is the chunk-boundary contract for the sweep farm
+    (:mod:`repro.fabric.farm`): pass
+    ``FabricSweepParams.from_scenarios(full_grid).envelope()`` when
+    ``scenarios`` is a chunk of a larger grid, so the chunk traces the
+    monolithic grid's program structure and reproduces its results
+    bit-for-bit (see :meth:`FabricSweepParams.envelope`).
     """
     if incidence not in ("auto", "dense", "sparse"):
         raise ValueError(f"unknown incidence {incidence!r}")
     sparse = incidence == "sparse" or (
         incidence == "auto"
         and any(bool(s.topology.super_spines) for s in scenarios))
-    fsp = FabricSweepParams.from_scenarios(scenarios, sparse=sparse)
+    fsp = FabricSweepParams.from_scenarios(scenarios, sparse=sparse,
+                                           envelope=envelope)
     cfg = adaptive if adaptive is not None \
         else (AdaptiveConfig() if adaptive_dt else None)
     if fsp.sparse and cfg is not None:

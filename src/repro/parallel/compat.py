@@ -28,6 +28,30 @@ _HAS_NATIVE = hasattr(jax, "shard_map")
 PARTIAL_MANUAL_SAFE = _HAS_NATIVE
 
 
+def farm_dispatch_probe(min_devices: int = 2):
+    """Can the sweep farm shard chunks across local jax devices?
+
+    Returns ``(ok, reason)``.  Device dispatch needs (a) more than one
+    local device to shard over and (b) the native ``jax.shard_map``
+    surface — the legacy experimental API (jax < 0.6) aborts the process
+    on the partial-manual scan pattern the farm uses (see
+    :data:`PARTIAL_MANUAL_SAFE`), so on legacy jax the farm must degrade
+    to single-device chunked execution with a warning, never crash.
+    ``reason`` is human-readable and ends up in the run manifest.
+    """
+    n_dev = len(jax.devices())
+    if n_dev < min_devices:
+        return False, (f"only {n_dev} local jax device(s) "
+                       f"(need >= {min_devices}); chunks run on one "
+                       "device")
+    if not _HAS_NATIVE:
+        return False, (f"legacy jax {jax.__version__} < 0.6: native "
+                       "shard_map missing and the experimental API is "
+                       "not partial-manual safe; chunks run on one "
+                       "device")
+    return True, f"{n_dev} local devices, native shard_map"
+
+
 def shard_map(f, *, mesh, in_specs, out_specs,
               check_vma: Optional[bool] = None,
               axis_names: Optional[Set[str]] = None):
